@@ -1,0 +1,125 @@
+"""Shared benchmark plumbing: train-once-and-cache a tiny LM, PPL eval.
+
+The paper's tables use pretrained Qwen/LLaMA checkpoints; offline we
+substitute a small llama-family LM trained in-repo on the synthetic
+bigram language (DESIGN.md §8).  The trained checkpoint is cached under
+reports/bench_cache so repeated benchmark runs skip the ~2-minute
+training.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.core import run_calibration
+from repro.data.synthetic import DataConfig, SyntheticLM, calibration_batches
+from repro.dist import checkpoint as ckpt
+from repro.models.registry import build_model
+from repro.train.trainer import TrainConfig, make_train_step, cross_entropy
+
+CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "reports",
+                         "bench_cache")
+TRAIN_STEPS = 400
+SEQ = 64
+BATCH = 16
+
+
+def bench_model():
+    cfg = ARCHS["llama3-8b"].tiny()
+    return cfg, build_model(cfg)
+
+
+def bench_data(cfg):
+    return SyntheticLM(DataConfig(vocab_size=cfg.vocab_size))
+
+
+def trained_params(verbose: bool = True, outliers: bool = True):
+    """Train (or load cached) the benchmark LM.
+
+    ``outliers=True`` applies the output-invariant outlier injection —
+    the activation regime the paper's method targets (see
+    :func:`inject_outliers`)."""
+    cfg, model = bench_model()
+    data = bench_data(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    step = ckpt.latest_step(CACHE_DIR)
+    if step == TRAIN_STEPS:
+        restored = ckpt.restore(CACHE_DIR, step, {"params": params})
+        out = restored["params"]
+        if outliers:
+            out = inject_outliers(out)
+        return cfg, model, out, data
+    train_step, opt = make_train_step(
+        model, TrainConfig(lr=3e-3, warmup=30, total_steps=TRAIN_STEPS))
+    train_step = jax.jit(train_step)
+    opt_state = opt.init(params)
+    for s in range(TRAIN_STEPS):
+        batch = {k: jnp.asarray(v)
+                 for k, v in data.batch(s, BATCH, SEQ).items()}
+        params, opt_state, metrics = train_step(params, opt_state, batch)
+        if verbose and s % 100 == 0:
+            print(f"  train step {s}: loss {float(metrics['loss']):.3f}",
+                  flush=True)
+    ckpt.save(CACHE_DIR, TRAIN_STEPS, {"params": params})
+    if outliers:
+        params = inject_outliers(params)
+    return cfg, model, params, data
+
+
+def inject_outliers(params, key=None, n_channels: int = 8,
+                    magnitude: float = 12.0):
+    """Create activation-outlier channels, *exactly* output-invariant.
+
+    Real LLMs develop a few dominant residual-stream channels (the paper's
+    Theorem-1 assumption (i); also the premise of AWQ/SmoothQuant).  A
+    tiny freshly-trained LM has none, which mutes the difference between
+    scale-search methods.  This transform scales ``n_channels`` entries of
+    every block's norm weights by ``magnitude`` and divides the matching
+    *rows* of the consuming projections (wq/wk/wv, w_gate/w_up) by the
+    same factor: the float function is unchanged (the norm output feeds
+    only those projections), but the activation statistics now have
+    dominant channels — the regime the paper targets.  Channel indices are
+    fixed across layers (persistent channels, as in real models).
+    """
+    idx = np.arange(n_channels) * 7 % params["blocks"]["attn_norm"].shape[-1]
+    scale = jnp.ones(params["blocks"]["attn_norm"].shape[-1])
+    scale = scale.at[idx].set(magnitude)
+    p = jax.tree_util.tree_map(lambda x: x, params)  # shallow copy
+    blocks = dict(p["blocks"])
+    blocks["attn_norm"] = blocks["attn_norm"] * scale
+    blocks["mlp_norm"] = blocks["mlp_norm"] * scale
+    inv = (1.0 / scale)[:, None]
+    for w in ("wq", "wk", "wv", "w_gate", "w_up"):
+        blocks[w] = blocks[w] * inv[None]
+    p["blocks"] = blocks
+    return p
+
+
+_EVAL_CACHE = {}
+
+
+def eval_ppl(model, params, data, n_seqs: int = 24, seq: int = SEQ,
+             offset: int = 20_000_000) -> float:
+    """Perplexity on held-out synthetic sequences (disjoint index range)."""
+    toks = np.stack([data.sequence(offset + i, seq) for i in range(n_seqs)])
+    fwd = jax.jit(lambda p, t: model.forward(p, {"tokens": t})[0])
+    total, count = 0.0, 0
+    for i in range(0, n_seqs, 8):
+        t = jnp.asarray(toks[i:i + 8])
+        logits = fwd(params, t)
+        ce = cross_entropy(logits[:, :-1], t[:, 1:])
+        total += float(ce) * (t.shape[0] * (seq - 1))
+        count += t.shape[0] * (seq - 1)
+    return float(np.exp(total / count))
+
+
+def calib_stats(model, params, data, n_samples: int = 16,
+                biased: bool = False, seed_offset: int = 10_000_000):
+    batches = calibration_batches(data, n_samples, SEQ, biased=biased,
+                                  seed_offset=seed_offset)
+    batches = [{k: jnp.asarray(v) for k, v in b.items()} for b in batches]
+    return run_calibration(model.forward, params, batches)

@@ -1,0 +1,59 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels run in interpret mode (Python
+emulation — wall-time is meaningless for TPU), so the timed comparison
+here is the *reference path* (what CPU serving would use) plus an
+HBM-traffic model of the kernel's advantage on the TPU target:
+the fused quant-error kernel reads W once per candidate instead of
+materializing a fake-quantized copy (2x traffic + extra write), and the
+W4A16 matmul streams 4-bit weights (4.4x fewer weight bytes than bf16).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import QuantSpec, quantize_groupwise
+from repro.core.methods import DEFAULT_ALPHA_GRID, candidate_scale
+from repro.kernels import ref
+from repro.kernels.ops import quant_error_batch
+
+
+def _time(fn, *args, iters=10):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6  # us
+
+
+def run(emit):
+    k, n, m = 2048, 2048, 256
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    w = jax.random.normal(ks[0], (k, n))
+    x = jax.random.normal(ks[1], (m, k), jnp.bfloat16)
+    spec = QuantSpec(bits=4, group_size=128)
+    qt = quantize_groupwise(w, spec, pack=True)
+
+    mm_ref = jax.jit(lambda xx: ref.quant_matmul_ref(xx, qt))
+    us = _time(mm_ref, x)
+    emit("kernel/quant_matmul_ref_cpu", us, f"{m}x{k}x{n}")
+    # HBM traffic model on TPU target (per call, bytes)
+    bf16_bytes = k * n * 2
+    int4_bytes = k * n // 2 + qt.scale.size * 8
+    emit("kernel/quant_matmul_weight_bytes_ratio", None,
+         round(bf16_bytes / int4_bytes, 2))
+
+    a_stat = jnp.abs(jax.random.normal(ks[2], (k,))) + 0.1
+    scales = jnp.stack([candidate_scale(a_stat, a)
+                        for a in DEFAULT_ALPHA_GRID])
+    msq = a_stat ** 2
+    qe = jax.jit(lambda: quant_error_batch(w, scales, msq, spec))
+    us = _time(lambda: qe())
+    emit("kernel/quant_error_batch_cpu", us, f"{len(DEFAULT_ALPHA_GRID)}cand")
+    naive_traffic = len(DEFAULT_ALPHA_GRID) * (3 * k * n * 4)
+    fused_traffic = len(DEFAULT_ALPHA_GRID) * (k * n * 4)
+    emit("kernel/quant_error_traffic_ratio", None,
+         round(naive_traffic / fused_traffic, 2))

@@ -1,0 +1,68 @@
+"""Emit the EXPERIMENTS.md dry-run + roofline tables from the records.
+
+    PYTHONPATH=src python -m benchmarks.report_md [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import ARCHS, SHAPE_CELLS
+
+from .roofline import (REPORT_DIR, full_table, load_records, model_flops,
+                       param_count)
+
+
+def dryrun_table(mesh: str) -> str:
+    rows = ["| arch | cell | status | compile_s | args GiB/dev | temp GiB/dev "
+            "| HLO GFLOP/dev | coll MB/dev |",
+            "|---|---|---|---|---|---|---|---|"]
+    recs = load_records(mesh)
+    skipped = []
+    for (arch, cell), r in sorted(recs.items()):
+        if r["status"] == "skipped":
+            skipped.append(f"{arch} × {cell}")
+            continue
+        mem = r.get("memory", {})
+        rows.append(
+            f"| {arch} | {cell} | {r['status']} | {r.get('compile_s','-')} | "
+            f"{(mem.get('argument_bytes') or 0)/2**30:.2f} | "
+            f"{(mem.get('temp_bytes') or 0)/2**30:.2f} | "
+            f"{r.get('cost',{}).get('flops',0)/1e9:.0f} | "
+            f"{r.get('collectives',{}).get('total',0)/2**20:.0f} |")
+    out = "\n".join(rows)
+    if skipped:
+        out += ("\n\nSkipped-by-design (long_500k on full-attention archs, "
+                "DESIGN.md §6): " + ", ".join(skipped))
+    return out
+
+
+def roofline_table(mesh: str = "16x16") -> str:
+    rows = ["| arch | cell | compute_ms | memory_ms | collective_ms | "
+            "dominant | MODEL/HLO | roofline frac |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(full_table(mesh), key=lambda r: (r["arch"], r["cell"])):
+        rows.append(
+            f"| {r['arch']} | {r['cell']} | {r['compute_s']*1e3:.1f} | "
+            f"{r['memory_s']*1e3:.1f} | {r['collective_s']*1e3:.1f} | "
+            f"{r['dominant']} | {r['useful_ratio']:.3f} | "
+            f"{r['roofline_frac']:.4f} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    print("## Dry-run —", args.mesh)
+    print(dryrun_table(args.mesh))
+    print()
+    if args.mesh == "16x16":
+        print("## Roofline —", args.mesh)
+        print(roofline_table(args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,188 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Per (arch × shape) on the single-pod 16x16 mesh:
+  compute term    = HLO_FLOPs / (chips × 197e12)
+  memory term     = HLO_bytes / (chips × 819e9)
+  collective term = collective_bytes / (chips × 50e9)
+
+HLO numbers come from the dry-run's while-loop-corrected cost extraction
+(cost-mode unrolled L1/L2 extrapolation — see launch/dryrun.py).  The
+numbers are *per device* (the compiled module is the per-device SPMD
+program), so terms are per-chip seconds directly.
+
+Analytic add-on (documented): sequential time-scan bodies (hymba's mamba
+scan, xlstm's sLSTM layers) are counted once by XLA regardless of T; we
+add their analytic FLOPs (elementwise-dominated, small next to matmuls).
+
+MODEL_FLOPS: 6·N·D (train, dense), 6·N_active·D (train, MoE),
+2·N(_active)·tokens for serving steps; the ratio MODEL/HLO flags
+remat/dispatch/dequant overheads.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import ARCHS, SHAPE_CELLS
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "reports",
+                          "dryrun")
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+CHIPS = {"16x16": 256, "2x16x16": 512}
+
+
+def param_count(cfg, active_only: bool = False) -> float:
+    """Analytic parameter count (embeddings included once)."""
+    d, L, V = cfg.d_model, cfg.n_layers, cfg.vocab_size
+    hd = cfg.head_dim_
+    attn = d * hd * (cfg.n_heads * 2 + cfg.n_kv_heads * 2)
+    if cfg.family == "ssm":
+        d_in = cfg.ssm_expand * d
+        per_layer = d * 2 * d_in + 3 * d_in * d_in + d_in * d  # mLSTM
+    else:
+        per_layer = attn
+        if cfg.d_ff:
+            per_layer += 3 * d * cfg.d_ff if cfg.family != "audio" \
+                else 2 * d * cfg.d_ff
+    if cfg.family == "moe":
+        routed = 3 * d * cfg.d_ff
+        n_act = cfg.experts_per_token
+        experts_total = cfg.n_experts * routed
+        experts_active = n_act * routed
+        shared = 3 * d * cfg.shared_expert_ff if cfg.n_shared_experts else 0
+        per_layer_total = attn + experts_total + shared
+        per_layer_active = attn + experts_active + shared
+        per_layer = per_layer_active if active_only else per_layer_total
+    if cfg.family == "hybrid":
+        d_in = cfg.ssm_expand * d
+        per_layer += 2 * d * d_in + d_in * d  # mamba in/out proj
+    total = L * per_layer + 2 * V * d
+    if cfg.family == "audio":
+        total += cfg.n_encoder_layers * (attn + 2 * d * cfg.d_ff)
+    return float(total)
+
+
+def model_flops(cfg, cell) -> float:
+    n = param_count(cfg, active_only=(cfg.family == "moe"))
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n * tokens
+    tokens = cell.global_batch  # one token per sequence
+    return 2.0 * n * tokens
+
+
+def ssm_scan_addon_flops(cfg, cell, chips: int) -> float:
+    """Analytic per-device FLOPs for sequential time-scans XLA counts once."""
+    if cell.kind == "decode":
+        return 0.0
+    tokens = cell.global_batch * cell.seq_len
+    add = 0.0
+    if cfg.family == "hybrid":  # mamba: ~6 flops per (t, d_inner, state)
+        add += 6.0 * tokens * cfg.ssm_expand * cfg.d_model * cfg.ssm_state \
+            * cfg.n_layers
+    if cfg.family == "ssm" and cfg.slstm_every:
+        n_s = cfg.n_layers // cfg.slstm_every
+        hd = cfg.d_model // cfg.n_heads
+        add += 2.0 * tokens * 4 * cfg.n_heads * hd * hd * n_s
+    return add / chips
+
+
+def load_records(mesh: str = "16x16"):
+    out = {}
+    for f in glob.glob(os.path.join(REPORT_DIR, f"*__{mesh}.json")):
+        r = json.load(open(f))
+        out[(r["arch"], r["cell"])] = r
+    return out
+
+
+def kernel_adjustments(cfg, cell, chips: int) -> dict:
+    """Analytic per-device HBM-byte savings when the Pallas kernels replace
+    the pure-jnp paths (the CPU dry-run lowers the jnp reference paths; on
+    the TPU target the kernels are used instead):
+
+    * flash attention (kernels/flash_attention.py): the jnp chunked path
+      round-trips the (B_loc, H_loc, T, T) f32 score tensor through HBM
+      (one write + one read per pass); the kernel keeps it in VMEM.
+      Train counts 3 passes (fwd + remat-recompute + bwd), prefill 1.
+    * W4A16 dequant matmul (kernels/quant_matmul.py): the jnp path writes
+      + reads a bf16 dequantized copy of every weight per step; the kernel
+      dequantizes in VMEM (serve cells only).
+    """
+    save = {"attn_score_bytes": 0.0, "dequant_bytes": 0.0}
+    dp = 16  # data shards on the single-pod mesh
+    tp = 16
+    if cell.kind in ("train", "prefill") and cfg.family != "ssm":
+        b_loc = max(1, cell.global_batch // dp)
+        h_loc = cfg.n_heads // tp if cfg.n_heads % tp == 0 else cfg.n_heads
+        t_eff = min(cell.seq_len, 2 * cfg.sliding_window)             if cfg.sliding_window else cell.seq_len
+        passes = 3 if cell.kind == "train" else 1
+        layers = cfg.n_layers + cfg.n_encoder_layers
+        save["attn_score_bytes"] = (2 * 4.0 * b_loc * h_loc * cell.seq_len
+                                    * t_eff * layers * passes)
+    if cell.kind in ("prefill", "decode"):
+        n = param_count(cfg, active_only=False)
+        save["dequant_bytes"] = 2 * 2.0 * n / tp
+    return save
+
+
+def roofline_row(r, cfg, cell) -> dict:
+    chips = CHIPS[r["mesh"]]
+    flops = r["cost"]["flops"] + ssm_scan_addon_flops(cfg, cell, chips)
+    byts = r["cost"]["bytes_accessed"]
+    coll = r["collectives"].get("total", 0)
+    t_c = flops / PEAK_FLOPS
+    t_m = byts / HBM_BW
+    t_x = coll / ICI_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])
+    mf = model_flops(cfg, cell) / chips
+    bound = max(t_c, t_m, t_x)
+    adj = kernel_adjustments(cfg, cell, chips)
+    kbytes = max(byts - adj["attn_score_bytes"] - adj["dequant_bytes"],
+                 byts * 0.02)
+    t_mk = kbytes / HBM_BW
+    kbound = max(t_c, t_mk, t_x)
+    return {
+        "arch": r["arch"], "cell": r["cell"],
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom[0],
+        "model_flops_per_chip": mf,
+        "useful_ratio": mf / flops if flops else 0.0,
+        # fraction of roofline: useful work at peak vs the bound term
+        "roofline_frac": (mf / PEAK_FLOPS) / bound if bound else 0.0,
+        # with the Pallas kernels substituted for the jnp reference paths
+        "kernel_memory_s": t_mk,
+        "kernel_frac": (mf / PEAK_FLOPS) / kbound if kbound else 0.0,
+        # decode is weight-bandwidth-bound by nature: fraction of the
+        # *serving bandwidth roofline* (ideal = stream the int4 weights
+        # from HBM once per step) is the meaningful score there
+        "bw_frac": ((param_count(cfg) * 0.5 / 16 / HBM_BW) / kbound
+                    if cell.kind == "decode" and kbound else None),
+        "hbm_gb_per_device": (r["memory"]["argument_bytes"] or 0) / 2 ** 30,
+    }
+
+
+def full_table(mesh: str = "16x16"):
+    rows = []
+    recs = load_records(mesh)
+    for (arch, cell_name), r in sorted(recs.items()):
+        if r["status"] != "ok":
+            continue
+        rows.append(roofline_row(r, ARCHS[arch], SHAPE_CELLS[cell_name]))
+    return rows
+
+
+def run(emit):
+    for row in full_table():
+        tag = f"roofline/{row['arch']}/{row['cell']}"
+        emit(tag + "/compute_ms", None, row["compute_s"] * 1e3)
+        emit(tag + "/memory_ms", None, row["memory_s"] * 1e3)
+        emit(tag + "/collective_ms", None, row["collective_s"] * 1e3)
+        emit(tag + "/dominant", None, row["dominant"])
+        emit(tag + "/roofline_frac", None, round(row["roofline_frac"], 4))

@@ -1,0 +1,29 @@
+"""Benchmark harness — one section per paper table + kernels + roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call empty where the
+measurement is a quality metric rather than a timing).
+"""
+from __future__ import annotations
+
+import sys
+
+
+def emit(name, us_per_call, derived):
+    us = "" if us_per_call is None else f"{us_per_call:.1f}"
+    print(f"{name},{us},{derived}", flush=True)
+
+
+def main() -> None:
+    from . import kernel_bench, roofline, table4_hparams, tables
+
+    print("name,us_per_call,derived")
+    tables.table1(emit)
+    tables.table2(emit)
+    tables.table3(emit)
+    table4_hparams.run(emit)
+    kernel_bench.run(emit)
+    roofline.run(emit)
+
+
+if __name__ == "__main__":
+    main()

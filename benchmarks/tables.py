@@ -1,0 +1,65 @@
+"""Paper-table analog benchmarks (Tables 1-3) on the in-repo trained LM.
+
+Table 1 — PPL at 3-bit: FP / RTN / AWQ / FAQ.
+Table 2 — 3-bit vs 4-bit: the FAQ advantage should shrink at 4 bits.
+Table 3 — calibration-set size/bias robustness: mean/std of PPL over
+          independent biased calibration draws (AWQ vs FAQ).  This is the
+          paper's variance-reduction claim — its strongest effect.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import QuantSpec, quantize_model
+
+from .common import calib_stats, eval_ppl, trained_params
+
+
+def _quantize_eval(model, params, data, stats, method, bits, group=64):
+    t0 = time.time()
+    qp, _ = quantize_model(params, model.quant_site_map(), stats,
+                           method=method,
+                           spec=QuantSpec(bits=bits, group_size=group),
+                           mode="fake")
+    q_s = time.time() - t0
+    return eval_ppl(model, qp, data), q_s
+
+
+def table1(emit):
+    cfg, model, params, data = trained_params()
+    stats = calib_stats(model, params, data, n_samples=16)
+    fp = eval_ppl(model, params, data)
+    emit("table1/fp16_ppl", None, fp)
+    for method in ("rtn", "awq", "faq"):
+        ppl, q_s = _quantize_eval(model, params, data, stats, method, bits=3)
+        emit(f"table1/{method}_3bit_ppl", q_s * 1e6, ppl)
+    return fp
+
+
+def table2(emit):
+    cfg, model, params, data = trained_params()
+    stats = calib_stats(model, params, data, n_samples=16)
+    for bits in (3, 4):
+        for method in ("rtn", "awq", "faq"):
+            ppl, q_s = _quantize_eval(model, params, data, stats, method, bits)
+            emit(f"table2/{method}_{bits}bit_ppl", q_s * 1e6, ppl)
+
+
+def table3(emit, n_draws: int = 6, sizes=(4, 16)):
+    """Biased small calibration sets: FAQ should show lower PPL variance
+    across draws than AWQ (paper Table 3)."""
+    cfg, model, params, data = trained_params()
+    for n in sizes:
+        for method in ("awq", "faq"):
+            ppls = []
+            for draw in range(n_draws):
+                stats = calib_stats(model, params, data, n_samples=n,
+                                    biased=True,
+                                    seed_offset=10_000_000 + draw * 1000)
+                ppl, _ = _quantize_eval(model, params, data, stats, method,
+                                        bits=3)
+                ppls.append(ppl)
+            emit(f"table3/{method}_N{n}_mean_ppl", None, float(np.mean(ppls)))
+            emit(f"table3/{method}_N{n}_std_ppl", None, float(np.std(ppls)))

@@ -1,0 +1,26 @@
+"""Assigned architecture configs (one module per arch) + registry."""
+from .base import (LONG_500K, PREFILL_32K, SHAPE_CELLS, TRAIN_4K,
+                   DECODE_32K, ModelConfig, ShapeCell, cell_applicable)
+
+from .stablelm_12b import CONFIG as STABLELM_12B
+from .llama3_405b import CONFIG as LLAMA3_405B
+from .llama3_8b import CONFIG as LLAMA3_8B
+from .deepseek_coder_33b import CONFIG as DEEPSEEK_CODER_33B
+from .hymba_1_5b import CONFIG as HYMBA_1_5B
+from .whisper_small import CONFIG as WHISPER_SMALL
+from .xlstm_350m import CONFIG as XLSTM_350M
+from .llama4_maverick_400b_a17b import CONFIG as LLAMA4_MAVERICK
+from .qwen2_moe_a2_7b import CONFIG as QWEN2_MOE
+from .qwen2_vl_2b import CONFIG as QWEN2_VL_2B
+
+ARCHS = {
+    c.name: c for c in (
+        STABLELM_12B, LLAMA3_405B, LLAMA3_8B, DEEPSEEK_CODER_33B,
+        HYMBA_1_5B, WHISPER_SMALL, XLSTM_350M, LLAMA4_MAVERICK,
+        QWEN2_MOE, QWEN2_VL_2B,
+    )
+}
+
+__all__ = ["ARCHS", "ModelConfig", "ShapeCell", "SHAPE_CELLS",
+           "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K",
+           "cell_applicable"]

@@ -1,0 +1,50 @@
+"""Calibration pass: collect per-site activation statistics.
+
+FAQ (like AWQ, unlike GPTQ) needs only full-precision activations, so a
+single forward pass over the calibration set yields the statistics for
+*every* block at once — including the future-layer statistics FAQ previews.
+After this pass, quantization of each layer is independent (layer-parallel;
+see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable
+
+import jax
+
+from .stats import merge_stats
+
+
+def run_calibration(apply_fn: Callable, params, batches: Iterable) -> dict:
+    """Run ``apply_fn(params, batch, collect_stats=True)`` over batches.
+
+    ``apply_fn`` must return ``(logits, aux)`` with ``aux["stats"]`` mapping
+    ``site_key -> {"mean_abs": (L, d), "mean_sq": (L, d), "sample": (L, K, d)}``.
+
+    Returns the token-weighted average of the stats across batches.
+    """
+    acc = None
+    acc_tokens = 0.0
+    collect = jax.jit(lambda p, b: apply_fn(p, b, collect_stats=True)[1]["stats"])
+    for batch in batches:
+        stats = jax.device_get(collect(params, batch))
+        tokens = float(_batch_tokens(batch))
+        if acc is None:
+            acc, acc_tokens = stats, tokens
+        else:
+            acc = merge_stats(acc, stats, acc_tokens, tokens)
+            acc_tokens += tokens
+    if acc is None:
+        raise ValueError("empty calibration set")
+    return acc
+
+
+def _batch_tokens(batch) -> int:
+    if isinstance(batch, dict):
+        leaf = batch.get("tokens", next(iter(batch.values())))
+    else:
+        leaf = batch
+    n = 1
+    for s in leaf.shape[:2]:
+        n *= s
+    return n

@@ -1,0 +1,195 @@
+"""RTN / AWQ / FAQ quantization methods.
+
+All three share the group-wise quantizer (:mod:`repro.core.quantizer`);
+they differ only in how the per-input-channel smoothing scale ``s`` is
+chosen:
+
+* RTN  — no smoothing (``s = 1``).
+* AWQ  — ``s = normalize(ā_l ** α)`` with ``ā_l`` the *current layer's*
+  mean-|activation| per channel, α grid-searched to minimize the layer's
+  quantized-output error.
+* FAQ  — identical search, but the statistic is the *future-fused*
+  ``ã_l = γ·ā_l + (1-γ)·mean(ā_{l+1..l+j})`` (window-wise preview,
+  paper Eq. 4-5).  Pre-searched γ=0.85, j=3 by default; a full (γ, j)
+  search is available for the ablation benchmarks (paper Eq. 8).
+
+Loss for the α search (paper Eq. 7): output-MSE of the quantized linear on
+calibration activations.  Two estimators are provided:
+
+* ``"sample"`` — exact MSE on a stored token subsample (AWQ reference
+  behaviour; default for the small-scale reproduction benchmarks).
+* ``"diag"``   — ``Σ E[a_c²]·ΔW_c,·²`` using only per-channel second
+  moments (storage O(d) per site; what the distributed large-model path
+  uses — see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .quantizer import QuantSpec, quant_dequant
+
+DEFAULT_ALPHA_GRID = tuple(float(x) for x in jnp.linspace(0.0, 1.0, 21))
+PRESEARCHED_GAMMA = 0.85   # paper §3.1
+PRESEARCHED_WINDOW = 3     # paper §3.1
+
+
+# ---------------------------------------------------------------------------
+# Scale candidates and search losses
+# ---------------------------------------------------------------------------
+
+def normalize_scale(s: jax.Array) -> jax.Array:
+    """Geometric-mean-normalize a positive per-channel scale vector.
+
+    Keeps the search scale-invariant (multiplying every channel by a
+    constant must not change the quantization) and bounds dynamic range.
+    """
+    s = jnp.clip(s, 1e-4, None)
+    s = s / jnp.exp(jnp.mean(jnp.log(s)))
+    return jnp.clip(s, 1e-3, 1e3)
+
+
+def candidate_scale(a_stat: jax.Array, alpha: jax.Array) -> jax.Array:
+    """AWQ-style smoothing scale ``normalize(ā ** α)``."""
+    return normalize_scale(jnp.power(jnp.clip(a_stat, 1e-6, None), alpha))
+
+
+def quant_error(w: jax.Array, spec: QuantSpec,
+                act_scale: Optional[jax.Array],
+                mean_sq: Optional[jax.Array] = None,
+                sample: Optional[jax.Array] = None) -> jax.Array:
+    """Output-MSE proxy for quantizing ``w`` with smoothing ``act_scale``."""
+    w32 = w.astype(jnp.float32)
+    w_hat = quant_dequant(w32, spec, act_scale=act_scale)
+    dw = w_hat - w32
+    if sample is not None:
+        err = sample.astype(jnp.float32) @ dw
+        return jnp.mean(err * err)
+    assert mean_sq is not None, "need mean_sq for diag loss"
+    return jnp.sum(mean_sq[:, None] * dw * dw) / dw.shape[1]
+
+
+class SearchResult(NamedTuple):
+    act_scale: jax.Array      # (n_in,) chosen smoothing scale (1.0 for RTN)
+    alpha: jax.Array          # () chosen exponent
+    loss: jax.Array           # () loss at the chosen scale
+    rtn_loss: jax.Array       # () loss without smoothing (for reporting)
+
+
+@partial(jax.jit, static_argnames=("spec", "alpha_grid"))
+def search_alpha(w: jax.Array, a_stat: jax.Array, spec: QuantSpec,
+                 alpha_grid: tuple = DEFAULT_ALPHA_GRID,
+                 mean_sq: Optional[jax.Array] = None,
+                 sample: Optional[jax.Array] = None) -> SearchResult:
+    """Grid-search α minimizing the quantized-output error for one site.
+
+    Sequential (``lax.map``) over the grid so peak memory stays at one
+    weight copy regardless of grid size.
+    """
+    grid = jnp.asarray(alpha_grid, dtype=jnp.float32)
+
+    def loss_at(alpha):
+        s = candidate_scale(a_stat, alpha)
+        return quant_error(w, spec, s, mean_sq=mean_sq, sample=sample)
+
+    losses = jax.lax.map(loss_at, grid)
+    idx = jnp.argmin(losses)
+    best_alpha = grid[idx]
+    best_scale = candidate_scale(a_stat, best_alpha)
+    rtn_loss = quant_error(w, spec, None, mean_sq=mean_sq, sample=sample)
+    return SearchResult(act_scale=best_scale, alpha=best_alpha,
+                        loss=losses[idx], rtn_loss=rtn_loss)
+
+
+# ---------------------------------------------------------------------------
+# FAQ: window-wise future preview (paper Eq. 4-5)
+# ---------------------------------------------------------------------------
+
+def window_preview(stats: jax.Array, window: int) -> jax.Array:
+    """``pvw[l] = mean(stats[l+1 .. min(l+window, L-1)])`` along axis 0.
+
+    ``stats`` is (L, d): the same linear site across the L blocks of a
+    stack.  The window clamps at the last block; the last block itself has
+    no future and returns its own statistic (caller fuses with γ, which
+    then degenerates to plain AWQ there — see DESIGN.md §1).
+    """
+    L = stats.shape[0]
+    csum = jnp.concatenate([jnp.zeros_like(stats[:1]), jnp.cumsum(stats, axis=0)], axis=0)
+    l = jnp.arange(L)
+    hi = jnp.minimum(l + window, L - 1)          # inclusive upper index
+    count = (hi - l).astype(stats.dtype)          # 0 for the last block
+    window_sum = csum[hi + 1] - csum[l + 1]
+    safe = jnp.maximum(count, 1.0)[:, None]
+    pvw = window_sum / safe
+    return jnp.where(count[:, None] > 0, pvw, stats)
+
+
+def fuse_stats(stats: jax.Array, gamma: float, window: int) -> jax.Array:
+    """Paper Eq. 5: ``ã = γ·ā + (1-γ)·ā_pvw`` per layer (axis 0 = layer)."""
+    pvw = window_preview(stats, window)
+    return gamma * stats + (1.0 - gamma) * pvw
+
+
+# ---------------------------------------------------------------------------
+# Per-site entry points, vmapped over the layer axis by callers
+# ---------------------------------------------------------------------------
+
+def site_stat_for_method(method: str, mean_abs: jax.Array,
+                         gamma: float = PRESEARCHED_GAMMA,
+                         window: int = PRESEARCHED_WINDOW) -> Optional[jax.Array]:
+    """The (L, d) statistic each method feeds to the α search.
+
+    Returns None for RTN (no smoothing search at all).
+    """
+    if method == "rtn":
+        return None
+    if method == "awq":
+        return mean_abs
+    if method == "faq":
+        return fuse_stats(mean_abs, gamma=gamma, window=window)
+    raise ValueError(f"unknown method {method!r}")
+
+
+def full_search_faq(w_stack: jax.Array, mean_abs: jax.Array, spec: QuantSpec,
+                    gammas=(0.6, 0.7, 0.8, 0.85, 0.9, 0.95),
+                    windows=(1, 2, 3, 4),
+                    alpha_grid: tuple = DEFAULT_ALPHA_GRID,
+                    mean_sq: Optional[jax.Array] = None,
+                    sample: Optional[jax.Array] = None):
+    """Paper Eq. 8: joint (γ, j, α) search, per layer.
+
+    ``w_stack`` (L, n_in, n_out); returns per-layer best
+    (act_scale (L, n_in), gamma (L,), window (L,), alpha (L,), loss (L,)).
+    Python loop over the small (γ, j) grid; α search is jitted per combo.
+    """
+    L = w_stack.shape[0]
+    vsearch = jax.vmap(
+        lambda w, a, msq, smp: search_alpha(w, a, spec, alpha_grid,
+                                            mean_sq=msq, sample=smp))
+    msq = mean_sq if mean_sq is not None else jnp.ones_like(mean_abs)
+    best = None
+    for gamma in gammas:
+        for window in windows:
+            fused = fuse_stats(mean_abs, gamma, window)
+            if sample is not None:
+                res = jax.vmap(lambda w, a, smp: search_alpha(
+                    w, a, spec, alpha_grid, sample=smp))(w_stack, fused, sample)
+            else:
+                res = vsearch(w_stack, fused, msq, None)
+            cand = dict(act_scale=res.act_scale, alpha=res.alpha,
+                        loss=res.loss,
+                        gamma=jnp.full((L,), gamma, jnp.float32),
+                        window=jnp.full((L,), window, jnp.int32))
+            if best is None:
+                best = cand
+            else:
+                take = cand["loss"] < best["loss"]
+                best = {
+                    k: jnp.where(take.reshape((-1,) + (1,) * (v.ndim - 1)),
+                                 cand[k], v)
+                    for k, v in best.items()
+                }
+    return best

@@ -1,0 +1,44 @@
+"""Per-site activation statistics collected during the calibration pass.
+
+Models call :func:`site_stat` on the input activation of every quantizable
+linear site.  Inside a ``lax.scan`` over layers the returned dict is a scan
+output, so per-layer stats come back stacked ``(L, d)`` for free.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Number of token rows kept per site for the exact ("sample") search loss.
+SAMPLE_ROWS = 64
+
+
+def site_stat(x: jax.Array, sample_rows: int = SAMPLE_ROWS) -> dict:
+    """Statistics of one site's input activation ``x`` of shape (..., d).
+
+    mean_abs/mean_sq are per-channel over all leading dims; ``sample`` keeps
+    the first ``sample_rows`` token rows (deterministic) for the exact loss.
+    """
+    d = x.shape[-1]
+    flat = x.reshape(-1, d).astype(jnp.float32)
+    rows = min(sample_rows, flat.shape[0])
+    return {
+        "mean_abs": jnp.mean(jnp.abs(flat), axis=0),
+        "mean_sq": jnp.mean(flat * flat, axis=0),
+        "sample": flat[:rows],
+    }
+
+
+def merge_stats(acc: dict, new: dict, acc_weight: float, new_weight: float) -> dict:
+    """Weighted running merge of two stat pytrees (same structure)."""
+    tot = acc_weight + new_weight
+    wa, wb = acc_weight / tot, new_weight / tot
+
+    def merge_site(a, b):
+        return {
+            "mean_abs": wa * a["mean_abs"] + wb * b["mean_abs"],
+            "mean_sq": wa * a["mean_sq"] + wb * b["mean_sq"],
+            "sample": a["sample"],  # keep the first batch's subsample
+        }
+
+    return {k: merge_site(acc[k], new[k]) for k in acc}

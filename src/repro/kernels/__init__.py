@@ -1,0 +1,3 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU) + jnp oracles."""
+from .ops import quant_error_batch, quant_matmul, quant_matmul_experts
+from .flash_attention import flash_attention_pallas, flash_attention_ref

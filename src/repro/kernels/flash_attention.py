@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: causal flash attention (forward).
+
+Motivation from the roofline iteration log (EXPERIMENTS.md §Perf): after
+the sharding fixes, train/prefill cells are memory-term-bound and the
+dominant bytes are the attention score matrices — a pure-jnp chunked
+attention still round-trips (B, H, Tq, chunk) scores through HBM each
+chunk.  This kernel keeps the running max / denominator / output
+accumulator in VMEM scratch across the K-block loop, so score traffic
+never leaves the chip: HBM bytes drop from O(T²) to O(T·hd).
+
+Layout: q/k/v are (BH, T, hd) — batch and (already-repeated) heads
+flattened by the wrapper.  Grid is (BH, nq, nk) with the K axis innermost
+("arbitrary"); fully-future K blocks are skipped under causal masking via
+pl.when, halving compute for causal runs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            causal: bool, bq: int, bk: int, scale: float):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal: skip blocks strictly in the future of every query in the tile
+    run = True
+    if causal:
+        run = (ik * bk) <= (iq * bq + bq - 1)
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+        if causal:
+            qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, bq: int = 128, bk: int = 128,
+                           interpret: bool = True) -> jax.Array:
+    """q/k/v: (BH, T, hd) with hd <= 128.  Returns (BH, T, hd)."""
+    bh, t, hd = q.shape
+    bq = min(bq, t)
+    bk = min(bk, t)
+    assert t % bq == 0 and t % bk == 0, (t, bq, bk)
+    grid = (bh, t // bq, t // bk)
+    scale = hd ** -0.5
+    return pl.pallas_call(
+        functools.partial(_kernel, causal=causal, bq=bq, bk=bk, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True) -> jax.Array:
+    """Pure-jnp oracle: full masked softmax attention."""
+    bh, t, hd = q.shape
+    s = jnp.einsum("btd,bsd->bts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    if causal:
+        mask = jnp.tril(jnp.ones((t, t), bool))
+        s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bts,bsd->btd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

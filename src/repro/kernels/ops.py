@@ -1,0 +1,86 @@
+"""Jit'd dispatch wrappers around the Pallas kernels.
+
+On TPU the Pallas kernels run compiled; everywhere else (this CPU
+container, the 512-device host dry-run) the pure-jnp reference path is
+used so every caller — serving engine, dry-run, tests — shares one entry
+point.  ``REPRO_KERNEL_MODE`` overrides: "ref" | "interpret" | "tpu".
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizer import QuantizedTensor
+from repro.dist.sharding import active_rule, shard_hint
+from . import ref as ref_ops
+from .quant_error import quant_error_pallas
+from .quant_matmul import quant_matmul_pallas
+
+
+def _mode() -> str:
+    forced = os.environ.get("REPRO_KERNEL_MODE")
+    if forced:
+        return forced
+    return "tpu" if jax.default_backend() == "tpu" else "ref"
+
+
+def quant_matmul(x: jax.Array, qt: QuantizedTensor) -> jax.Array:
+    """``(x / act_scale) @ dequant(qt)`` for arbitrary leading x dims."""
+    mode = _mode()
+    if mode == "ref" or not qt.packed or qt.spec.bits > 4:
+        # Decode-serving layouts opt in (rules set "qin" to None) to a
+        # constraint that moves weights cross-device in the packed uint8
+        # domain instead of dequantized f32 (EXPERIMENTS.md §Perf iter 1).
+        # Applied only on explicit opt-in: under default rules the
+        # constraint pessimizes GSPMD's own dot partitioning (iter 1d).
+        if qt.codes.ndim == 2 and active_rule("qin") is None:
+            qt = QuantizedTensor(
+                codes=shard_hint(qt.codes, "qin", "qout"),
+                scale=shard_hint(qt.scale, "qgroups", "qout"),
+                zero=shard_hint(qt.zero, "qgroups", "qout"),
+                spec=qt.spec, n_in=qt.n_in, packed=qt.packed,
+                act_scale=qt.act_scale)
+        return ref_ops.quant_matmul_ref(x, qt)
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    if qt.act_scale is not None:
+        x2 = x2 / qt.act_scale.astype(x2.dtype)
+    m = x2.shape[0]
+    # pad rows to the 128 MXU tile
+    pad = (-m) % min(128, max(m, 1))
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    out = quant_matmul_pallas(x2, qt.codes, qt.scale, qt.zero,
+                              interpret=(mode != "tpu"))
+    out = out[:m]
+    return out.reshape(lead + (qt.codes.shape[-1],)).astype(x.dtype)
+
+
+def quant_error_batch(w: jax.Array, scales: jax.Array, mean_sq: jax.Array,
+                      spec) -> jax.Array:
+    """Fused multi-candidate quant-error (α search inner loop)."""
+    mode = _mode()
+    if mode == "ref":
+        return ref_ops.quant_error_ref(w, scales, mean_sq, spec)
+    return quant_error_pallas(w, scales, mean_sq, spec,
+                              interpret=(mode != "tpu"))
+
+
+def quant_matmul_experts(x: jax.Array, qt: QuantizedTensor) -> jax.Array:
+    """Per-expert dequant matmul: x (E, C, d) with qt codes (E, d[/2], f).
+
+    vmapped over the expert axis; each expert uses the same grouped-dequant
+    math as quant_matmul (ref path on CPU, kernel path on TPU)."""
+    def one(xe, codes, scale, zero, act):
+        sub = QuantizedTensor(codes=codes, scale=scale, zero=zero,
+                              spec=qt.spec, n_in=qt.n_in, packed=qt.packed,
+                              act_scale=act)
+        return ref_ops.quant_matmul_ref(xe, sub)
+
+    if qt.act_scale is None:
+        return jax.vmap(lambda xe, c, s, z: one(xe, c, s, z, None))(
+            x, qt.codes, qt.scale, qt.zero)
+    return jax.vmap(one)(x, qt.codes, qt.scale, qt.zero, qt.act_scale)

@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: W4A16 grouped dequant-matmul.
+
+The serving hot-spot of the FAQ/AWQ deployment format.  Int4 weight codes
+are packed two-per-byte in HBM; each grid step stages a ``(bk/2, bn)``
+packed block plus its per-group scales/zeros into VMEM, dequantizes
+in-register, and feeds the MXU with a ``(bm, bk) @ (bk, bn)`` matmul,
+accumulating in f32 across the K grid axis.
+
+TPU adaptation notes (vs. AWQ's CUDA dequant-GEMM):
+  * HBM->VMEM staging is expressed with BlockSpecs; the MXU dims (bm, bn)
+    are multiples of 128 and bk is a multiple of the quant group size so a
+    scale group never straddles K blocks.
+  * The nibble unpack is an interleave on the second-minor axis
+    (stack + reshape), which Mosaic lowers to vector ops; validated here
+    in interpret mode (this container is CPU-only).
+  * The per-channel AWQ/FAQ smoothing scale is folded into the activation
+    *outside* the kernel (one fused elementwise op), keeping the kernel a
+    pure grouped-dequant GEMM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, codes_ref, scale_ref, zero_ref, out_ref, *, bk: int):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    codes = codes_ref[...]                    # (bk//2, bn) uint8
+    lo = (codes & jnp.uint8(0x0F)).astype(jnp.float32)
+    hi = ((codes >> 4) & jnp.uint8(0x0F)).astype(jnp.float32)
+    w = jnp.stack([lo, hi], axis=1).reshape(bk, codes.shape[-1])
+
+    scale = scale_ref[...]                    # (bk//g, bn)
+    zero = zero_ref[...]
+    g = bk // scale.shape[0]
+    s_full = jnp.repeat(scale, g, axis=0)
+    z_full = jnp.repeat(zero, g, axis=0)
+    w = (w - z_full) * s_full                 # dequant in VMEM
+
+    x = x_ref[...].astype(jnp.float32)        # (bm, bk)
+    out_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def quant_matmul_pallas(x: jax.Array, codes: jax.Array, scale: jax.Array,
+                        zero: jax.Array, *, bm: int = 128, bn: int = 128,
+                        bk: int = 128, interpret: bool = True) -> jax.Array:
+    """x: (m, k) float; codes: (k//2, n) packed uint8;
+    scale/zero: (k//g, n) f32.  Returns (m, n) f32."""
+    m, k = x.shape
+    n = codes.shape[-1]
+    n_groups = scale.shape[0]
+    g = k // n_groups
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bk = min(bk, k)
+    if bk % g != 0:
+        bk = g  # never straddle a quant group across K blocks
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_kernel, bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk // 2, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk // g, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk // g, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel",                                              "arbitrary")),
+        interpret=interpret,
+    )(x, codes, scale, zero)

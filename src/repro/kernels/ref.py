@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the Pallas kernels (and the portable CPU path)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizer import (QuantSpec, QuantizedTensor,
+                                  dequantize_groupwise)
+
+
+def quant_matmul_ref(x: jax.Array, qt: QuantizedTensor) -> jax.Array:
+    """``(x / act_scale) @ dequant(qt)`` — oracle for the W4A16 kernel."""
+    if qt.act_scale is not None:
+        x = x / qt.act_scale.astype(x.dtype)
+    w = dequantize_groupwise(qt, dtype=x.dtype)
+    return x @ w
+
+
+def dequant_ref(codes: jax.Array, scale: jax.Array, zero: jax.Array,
+                n_in: int) -> jax.Array:
+    """Unpack + dequantize packed 4-bit codes: oracle for the kernel's
+    in-VMEM dequant stage.  codes: (n_in//2, n_out) uint8."""
+    lo = (codes & jnp.uint8(0x0F)).astype(jnp.float32)
+    hi = ((codes >> 4) & jnp.uint8(0x0F)).astype(jnp.float32)
+    w = jnp.stack([lo, hi], axis=1).reshape(n_in, codes.shape[-1])
+    g = n_in // scale.shape[0]
+    s_full = jnp.repeat(scale, g, axis=0)
+    z_full = jnp.repeat(zero, g, axis=0)
+    return (w - z_full) * s_full
+
+
+def quant_error_ref(w: jax.Array, scales: jax.Array, mean_sq: jax.Array,
+                    spec: QuantSpec) -> jax.Array:
+    """Weighted quantization error for a batch of candidate smoothing
+    scales — oracle for the fused quant-error kernel.
+
+    w: (k, n); scales: (A, k) candidate act_scales; mean_sq: (k,).
+    Returns (A,) with err[a] = sum(mean_sq[:,None] * dW_a**2) / n.
+    """
+    from repro.core.quantizer import quant_dequant
+
+    def one(s):
+        w_hat = quant_dequant(w, spec, act_scale=s)
+        dw = w_hat.astype(jnp.float32) - w.astype(jnp.float32)
+        return jnp.sum(mean_sq[:, None] * dw * dw) / w.shape[1]
+
+    return jax.vmap(one)(scales)

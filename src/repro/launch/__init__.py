@@ -1,0 +1,3 @@
+"""Launchers: production mesh, dry-run driver, train/serve/quantize entry
+points.  NOTE: dryrun must be imported first in its own process (it sets
+XLA_FLAGS before jax initializes)."""

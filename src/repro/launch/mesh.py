@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+A function, not a module-level constant, so importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS before any jax
+initialization).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import numpy as np
+    n = int(np.prod(shape))
+    devices = jax.devices()[:n]
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many devices are actually present
+    (CPU tests of the sharded code paths)."""
+    devices = jax.devices()[:data * model]
+    return jax.make_mesh((data, model), ("data", "model"), devices=devices)

@@ -1,0 +1,71 @@
+"""Production serving entry point: load a checkpoint (or init), calibrate,
+FAQ-quantize to packed int4, and serve synthetic requests.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --tiny \
+        --requests 4
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.core import QuantSpec, quantize_model, run_calibration
+from repro.data.synthetic import DataConfig, SyntheticLM, calibration_batches
+from repro.dist import checkpoint as ckpt
+from repro.models.registry import build_model
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b", choices=sorted(ARCHS))
+    ap.add_argument("--tiny", action="store_true", default=True)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--bits", type=int, default=4)
+    ap.add_argument("--method", default="faq", choices=["rtn", "awq", "faq"])
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--new-tokens", type=int, default=12)
+    ap.add_argument("--calib-n", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch].tiny() if args.tiny else ARCHS[args.arch]
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    if args.ckpt_dir:
+        step = ckpt.latest_step(args.ckpt_dir)
+        if step is not None:
+            params = ckpt.restore(args.ckpt_dir, step,
+                                  {"params": params})["params"]
+            print(f"loaded checkpoint step {step}")
+
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size))
+    calib = calibration_batches(data, args.calib_n, 64)
+    stats = run_calibration(model.forward, params,
+                            [{k: jnp.asarray(v) for k, v in b.items()}
+                             for b in calib])
+    qparams, _ = quantize_model(params, model.quant_site_map(), stats,
+                                method=args.method,
+                                spec=QuantSpec(bits=args.bits, group_size=64),
+                                mode="packed")
+    eng = ServeEngine(model, qparams, n_slots=min(4, args.requests),
+                      max_len=128)
+    reqs = [Request(rid=i, prompt=data.sequence(40_000_000 + i, 12),
+                    max_new_tokens=args.new_tokens)
+            for i in range(args.requests)]
+    t0 = time.time()
+    results = eng.serve(reqs)
+    dt = time.time() - t0
+    tok = sum(len(v) for v in results.values())
+    for rid in sorted(results):
+        print(f"req {rid}: {results[rid].tolist()}")
+    print(f"{tok} tokens in {dt:.1f}s ({tok/dt:.1f} tok/s, "
+          f"{args.method} int{args.bits} packed)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,168 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch × shape) cell.
+
+Everything here is allocation-free: parameter/optimizer/cache shapes come
+from ``jax.eval_shape`` over the real init/quantize functions, so the
+dry-run lowers exactly the structures the runtime would build.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.core import QuantSpec
+from repro.core.apply import quantize_model
+from repro.dist.sharding import logical_to_spec, tree_shardings
+from repro.models.registry import build_model
+
+SDS = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+# Inputs
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """ShapeDtypeStructs for the model inputs of one cell."""
+    b, s = cell.global_batch, cell.seq_len
+    if cell.kind == "train":
+        batch = {"tokens": SDS((b, s), jnp.int32),
+                 "labels": SDS((b, s), jnp.int32)}
+    elif cell.kind == "prefill":
+        batch = {"tokens": SDS((b, s), jnp.int32)}
+    else:  # decode
+        batch = {"tokens": SDS((b, 1), jnp.int32)}
+    if cfg.family == "audio":
+        batch["frames"] = SDS((b, cfg.encoder_len, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm" and cell.kind != "decode":
+        batch["patches"] = SDS((b, cfg.patch_len, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def batch_shardings(mesh, batch: dict, rules=None) -> dict:
+    out = {}
+    for k, v in batch.items():
+        axes = ["batch"] + [None] * (len(v.shape) - 1)
+        out[k] = NamedSharding(mesh, logical_to_spec(axes, shape=v.shape,
+                                                     mesh=mesh, rules=rules))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Params / optimizer / cache specs
+# ---------------------------------------------------------------------------
+
+def param_specs(model) -> dict:
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def param_shardings(mesh, model, specs=None):
+    specs = specs if specs is not None else param_specs(model)
+    return tree_shardings(mesh, specs, model.param_axes())
+
+
+def stats_specs(model, cfg: ModelConfig) -> dict:
+    """Abstract per-site calibration stats (for eval_shape of quantize)."""
+    batch = {"tokens": SDS((2, 32), jnp.int32)}
+    if cfg.family == "audio":
+        batch["frames"] = SDS((2, cfg.encoder_len, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["patches"] = SDS((2, cfg.patch_len, cfg.d_model), jnp.bfloat16)
+    p = param_specs(model)
+    _, aux = jax.eval_shape(
+        lambda pp, bb: model.forward(pp, bb, collect_stats=True), p, batch)
+    return aux["stats"]
+
+
+def quantized_param_specs(model, cfg: ModelConfig,
+                          spec: QuantSpec = QuantSpec(bits=4)) -> dict:
+    """Abstract packed-quantized params (the serving representation)."""
+    p = param_specs(model)
+    stats = stats_specs(model, cfg)
+
+    def quantize(pp, st):
+        qp, _ = quantize_model(pp, model.quant_site_map(), st, method="faq",
+                               spec=spec, mode="packed", loss="diag")
+        return qp
+
+    return jax.eval_shape(quantize, p, stats)
+
+
+_QT_CHILD_NAMES = ("codes", "scale", "zero", "act_scale")
+
+
+def quantized_param_shardings(mesh, model, qspecs, rules=None):
+    """Shardings for a quantized param tree.
+
+    FP leaves follow param_axes; QuantizedTensor children derive from the
+    original weight's axes: codes shard like the weight (input dim halves
+    but divisibility is re-checked), group scales/zeros keep only the
+    output-dim sharding, act_scale is replicated (small).
+    """
+    axes = model.param_axes()
+
+    def axes_at(path):
+        node = axes
+        for k in path:
+            if hasattr(k, "key"):
+                kk = k.key
+            elif hasattr(k, "idx"):
+                kk = k.idx
+            else:
+                kk = k
+            if isinstance(node, dict):
+                node = node.get(kk) if isinstance(kk, str) else node
+                if node is None:
+                    return None
+                continue
+            if isinstance(node, (list, tuple)) and isinstance(kk, int) \
+                    and not isinstance(node, tuple):
+                node = node[kk]
+        return node
+
+    from repro.core.quantizer import QuantizedTensor
+
+    def one(path, leaf):
+        # find the param-level path (strip QuantizedTensor child suffix)
+        keys = []
+        qt_child = None
+        for k in path:
+            if hasattr(k, "key") and isinstance(k.key, str):
+                keys.append(k.key)
+            elif hasattr(k, "idx"):
+                qt_child = k.idx
+        node = axes
+        for kk in keys:
+            node = node.get(kk) if isinstance(node, dict) else None
+            if node is None:
+                break
+        if node is None or not isinstance(node, (tuple, list)):
+            return NamedSharding(mesh, P())
+        w_axes = list(node)
+        if qt_child is None:           # plain FP leaf
+            ax = w_axes
+        elif qt_child == 0:            # codes: same layout as the weight
+            ax = w_axes
+        elif qt_child in (1, 2):       # scale / zero: (…, n_groups, n_out)
+            ax = w_axes[:-2] + [None, w_axes[-1]]
+        else:                          # act_scale: (…, n_in)
+            ax = [None] * (len(leaf.shape))
+        ax = ax[:len(leaf.shape)]
+        while len(ax) < len(leaf.shape):
+            ax.append(None)
+        return NamedSharding(mesh, logical_to_spec(ax, shape=leaf.shape,
+                                                   mesh=mesh, rules=rules))
+
+    return jax.tree_util.tree_map_with_path(one, qspecs)
+
+
+def cache_specs(model, batch: int, max_len: int) -> dict:
+    return jax.eval_shape(lambda: model.init_cache(batch, max_len))
+
+
+def cache_shardings(mesh, model, cspecs, rules=None):
+    return tree_shardings(mesh, cspecs, model.cache_axes(), rules=rules)

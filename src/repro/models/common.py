@@ -1,0 +1,402 @@
+"""Shared model primitives: norms, RoPE, chunked attention, SwiGLU, linears.
+
+All weights are stored ``(n_in, n_out)`` (``y = x @ W``) so the quantizer's
+input-channel-group convention applies directly.  Every quantizable matmul
+goes through :func:`qlinear`, which dispatches on the leaf type: plain
+arrays matmul directly; :class:`~repro.core.quantizer.QuantizedTensor`
+leaves route through the dequant-matmul op (serving path).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizer import QuantizedTensor
+from repro.dist.sharding import shard_hint
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, n_in: int, n_out: int, dtype=jnp.float32,
+               scale: Optional[float] = None) -> jax.Array:
+    scale = (1.0 / n_in) ** 0.5 if scale is None else scale
+    return (jax.random.normal(key, (n_in, n_out)) * scale).astype(dtype)
+
+
+def stack_layer_params(key, n_layers: int, init_fn):
+    """Init per-layer params and stack along a leading L axis (for scan)."""
+    keys = jax.random.split(key, n_layers)
+    per_layer = [init_fn(k) for k in keys]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, axis=0), *per_layer)
+
+
+# ---------------------------------------------------------------------------
+# Linear dispatch (FP or quantized)
+# ---------------------------------------------------------------------------
+
+def qlinear(x: jax.Array, w) -> jax.Array:
+    """``x @ w`` where ``w`` is an array or a QuantizedTensor."""
+    if isinstance(w, QuantizedTensor):
+        from repro.kernels.ops import quant_matmul
+        return quant_matmul(x, w)
+    return x @ w.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    x32 = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * w.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard + M-RoPE for qwen2-vl)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 1e4,
+               mrope_sections: Optional[tuple] = None) -> jax.Array:
+    """Rotary embedding.
+
+    ``x``: (B, T, H, hd).  ``positions``: (B, T) for standard RoPE or
+    (3, B, T) for M-RoPE (temporal/height/width position ids per token;
+    text-only inputs pass the same ids three times, which reduces exactly
+    to standard RoPE).
+    """
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    if mrope_sections is None:
+        ang = positions.astype(jnp.float32)[..., None] * freqs  # (B,T,hd/2)
+    else:
+        assert positions.ndim == 3, "M-RoPE needs (3, B, T) position ids"
+        secs = []
+        start = 0
+        for i, sec in enumerate(mrope_sections):
+            f = freqs[start:start + sec]
+            secs.append(positions[i].astype(jnp.float32)[..., None] * f)
+            start += sec
+        ang = jnp.concatenate(secs, axis=-1)            # (B,T,hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    out = jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention: chunked (flash-style) for train/prefill, direct for decode.
+# ---------------------------------------------------------------------------
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return k
+    b, t, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, t, h, n_rep, d)) \
+              .reshape(b, t, h * n_rep, d)
+
+
+# Cost-mode (dry-run cost_analysis only): XLA does not multiply while-loop
+# bodies by trip count, so the dry-run's cost variant forces inner chunk
+# loops to a single trip (full-T blocks) so their FLOPs are fully counted.
+_COST_MODE = False
+
+
+def set_cost_mode(enabled: bool):
+    global _COST_MODE
+    _COST_MODE = enabled
+
+
+def cost_mode() -> bool:
+    return _COST_MODE
+
+
+def layer_scan(body, init, xs):
+    """lax.scan for the layer stack; fully unrolled in cost mode so
+    cost_analysis counts every layer (XLA never multiplies while-loop
+    bodies by trip count)."""
+    return jax.lax.scan(body, init, xs, unroll=True if _COST_MODE else 1)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True,
+                      window: Optional[int] = None,
+                      q_offset: int = 0,
+                      chunk: int = 512) -> jax.Array:
+    """Memory-O(T·chunk) attention via a scan over KV chunks.
+
+    q: (B, Tq, H, hd); k, v: (B, Tk, KH, hd) with H % KH == 0 (GQA).
+    ``q_offset`` is the absolute position of q[0] (for decode/prefill
+    continuation).  ``window`` enables sliding-window masking (hymba).
+    """
+    b, tq, h, hd = q.shape
+    tk, kh = k.shape[1], k.shape[2]
+    if (window is not None and causal and tq == tk and q_offset == 0
+            and tk > 2 * window):
+        # sliding-window self-attention: block-local path is O(T*2w)
+        # instead of O(T^2) (perf iteration 3, EXPERIMENTS.md §Perf)
+        return local_window_attention(q, k, v, window)
+    if (jax.default_backend() == "tpu" and window is None and q_offset == 0
+            and tq == tk and hd <= 128 and tq % 128 == 0
+            and not _COST_MODE):
+        # TPU deployments run the Pallas flash kernel (scores stay in
+        # VMEM); CPU/tests keep the chunked jnp path below.
+        from repro.kernels.flash_attention import flash_attention_pallas
+        kr = _repeat_kv(k, h // kh).transpose(0, 2, 1, 3).reshape(b * h, tk, hd)
+        vr = _repeat_kv(v, h // kh).transpose(0, 2, 1, 3).reshape(b * h, tk, hd)
+        qr = q.transpose(0, 2, 1, 3).reshape(b * h, tq, hd)
+        o = flash_attention_pallas(qr, kr, vr, causal=causal,
+                                   interpret=False)
+        return o.reshape(b, h, tq, hd).transpose(0, 2, 1, 3)
+    k = _repeat_kv(k, h // kh)
+    v = _repeat_kv(v, h // kh)
+    if _COST_MODE:
+        chunk = tk
+    chunk = min(chunk, tk)
+    n_chunks = tk // chunk
+    rem = tk - n_chunks * chunk
+    scale = hd ** -0.5
+    q32 = q.astype(jnp.float32) * scale
+    qpos = q_offset + jnp.arange(tq)
+
+    def attend_block(carry, kb, vb, kpos):
+        m, l, acc = carry
+        s = jnp.einsum("bqhd,bkhd->bhqk", q32, kb.astype(jnp.float32))
+        mask = jnp.ones((tq, kb.shape[1]), dtype=bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window is not None:
+            mask &= (qpos[:, None] - kpos[None, :]) < window
+        s = jnp.where(mask[None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new)
+
+    init = (jnp.full((b, h, tq), -jnp.inf, jnp.float32),
+            jnp.zeros((b, h, tq), jnp.float32),
+            jnp.zeros((b, h, tq, hd), jnp.float32))
+
+    if n_chunks > 0:
+        kc = k[:, :n_chunks * chunk].reshape(b, n_chunks, chunk, h, hd)
+        vc = v[:, :n_chunks * chunk].reshape(b, n_chunks, chunk, h, hd)
+        kposc = jnp.arange(n_chunks * chunk).reshape(n_chunks, chunk)
+
+        def body(carry, xs):
+            kb, vb, kpos = xs
+            return attend_block(carry, kb, vb, kpos), None
+
+        carry, _ = jax.lax.scan(
+            body, init,
+            (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4), kposc))
+    else:
+        carry = init
+    if rem:
+        carry = attend_block(carry, k[:, n_chunks * chunk:],
+                             v[:, n_chunks * chunk:],
+                             jnp.arange(n_chunks * chunk, tk))
+    m, l, acc = carry
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B, Tq, H, hd)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array,
+                     window: Optional[int] = None) -> jax.Array:
+    """Single-position attention against a (possibly longer) cache.
+
+    q: (B, 1, H, hd); caches: (B, S, KH, hd); cache_len: (B,) int32 —
+    number of valid cache entries per batch element *including* the
+    current token's k/v (per-slot lengths enable continuous batching).
+
+    GQA is computed in grouped form — q reshaped to (B, KH, G, hd) and
+    einsummed against the *unrepeated* cache.  This keeps the cache's
+    sequence sharding intact (repeating KV to q-heads forces an SPMD
+    reshard that replicates the whole cache in f32 — the dominant
+    collective of the baseline decode cells; EXPERIMENTS.md §Perf).
+    Softmax over the sharded S axis costs only tiny stat psums.
+    """
+    b, _, h, hd = q.shape
+    s, kh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kh
+    qg = q.astype(jnp.float32).reshape(b, kh, g, hd)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg,
+                        k_cache.astype(jnp.float32)) * hd ** -0.5
+    cache_len = jnp.broadcast_to(cache_len, (b,))
+    kpos = jnp.arange(s)
+    mask = kpos[None, None, None, :] < cache_len[:, None, None, None]
+    if window is not None:
+        mask &= (kpos[None, None, None, :]
+                 >= (cache_len[:, None, None, None] - window))
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def swiglu(x: jax.Array, w_gate, w_up, w_down) -> jax.Array:
+    g = qlinear(x, w_gate)
+    u = qlinear(x, w_up)
+    h = jax.nn.silu(g) * u
+    h = shard_hint(h, "batch", "seq", "ff")
+    return qlinear(h, w_down)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits
+# ---------------------------------------------------------------------------
+
+def padded_vocab(vocab_size: int, multiple: int = 256) -> int:
+    return ((vocab_size + multiple - 1) // multiple) * multiple
+
+
+def embed_tokens(embedding: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(embedding, tokens, axis=0)
+
+
+def logits_from_hidden(x: jax.Array, lm_head, vocab_size: int) -> jax.Array:
+    """Final projection.  Logits keep the *padded* vocab width (sharding
+    stays clean); padded columns get a -1e30 additive mask so softmax,
+    cross-entropy, and argmax all behave as if the vocab were unpadded."""
+    out = qlinear(x, lm_head)
+    out = shard_hint(out, "batch", "seq", "vocab")
+    v_pad = out.shape[-1]
+    if v_pad != vocab_size:
+        bias = jnp.where(jnp.arange(v_pad) < vocab_size, 0.0, -1e30)
+        out = out.astype(jnp.float32) + bias
+    return out
+
+
+def quantize_kv(x: jax.Array):
+    """Per-(token, head) symmetric int8 quantization of fresh K/V entries.
+
+    x: (B, T, KH, hd) -> (codes int8 same shape, scale (B, T, KH, 1) f32).
+    Beyond-paper serving feature (cfg.kv_cache_bits=8): halves KV-cache
+    HBM footprint/traffic — complements FAQ's 4-bit weights, same
+    deployment story."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    codes = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return codes.astype(jnp.int8), scale
+
+
+def decode_attention_q8(q, k_codes, k_scale, v_codes, v_scale, cache_len,
+                        window=None):
+    """decode_attention against an int8 cache: scales fold into the score
+    matrix / probability weights, so the cache is consumed in int8."""
+    b, _, h, hd = q.shape
+    s, kh = k_codes.shape[1], k_codes.shape[2]
+    g = h // kh
+    qg = q.astype(jnp.float32).reshape(b, kh, g, hd)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg,
+                        k_codes.astype(jnp.float32)) * hd ** -0.5
+    scores = scores * k_scale[..., 0].transpose(0, 2, 1)[:, :, None, :]
+    cache_len = jnp.broadcast_to(cache_len, (b,))
+    kpos = jnp.arange(s)
+    mask = kpos[None, None, None, :] < cache_len[:, None, None, None]
+    if window is not None:
+        mask &= (kpos[None, None, None, :]
+                 >= (cache_len[:, None, None, None] - window))
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    pv = p * v_scale[..., 0].transpose(0, 2, 1)[:, :, None, :]
+    out = jnp.einsum("bkgs,bskd->bkgd", pv, v_codes.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def update_cache_at(cache: jax.Array, new: jax.Array,
+                    pos: jax.Array) -> jax.Array:
+    """Write ``new`` (B, KH, 1, hd) into ``cache`` (B, KH, S, hd) at
+    per-batch positions ``pos`` (B,) — vmapped dynamic_update_slice."""
+    pos = jnp.broadcast_to(pos, (cache.shape[0],))
+    return jax.vmap(
+        lambda c, n, p: jax.lax.dynamic_update_slice(c, n, (0, p, 0)))(
+        cache, new, pos)
+
+
+def local_window_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                           window: int) -> jax.Array:
+    """Causal sliding-window self-attention in block-local form.
+
+    q/k/v: (B, T, H|KH, hd).  The sequence is cut into blocks of size
+    ``window``; block j's queries attend only to blocks (j-1, j), which
+    covers every in-window key exactly once — compute and score traffic
+    drop from O(T^2) to O(T * 2*window).  Used by hymba (the attention
+    half of its hybrid blocks).
+    """
+    b, t, h, hd = q.shape
+    kh = k.shape[2]
+    k = _repeat_kv(k, h // kh)
+    v = _repeat_kv(v, h // kh)
+    w = window
+    pad = (-t) % w
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    tp = t + pad
+    nb = tp // w
+    qb = q.reshape(b, nb, w, h, hd).astype(jnp.float32) * hd ** -0.5
+    kb = k.reshape(b, nb, w, h, hd)
+    vb = v.reshape(b, nb, w, h, hd)
+    zeros = jnp.zeros_like(kb[:, :1])
+    k_prev = jnp.concatenate([zeros, kb[:, :-1]], axis=1)
+    v_prev = jnp.concatenate([zeros, vb[:, :-1]], axis=1)
+    k_cat = jnp.concatenate([k_prev, kb], axis=2)   # (B, nb, 2w, H, hd)
+    v_cat = jnp.concatenate([v_prev, vb], axis=2)
+
+    i = jnp.arange(w)[:, None]
+    l = jnp.arange(2 * w)[None, :]
+    dist = i + w - l
+    base_mask = (dist >= 0) & (dist < w)            # (w, 2w)
+
+    def block(carry, xs):
+        j, qj, kj, vj = xs
+        # absolute key positions for validity (padding + first block)
+        kpos = j * w - w + jnp.arange(2 * w)
+        valid = (kpos >= 0) & (kpos < t)
+        mask = base_mask & valid[None, :]
+        s = jnp.einsum("bqhd,bkhd->bhqk", qj, kj.astype(jnp.float32))
+        s = jnp.where(mask[None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", p, vj.astype(jnp.float32))
+        return carry, o
+
+    _, ob = layer_scan(block, None,
+                       (jnp.arange(nb),
+                        qb.transpose(1, 0, 2, 3, 4),
+                        k_cat.transpose(1, 0, 2, 3, 4),
+                        v_cat.transpose(1, 0, 2, 3, 4)))
+    out = ob.transpose(1, 0, 2, 3, 4).reshape(b, tp, h, hd)[:, :t]
+    return out.astype(q.dtype)

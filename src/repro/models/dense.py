@@ -1,0 +1,312 @@
+"""Dense llama-style decoder LM (stablelm / llama3 / deepseek-coder).
+
+Functional style: ``init`` builds a nested-dict param tree with per-layer
+weights stacked on a leading L axis; ``forward``/``prefill``/``decode_step``
+scan over layers.  KV cache layout is ``(L, B, KH, S, hd)`` — kv-heads
+before sequence so the sharding-hint priority picks head-sharding when the
+head count divides the model axis and falls back to sequence sharding
+otherwise (see dist/sharding.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.stats import site_stat
+from repro.dist.sharding import shard_hint
+from .common import (layer_scan,
+                     apply_rope, chunked_attention, decode_attention,
+                     decode_attention_q8, quantize_kv,
+                     dense_init, embed_tokens, logits_from_hidden,
+                     padded_vocab, qlinear, rms_norm, stack_layer_params,
+                     update_cache_at)
+
+
+class DenseLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.dtype)
+
+    # -- params ------------------------------------------------------------
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        hd = cfg.head_dim_
+        v_pad = padded_vocab(cfg.vocab_size)
+        k_emb, k_blocks, k_head = jax.random.split(key, 3)
+
+        def block_init(k):
+            ks = jax.random.split(k, 7)
+            return {
+                "attn_norm": jnp.ones((cfg.d_model,), self.dtype),
+                "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * hd, self.dtype),
+                "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * hd, self.dtype),
+                "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * hd, self.dtype),
+                "wo": dense_init(ks[3], cfg.n_heads * hd, cfg.d_model, self.dtype),
+                "mlp_norm": jnp.ones((cfg.d_model,), self.dtype),
+                "w_gate": dense_init(ks[4], cfg.d_model, cfg.d_ff, self.dtype),
+                "w_up": dense_init(ks[5], cfg.d_model, cfg.d_ff, self.dtype),
+                "w_down": dense_init(ks[6], cfg.d_ff, cfg.d_model, self.dtype),
+            }
+
+        return {
+            "embed": dense_init(k_emb, v_pad, cfg.d_model, self.dtype,
+                                scale=0.02),
+            "blocks": stack_layer_params(k_blocks, cfg.n_layers, block_init),
+            "final_norm": jnp.ones((cfg.d_model,), self.dtype),
+            "lm_head": dense_init(k_head, cfg.d_model, v_pad, self.dtype),
+        }
+
+    def param_axes(self) -> dict:
+        return {
+            "embed": ("vocab", "fsdp"),
+            "blocks": {
+                "attn_norm": (None, None),
+                "wq": (None, "fsdp", "heads"),
+                "wk": (None, "fsdp", None),
+                "wv": (None, "fsdp", None),
+                "wo": (None, "heads", "fsdp"),
+                "mlp_norm": (None, None),
+                "w_gate": (None, "fsdp", "ff"),
+                "w_up": (None, "fsdp", "ff"),
+                "w_down": (None, "ff", "fsdp"),
+            },
+            "final_norm": (None,),
+            "lm_head": ("fsdp", "vocab"),
+        }
+
+    def quant_site_map(self) -> dict:
+        return {
+            ("blocks", "wq"): "attn_in",
+            ("blocks", "wk"): "attn_in",
+            ("blocks", "wv"): "attn_in",
+            ("blocks", "wo"): "attn_out",
+            ("blocks", "w_gate"): "mlp_in",
+            ("blocks", "w_up"): "mlp_in",
+            ("blocks", "w_down"): "mlp_down",
+        }
+
+    # -- block -------------------------------------------------------------
+    def _attn(self, p, x, positions, *, kv_write=None, cache=None,
+              cache_len=None):
+        """Attention sub-block.  Returns (out, (k, v)) — k/v as produced
+        (for prefill cache capture)."""
+        cfg = self.cfg
+        hd = cfg.head_dim_
+        b, t, _ = x.shape
+        q = qlinear(x, p["wq"]).reshape(b, t, cfg.n_heads, hd)
+        k = qlinear(x, p["wk"]).reshape(b, t, cfg.n_kv_heads, hd)
+        v = qlinear(x, p["wv"]).reshape(b, t, cfg.n_kv_heads, hd)
+        q = apply_rope(q, positions, cfg.rope_theta,
+                       mrope_sections=cfg.mrope_sections or None)
+        k = apply_rope(k, positions, cfg.rope_theta,
+                       mrope_sections=cfg.mrope_sections or None)
+        q = shard_hint(q, "batch", "seq", "heads", None)
+        k = shard_hint(k, "batch", "seq", "kv_heads", None)
+        v = shard_hint(v, "batch", "seq", "kv_heads", None)
+        if cache is None:
+            window = cfg.sliding_window or None
+            o = chunked_attention(q, k, v, causal=True, window=window)
+        elif cfg.kv_cache_bits == 8:
+            k_cache, k_sc, v_cache, v_sc = cache
+            pos = cache_len - 1
+            kq, ks = quantize_kv(k)
+            vq, vs = quantize_kv(v)
+            k_cache = update_cache_at(k_cache, kq.transpose(0, 2, 1, 3), pos)
+            v_cache = update_cache_at(v_cache, vq.transpose(0, 2, 1, 3), pos)
+            k_sc = update_cache_at(k_sc, ks.transpose(0, 2, 1, 3), pos)
+            v_sc = update_cache_at(v_sc, vs.transpose(0, 2, 1, 3), pos)
+            window = cfg.sliding_window or None
+            o = decode_attention_q8(
+                q, k_cache.transpose(0, 2, 1, 3), k_sc.transpose(0, 2, 1, 3),
+                v_cache.transpose(0, 2, 1, 3), v_sc.transpose(0, 2, 1, 3),
+                cache_len, window=window)
+            k, v = (k_cache, k_sc), (v_cache, v_sc)
+        else:
+            k_cache, v_cache = cache  # (B, KH, S, hd)
+            pos = cache_len - 1           # (B,)
+            k_cache = update_cache_at(k_cache, k.transpose(0, 2, 1, 3), pos)
+            v_cache = update_cache_at(v_cache, v.transpose(0, 2, 1, 3), pos)
+            window = cfg.sliding_window or None
+            o = decode_attention(q, k_cache.transpose(0, 2, 1, 3),
+                                 v_cache.transpose(0, 2, 1, 3),
+                                 cache_len, window=window)
+            k, v = k_cache, v_cache
+        o = o.reshape(b, t, cfg.n_heads * hd)
+        return qlinear(o, p["wo"]), (k, v), o
+
+    def _block(self, p, x, positions, collect, *, cache=None, cache_len=None):
+        h = rms_norm(x, p["attn_norm"], self.cfg.norm_eps)
+        stats = {}
+        if collect:
+            stats["attn_in"] = site_stat(h)
+        attn_out, kv, o_pre = self._attn(p, h, positions, cache=cache,
+                                         cache_len=cache_len)
+        if collect:
+            stats["attn_out"] = site_stat(o_pre)
+        x = x + attn_out
+        h = rms_norm(x, p["mlp_norm"], self.cfg.norm_eps)
+        if collect:
+            stats["mlp_in"] = site_stat(h)
+        g = qlinear(h, p["w_gate"])
+        u = qlinear(h, p["w_up"])
+        hidden = jax.nn.silu(g) * u
+        hidden = shard_hint(hidden, "batch", "seq", "ff")
+        if collect:
+            stats["mlp_down"] = site_stat(hidden)
+        x = x + qlinear(hidden, p["w_down"])
+        x = shard_hint(x, "batch", "seq", "embed")
+        return x, kv, stats
+
+    # -- entry points --------------------------------------------------------
+    def forward(self, params, batch, collect_stats: bool = False):
+        """Full causal forward (training / evaluation).
+
+        Returns (logits, aux) with aux = {"stats": ..., "moe_aux": scalar}
+        — the uniform contract across all model families."""
+        tokens = batch["tokens"]
+        b, t = tokens.shape
+        positions = self._positions(batch, b, t)
+        x = embed_tokens(params["embed"], tokens).astype(self.dtype)
+        x = shard_hint(x, "batch", "seq", "embed")
+
+        def body(x, p):
+            x, _, stats = self._block(p, x, positions, collect_stats)
+            return x, (stats if collect_stats else None)
+
+        if self.cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, stats = layer_scan(body, x, params["blocks"])
+        x = rms_norm(x, params["final_norm"], self.cfg.norm_eps)
+        logits = logits_from_hidden(x, params["lm_head"], self.cfg.vocab_size)
+        aux = {"stats": stats if collect_stats else {},
+               "moe_aux": jnp.zeros((), jnp.float32)}
+        return logits, aux
+
+    def prefill(self, params, tokens, cache):
+        """Run the prompt and write the KV cache in-place (functional).
+
+        cache: dict(k=(L,B,KH,S,hd), v=..., len=()) with S >= T.
+        Returns (logits_last, cache)."""
+        b, t = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+        positions = self._maybe_mrope(positions)
+        x = embed_tokens(params["embed"], tokens).astype(self.dtype)
+        x = shard_hint(x, "batch", "seq", "embed")
+
+        if self.cfg.kv_cache_bits == 8:
+            def body8(x, xs):
+                p, kc, ksc, vc, vsc = xs
+                x, (k, v), _ = self._block(p, x, positions, False)
+                kq, ks = quantize_kv(k)
+                vq, vs = quantize_kv(v)
+                kc = jax.lax.dynamic_update_slice(
+                    kc, kq.transpose(0, 2, 1, 3), (0, 0, 0, 0))
+                ksc = jax.lax.dynamic_update_slice(
+                    ksc, ks.transpose(0, 2, 1, 3), (0, 0, 0, 0))
+                vc = jax.lax.dynamic_update_slice(
+                    vc, vq.transpose(0, 2, 1, 3), (0, 0, 0, 0))
+                vsc = jax.lax.dynamic_update_slice(
+                    vsc, vs.transpose(0, 2, 1, 3), (0, 0, 0, 0))
+                return x, (kc, ksc, vc, vsc)
+
+            x, (kc, ksc, vc, vsc) = layer_scan(
+                body8, x, (params["blocks"], cache["k"], cache["k_scale"],
+                           cache["v"], cache["v_scale"]))
+            x = rms_norm(x[:, -1:], params["final_norm"], self.cfg.norm_eps)
+            logits = logits_from_hidden(x, params["lm_head"],
+                                        self.cfg.vocab_size)
+            return logits, {"k": kc, "k_scale": ksc, "v": vc,
+                            "v_scale": vsc,
+                            "len": jnp.full((b,), t, jnp.int32)}
+
+        def body(x, xs):
+            p, kc, vc = xs
+            x, (k, v), _ = self._block(p, x, positions, False)
+            kc = jax.lax.dynamic_update_slice(
+                kc, k.transpose(0, 2, 1, 3), (0, 0, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                vc, v.transpose(0, 2, 1, 3), (0, 0, 0, 0))
+            return x, (kc, vc)
+
+        x, (kc, vc) = layer_scan(body, x, (params["blocks"], cache["k"],
+                                             cache["v"]))
+        x = rms_norm(x[:, -1:], params["final_norm"], self.cfg.norm_eps)
+        logits = logits_from_hidden(x, params["lm_head"], self.cfg.vocab_size)
+        return logits, {"k": kc, "v": vc,
+                        "len": jnp.full((b,), t, jnp.int32)}
+
+    def decode_step(self, params, cache, token, pos=None):
+        """One decode step.  token: (B, 1) int32.  Returns (logits, cache).
+        cache["len"] is per-batch (B,) so slots may hold different-length
+        sequences (continuous batching)."""
+        b = token.shape[0]
+        new_len = cache["len"] + 1                      # (B,)
+        positions = (new_len - 1)[:, None].astype(jnp.int32)
+        positions = self._maybe_mrope(positions)
+        x = embed_tokens(params["embed"], token).astype(self.dtype)
+
+        if self.cfg.kv_cache_bits == 8:
+            def body8(x, xs):
+                p, kc, ksc, vc, vsc = xs
+                x, ((kc, ksc), (vc, vsc)), _ = self._block(
+                    p, x, positions, False, cache=(kc, ksc, vc, vsc),
+                    cache_len=new_len)
+                return x, (kc, ksc, vc, vsc)
+
+            x, (kc, ksc, vc, vsc) = layer_scan(
+                body8, x, (params["blocks"], cache["k"], cache["k_scale"],
+                           cache["v"], cache["v_scale"]))
+            x = rms_norm(x, params["final_norm"], self.cfg.norm_eps)
+            logits = logits_from_hidden(x, params["lm_head"],
+                                        self.cfg.vocab_size)
+            return logits, {"k": kc, "k_scale": ksc, "v": vc,
+                            "v_scale": vsc, "len": new_len}
+
+        def body(x, xs):
+            p, kc, vc = xs
+            x, (kc, vc), _ = self._block(p, x, positions, False,
+                                         cache=(kc, vc), cache_len=new_len)
+            return x, (kc, vc)
+
+        x, (kc, vc) = layer_scan(body, x, (params["blocks"], cache["k"],
+                                             cache["v"]))
+        x = rms_norm(x, params["final_norm"], self.cfg.norm_eps)
+        logits = logits_from_hidden(x, params["lm_head"], self.cfg.vocab_size)
+        return logits, {"k": kc, "v": vc, "len": new_len}
+
+    # -- cache -------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        hd = cfg.head_dim_
+        shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_len, hd)
+        if cfg.kv_cache_bits == 8:
+            sshape = shape[:-1] + (1,)
+            return {"k": jnp.zeros(shape, jnp.int8),
+                    "k_scale": jnp.zeros(sshape, jnp.float32),
+                    "v": jnp.zeros(shape, jnp.int8),
+                    "v_scale": jnp.zeros(sshape, jnp.float32),
+                    "len": jnp.zeros((batch,), jnp.int32)}
+        return {"k": jnp.zeros(shape, self.dtype),
+                "v": jnp.zeros(shape, self.dtype),
+                "len": jnp.zeros((batch,), jnp.int32)}
+
+    def cache_axes(self) -> dict:
+        ax = (None, "batch", "kv_heads", "kv_seq", None)
+        if self.cfg.kv_cache_bits == 8:
+            return {"k": ax, "k_scale": ax, "v": ax, "v_scale": ax,
+                    "len": None}
+        return {"k": ax, "v": ax, "len": None}
+
+    # -- helpers -----------------------------------------------------------
+    def _maybe_mrope(self, positions):
+        if self.cfg.mrope_sections:
+            return jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        return positions
+
+    def _positions(self, batch, b, t):
+        if "positions" in batch:
+            return batch["positions"]
+        return self._maybe_mrope(jnp.broadcast_to(jnp.arange(t), (b, t)))

@@ -1,0 +1,266 @@
+"""Hymba: hybrid blocks with parallel attention + mamba heads.
+
+Per block (arXiv:2411.13676, adapted): both branches read the same normed
+input; outputs are averaged.  The attention branch uses sliding-window
+(cfg.sliding_window) masking, making the arch sub-quadratic, and the
+decode KV cache is a **ring buffer of window size** (rope is applied
+before caching, so slot order is irrelevant to the attention sum).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.stats import site_stat
+from repro.dist.sharding import shard_hint
+from .common import (layer_scan,
+                     apply_rope, chunked_attention, decode_attention,
+                     dense_init, embed_tokens, logits_from_hidden,
+                     padded_vocab, qlinear, rms_norm, stack_layer_params,
+                     update_cache_at)
+from .dense import DenseLM
+from . import ssm
+
+
+class HymbaLM(DenseLM):
+    @property
+    def _d_inner(self) -> int:
+        return self.cfg.ssm_expand * self.cfg.d_model
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        hd = cfg.head_dim_
+        v_pad = padded_vocab(cfg.vocab_size)
+        k_emb, k_blocks, k_head = jax.random.split(key, 3)
+
+        def block_init(k):
+            ks = jax.random.split(k, 8)
+            return {
+                "attn_norm": jnp.ones((cfg.d_model,), self.dtype),
+                "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * hd, self.dtype),
+                "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * hd, self.dtype),
+                "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * hd, self.dtype),
+                "wo": dense_init(ks[3], cfg.n_heads * hd, cfg.d_model, self.dtype),
+                "mamba": ssm.mamba_init(ks[4], cfg.d_model, self._d_inner,
+                                        cfg.ssm_state, cfg.dt_rank,
+                                        cfg.ssm_conv, self.dtype),
+                "mlp_norm": jnp.ones((cfg.d_model,), self.dtype),
+                "w_gate": dense_init(ks[5], cfg.d_model, cfg.d_ff, self.dtype),
+                "w_up": dense_init(ks[6], cfg.d_model, cfg.d_ff, self.dtype),
+                "w_down": dense_init(ks[7], cfg.d_ff, cfg.d_model, self.dtype),
+            }
+
+        return {
+            "embed": dense_init(k_emb, v_pad, cfg.d_model, self.dtype, scale=0.02),
+            "blocks": stack_layer_params(k_blocks, cfg.n_layers, block_init),
+            "final_norm": jnp.ones((cfg.d_model,), self.dtype),
+            "lm_head": dense_init(k_head, cfg.d_model, v_pad, self.dtype),
+        }
+
+    def param_axes(self) -> dict:
+        ax = super().param_axes()
+        ax["blocks"]["mamba"] = ssm.mamba_axes()
+        return ax
+
+    def quant_site_map(self) -> dict:
+        m = super().quant_site_map()
+        m.update({
+            ("blocks", "mamba", "in_proj"): "attn_in",   # same normed input
+            ("blocks", "mamba", "x_proj"): "mamba_x",
+            ("blocks", "mamba", "out_proj"): "mamba_out",
+        })
+        return m
+
+    def _block(self, p, x, positions, collect, *, cache=None, cache_len=None):
+        cfg = self.cfg
+        h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+        stats = {}
+        if collect:
+            stats["attn_in"] = site_stat(h)
+
+        collected = {}
+        cb = (lambda name, val: collected.__setitem__(name, site_stat(val))) \
+            if collect else None
+
+        if cache is None:
+            attn_out, kv, o_pre = self._attn(p, h, positions)
+            mamba_out = ssm.mamba_scan(p["mamba"], h, collect_cb=cb)
+            new_mamba = None
+            if collect:
+                # x_proj input: conv+silu output; recompute cheaply for stats
+                u, _, _, _, _, _ = ssm._mamba_gates(p["mamba"], h)
+                stats["mamba_x"] = site_stat(u)
+        else:
+            kv_cache, mamba_state = cache
+            attn_out, kv, o_pre = self._attn_ring(p, h, positions, kv_cache,
+                                                  cache_len)
+            mamba_out, new_mamba = ssm.mamba_step(p["mamba"], h, mamba_state)
+        if collect:
+            stats["attn_out"] = site_stat(o_pre)
+            stats.update(collected)
+        x = x + 0.5 * (attn_out + mamba_out)
+
+        h = rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+        if collect:
+            stats["mlp_in"] = site_stat(h)
+        g = qlinear(h, p["w_gate"])
+        u2 = qlinear(h, p["w_up"])
+        hidden = jax.nn.silu(g) * u2
+        hidden = shard_hint(hidden, "batch", "seq", "ff")
+        if collect:
+            stats["mlp_down"] = site_stat(hidden)
+        x = x + qlinear(hidden, p["w_down"])
+        x = shard_hint(x, "batch", "seq", "embed")
+        return x, (kv, new_mamba), stats
+
+    def _attn_ring(self, p, x, positions, kv_cache, cache_len):
+        """Decode attention against the ring-buffer window cache."""
+        cfg = self.cfg
+        hd = cfg.head_dim_
+        w = cfg.sliding_window
+        b, t, _ = x.shape
+        q = qlinear(x, p["wq"]).reshape(b, t, cfg.n_heads, hd)
+        k = qlinear(x, p["wk"]).reshape(b, t, cfg.n_kv_heads, hd)
+        v = qlinear(x, p["wv"]).reshape(b, t, cfg.n_kv_heads, hd)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        k_cache, v_cache = kv_cache                       # (B, KH, W, hd)
+        slot = (cache_len - 1) % w                        # (B,)
+        k_cache = update_cache_at(k_cache, k.transpose(0, 2, 1, 3), slot)
+        v_cache = update_cache_at(v_cache, v.transpose(0, 2, 1, 3), slot)
+        valid = jnp.minimum(cache_len, w)                 # (B,)
+        o = decode_attention(q, k_cache.transpose(0, 2, 1, 3),
+                             v_cache.transpose(0, 2, 1, 3), valid)
+        o = o.reshape(b, t, cfg.n_heads * hd)
+        return qlinear(o, p["wo"]), (k_cache, v_cache), o
+
+    # -- entry points (cache structure differs from DenseLM) ---------------
+    def forward(self, params, batch, collect_stats: bool = False):
+        tokens = batch["tokens"]
+        b, t = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+        x = embed_tokens(params["embed"], tokens).astype(self.dtype)
+        x = shard_hint(x, "batch", "seq", "embed")
+
+        def body(x, p):
+            x, _, stats = self._block(p, x, positions, collect_stats)
+            return x, (stats if collect_stats else None)
+
+        if self.cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, stats = layer_scan(body, x, params["blocks"])
+        x = rms_norm(x, params["final_norm"], self.cfg.norm_eps)
+        logits = logits_from_hidden(x, params["lm_head"], self.cfg.vocab_size)
+        return logits, {"stats": stats if collect_stats else {},
+                        "moe_aux": jnp.zeros((), jnp.float32)}
+
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        hd = cfg.head_dim_
+        w = min(cfg.sliding_window or max_len, max_len)
+        kv_shape = (cfg.n_layers, batch, cfg.n_kv_heads, w, hd)
+        return {
+            "k": jnp.zeros(kv_shape, self.dtype),
+            "v": jnp.zeros(kv_shape, self.dtype),
+            "mamba": jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape),
+                ssm.mamba_state_init(batch, self._d_inner, cfg.ssm_state,
+                                     cfg.ssm_conv, self.dtype)),
+            "len": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def cache_axes(self) -> dict:
+        ax = (None, "batch", "kv_heads", "kv_seq", None)
+        return {"k": ax, "v": ax,
+                "mamba": {"h": (None, "batch", "ff", None),
+                          "conv": (None, "batch", None, "ff")},
+                "len": None}
+
+    def prefill(self, params, tokens, cache):
+        """Prefill = full forward capturing final states.
+
+        The attention branch keeps only the last `window` kv entries; the
+        mamba branch's state after the prompt is reconstructed by running
+        the scan and taking the final carry (recomputed in one pass)."""
+        b, t = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+        x = embed_tokens(params["embed"], tokens).astype(self.dtype)
+        w = cache["k"].shape[3]
+
+        def body(x, xs):
+            p, kc, vc, mst = xs
+            h = rms_norm(x, p["attn_norm"], self.cfg.norm_eps)
+            attn_out, (k, v), _ = self._attn(p, h, positions)
+            # window-tail of rope'd k/v into the ring buffer (ring offset 0)
+            k_tail = k.transpose(0, 2, 1, 3)[:, :, -w:]
+            v_tail = v.transpose(0, 2, 1, 3)[:, :, -w:]
+            kc = _ring_store(kc, k_tail, t, w)
+            vc = _ring_store(vc, v_tail, t, w)
+            mamba_out, mst = _mamba_scan_final(p["mamba"], h, mst)
+            x = x + 0.5 * (attn_out + mamba_out)
+            h2 = rms_norm(x, p["mlp_norm"], self.cfg.norm_eps)
+            hidden = jax.nn.silu(qlinear(h2, p["w_gate"])) * qlinear(h2, p["w_up"])
+            x = x + qlinear(hidden, p["w_down"])
+            return x, (kc, vc, mst)
+
+        x, (kc, vc, mst) = layer_scan(
+            body, x, (params["blocks"], cache["k"], cache["v"], cache["mamba"]))
+        x = rms_norm(x[:, -1:], params["final_norm"], self.cfg.norm_eps)
+        logits = logits_from_hidden(x, params["lm_head"], self.cfg.vocab_size)
+        return logits, {"k": kc, "v": vc, "mamba": mst,
+                        "len": jnp.full((b,), t, jnp.int32)}
+
+    def decode_step(self, params, cache, token, pos=None):
+        b = token.shape[0]
+        new_len = cache["len"] + 1                        # (B,)
+        positions = (new_len - 1)[:, None].astype(jnp.int32)
+        x = embed_tokens(params["embed"], token).astype(self.dtype)
+
+        def body(x, xs):
+            p, kc, vc, mst = xs
+            x, ((kc, vc), mst), _ = self._block(
+                p, x, positions, False, cache=((kc, vc), mst),
+                cache_len=new_len)
+            return x, (kc, vc, mst)
+
+        x, (kc, vc, mst) = layer_scan(
+            body, x, (params["blocks"], cache["k"], cache["v"], cache["mamba"]))
+        x = rms_norm(x, params["final_norm"], self.cfg.norm_eps)
+        logits = logits_from_hidden(x, params["lm_head"], self.cfg.vocab_size)
+        return logits, {"k": kc, "v": vc, "mamba": mst, "len": new_len}
+
+
+def _ring_store(cache, tail, t: int, w: int):
+    """Store the last min(t, w) entries at ring slots consistent with
+    absolute positions (slot = pos % w)."""
+    n = tail.shape[2]
+    start = t - n
+    slots = (start + jnp.arange(n)) % w
+    return cache.at[:, :, slots].set(tail.astype(cache.dtype))
+
+
+def _mamba_scan_final(p, x, state):
+    """Like ssm.mamba_scan but seeded with ``state`` and returning the
+    final state (for prefill)."""
+    from .ssm import _mamba_gates
+    u, z, dt, b_, c_, conv_state = _mamba_gates(p, x, conv_state=state["conv"])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dt32, u32 = dt.astype(jnp.float32), u.astype(jnp.float32)
+
+    def step(h, xs):
+        dt_t, u_t, b_t, c_t = xs
+        da_t = jnp.exp(dt_t[..., None] * a)
+        dbu_t = dt_t[..., None] * b_t[:, None, :] * u_t[..., None]
+        h = da_t * h + dbu_t
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    h_final, ys = jax.lax.scan(
+        step, state["h"],
+        (dt32.transpose(1, 0, 2), u32.transpose(1, 0, 2),
+         b_.astype(jnp.float32).transpose(1, 0, 2),
+         c_.astype(jnp.float32).transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2) + u32 * p["d_skip"].astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = qlinear(y, p["out_proj"])
+    return out, {"h": h_final, "conv": conv_state}

@@ -1,0 +1,27 @@
+"""Model registry: build any assigned architecture from its config."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from .dense import DenseLM
+from .hymba import HymbaLM
+from .moe import MoELM
+from .vlm import VLM
+from .whisper import WhisperLM
+from .xlstm import XLSTMLM
+
+FAMILIES = {
+    "dense": DenseLM,
+    "moe": MoELM,
+    "hybrid": HymbaLM,
+    "ssm": XLSTMLM,
+    "audio": WhisperLM,
+    "vlm": VLM,
+}
+
+
+def build_model(cfg: ModelConfig):
+    try:
+        cls = FAMILIES[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown family {cfg.family!r} for {cfg.name}")
+    return cls(cfg)

@@ -1,0 +1,359 @@
+"""Sequence-mixing primitives for the sub-quadratic families.
+
+* :func:`mamba_*`   — selective SSM branch of hymba (scan over time for
+  train/prefill, O(1)-state single step for decode).
+* :func:`mlstm_*`   — xLSTM matrix-LSTM in *chunked* parallel form: exact
+  recurrence, O(T·W) compute, O(dk·dv) carried state.  Gate products are
+  accumulated in log-space; the normalizer is lower-bounded at 1 per the
+  xLSTM paper, which keeps the unstabilized-chunk simplification
+  numerically safe (documented in DESIGN.md).
+* :func:`slstm_*`   — xLSTM scalar-LSTM with exponential gating,
+  stabilizer state m, and head-wise recurrent memory mixing (strictly
+  sequential scan).
+
+All weights quantizable by FAQ are plain (n_in, n_out) matrices routed
+through ``qlinear``; recurrent/gate parameters stay FP (tiny).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, qlinear
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM) — used by hymba's parallel branch
+# ---------------------------------------------------------------------------
+
+def mamba_init(key, d_model: int, d_inner: int, d_state: int, dt_rank: int,
+               d_conv: int, dtype) -> dict:
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], d_model, 2 * d_inner, dtype),
+        "conv_w": (jax.random.normal(ks[1], (d_conv, d_inner)) * 0.1).astype(dtype),
+        "x_proj": dense_init(ks[2], d_inner, dt_rank + 2 * d_state, dtype),
+        "dt_proj": dense_init(ks[3], dt_rank, d_inner, dtype),
+        "dt_bias": jnp.zeros((d_inner,), dtype),
+        "a_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, d_state + 1, dtype=jnp.float32), (d_inner, d_state))).astype(dtype),
+        "d_skip": jnp.ones((d_inner,), dtype),
+        "out_proj": dense_init(ks[4], d_inner, d_model, dtype),
+    }
+
+
+def mamba_axes() -> dict:
+    return {"in_proj": (None, "fsdp", "ff"), "conv_w": (None, None, "ff"),
+            "x_proj": (None, "ff", None), "dt_proj": (None, None, "ff"),
+            "dt_bias": (None, None), "a_log": (None, "ff", None),
+            "d_skip": (None, None), "out_proj": (None, "ff", "fsdp")}
+
+
+def _mamba_gates(p, x, conv_state=None):
+    """Shared front: projections + causal depthwise conv.
+
+    x: (B, T, d_model).  Returns (u, z, dt, B_, C_, new_conv_state) where
+    u is the conv+silu'd SSM input (B, T, d_in)."""
+    d_inner = p["dt_bias"].shape[0]
+    d_state = p["a_log"].shape[1]
+    xz = qlinear(x, p["in_proj"])
+    u, z = jnp.split(xz, 2, axis=-1)
+    k = p["conv_w"].shape[0]
+    if conv_state is None:
+        pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+        new_conv_state = pad[:, -(k - 1):, :] if k > 1 else None
+    else:
+        pad = jnp.concatenate([conv_state.astype(u.dtype), u], axis=1)
+        new_conv_state = pad[:, -(k - 1):, :]
+    u = sum(pad[:, i:i + u.shape[1], :] * p["conv_w"][i].astype(u.dtype)
+            for i in range(k))
+    u = jax.nn.silu(u)
+    proj = qlinear(u, p["x_proj"])
+    dt_rank = proj.shape[-1] - 2 * d_state
+    dt_low, b_, c_ = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(qlinear(dt_low, p["dt_proj"])
+                         + p["dt_bias"].astype(x.dtype))
+    return u, z, dt, b_, c_, new_conv_state
+
+
+def mamba_scan(p, x, collect_cb=None):
+    """Full-sequence selective scan.  x: (B, T, d_model) -> (B, T, d_model).
+
+    The discretized (dA, dB·u) terms are computed *inside* the time step so
+    the O(B·T·d_in·S) tensor is never materialized (memory stays at one
+    timestep's (B, d_in, S))."""
+    u, z, dt, b_, c_, _ = _mamba_gates(p, x)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))            # (d_in, S)
+    dt32, u32 = dt.astype(jnp.float32), u.astype(jnp.float32)
+
+    def step(h, xs):
+        dt_t, u_t, b_t, c_t = xs                             # (B,d_in),(B,d_in),(B,S),(B,S)
+        da_t = jnp.exp(dt_t[..., None] * a)                  # (B,d_in,S)
+        dbu_t = dt_t[..., None] * b_t[:, None, :] * u_t[..., None]
+        h = da_t * h + dbu_t                                 # (B,d_in,S)
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    b, t, d_in = u.shape
+    h0 = jnp.zeros((b, d_in, a.shape[1]), jnp.float32)
+    _, ys = jax.lax.scan(step, h0,
+                         (dt32.transpose(1, 0, 2), u32.transpose(1, 0, 2),
+                          b_.astype(jnp.float32).transpose(1, 0, 2),
+                          c_.astype(jnp.float32).transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2) + u32 * p["d_skip"].astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    if collect_cb is not None:
+        collect_cb("mamba_out", y)
+    return qlinear(y, p["out_proj"])
+
+
+def mamba_step(p, x, state):
+    """Single decode step.  x: (B, 1, d_model); state dict(h, conv)."""
+    u, z, dt, b_, c_, conv_state = _mamba_gates(p, x, conv_state=state["conv"])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dt32, u32 = dt[:, 0].astype(jnp.float32), u[:, 0].astype(jnp.float32)
+    da = jnp.exp(dt32[..., None] * a)
+    dbu = dt32[..., None] * b_[:, 0].astype(jnp.float32)[:, None, :] * u32[..., None]
+    h = da * state["h"] + dbu
+    y = jnp.einsum("bds,bs->bd", h, c_[:, 0].astype(jnp.float32))
+    y = y + u32 * p["d_skip"].astype(jnp.float32)
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(x.dtype)
+    out = qlinear(y[:, None, :], p["out_proj"])
+    return out, {"h": h, "conv": conv_state}
+
+
+def mamba_state_init(batch: int, d_inner: int, d_state: int, d_conv: int,
+                     dtype) -> dict:
+    return {"h": jnp.zeros((batch, d_inner, d_state), jnp.float32),
+            "conv": jnp.zeros((batch, d_conv - 1, d_inner), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix memory) — chunked parallel form
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, d_model: int, d_inner: int, n_heads: int, dtype) -> dict:
+    ks = jax.random.split(key, 7)
+    return {
+        "up_proj": dense_init(ks[0], d_model, 2 * d_inner, dtype),
+        "wq": dense_init(ks[1], d_inner, d_inner, dtype),
+        "wk": dense_init(ks[2], d_inner, d_inner, dtype),
+        "wv": dense_init(ks[3], d_inner, d_inner, dtype),
+        "w_gates": dense_init(ks[4], d_inner, 2 * n_heads, dtype, scale=0.01),
+        "gate_bias": jnp.concatenate([jnp.full((n_heads,), 3.0),
+                                      jnp.zeros((n_heads,))]).astype(dtype),
+        "out_norm": jnp.ones((d_inner,), dtype),
+        "down_proj": dense_init(ks[5], d_inner, d_model, dtype),
+    }
+
+
+def mlstm_axes() -> dict:
+    return {"up_proj": (None, "fsdp", "ff"), "wq": (None, "fsdp", "ff"),
+            "wk": (None, "fsdp", "ff"), "wv": (None, "fsdp", "ff"),
+            "w_gates": (None, None, None), "gate_bias": (None, None),
+            "out_norm": (None, None), "down_proj": (None, "ff", "fsdp")}
+
+
+def _mlstm_qkvg(p, x, n_heads: int):
+    d_inner = p["wq"].shape[0]
+    xz = qlinear(x, p["up_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    q = qlinear(xi, p["wq"])
+    k = qlinear(xi, p["wk"])
+    v = qlinear(xi, p["wv"])
+    gates = (xi @ p["w_gates"].astype(xi.dtype)
+             + p["gate_bias"].astype(xi.dtype)).astype(jnp.float32)
+    fgate, igate = jnp.split(gates, 2, axis=-1)            # (B,T,H)
+    logf = jax.nn.log_sigmoid(fgate)
+    logi = jnp.clip(igate, -10.0, 10.0)
+    b, t, _ = x.shape
+    hd = d_inner // n_heads
+    shp = (b, t, n_heads, hd)
+    return (q.reshape(shp), k.reshape(shp), v.reshape(shp),
+            logf, logi, z, xi)
+
+
+def mlstm_chunked(p, x, n_heads: int, chunk: int = 64, collect_cb=None,
+                  state: Optional[dict] = None, return_state: bool = False):
+    from .common import cost_mode
+    if cost_mode():
+        chunk = x.shape[1]
+    """Exact chunked mLSTM.  x: (B, T, d_model) -> (B, T, d_model).
+
+    Optionally seeds from / returns the (C, n) recurrent state so prefill
+    can reuse the chunk-parallel path."""
+    q, k, v, logf, logi, z, xi = _mlstm_qkvg(p, x, n_heads)
+    b, t, h, hd = q.shape
+    chunk = min(chunk, t)
+    pad = (-t) % chunk
+    if pad:
+        padw = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(a, padw) for a in (q, k, v))
+        logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))
+        logi = jnp.pad(logi, ((0, 0), (0, pad), (0, 0)), constant_values=-1e9)
+    tp = t + pad
+    nc = tp // chunk
+    # (B, nc, W, H, ...) -> scan over nc
+    qc = q.reshape(b, nc, chunk, h, hd).astype(jnp.float32) * hd ** -0.5
+    kc = k.reshape(b, nc, chunk, h, hd).astype(jnp.float32)
+    vc = v.reshape(b, nc, chunk, h, hd).astype(jnp.float32)
+    lfc = logf.reshape(b, nc, chunk, h)
+    lic = logi.reshape(b, nc, chunk, h)
+
+    def step(carry, xs):
+        C, n = carry                                    # (B,H,hd,hd), (B,H,hd)
+        qw, kw, vw, lf, li = xs                         # (B,W,H,*)
+        clf = jnp.cumsum(lf, axis=1)                    # (B,W,H) decay to t
+        # intra-chunk: D[t,s] = exp(clf_t - clf_s + li_s), s <= t
+        dmat = clf[:, :, None, :] - clf[:, None, :, :] + li[:, None, :, :]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        dmat = jnp.where(tri[None, :, :, None], dmat, -jnp.inf)
+        dexp = jnp.exp(jnp.clip(dmat, -60.0, 30.0))     # (B,T,S,H)
+        scores = jnp.einsum("bthd,bshd->btsh", qw, kw) * dexp
+        intra = jnp.einsum("btsh,bshd->bthd", scores, vw)
+        # normalizer n_t = sum_s D_ts k_s (+ carried, decayed)
+        intra_n = jnp.einsum("btsh,bshd->bthd", dexp, kw)
+        # inter-chunk
+        decay_t = jnp.exp(clf)                          # (B,W,H)
+        inter = jnp.einsum("bthd,bhde->bthe", qw, C) * decay_t[..., None]
+        inter_n = jnp.einsum("bthd,bhd->bth", qw, n) * decay_t
+        num = intra + inter
+        den = jnp.abs(jnp.einsum("bthd,bthd->bth", qw, intra_n)
+                      + inter_n)
+        hout = num / jnp.maximum(den, 1.0)[..., None]
+        # carry update
+        tot = clf[:, -1]                                # (B,H)
+        rdec = jnp.exp(jnp.clip(tot[:, None] - clf + li, -60.0, 30.0))
+        C = C * jnp.exp(tot)[..., None, None] + jnp.einsum(
+            "bshd,bshe,bsh->bhde", kw, vw, rdec)
+        n = n * jnp.exp(tot)[..., None] + jnp.einsum(
+            "bshd,bsh->bhd", kw, rdec)
+        return (C, n), hout
+
+    if state is None:
+        c0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, h, hd), jnp.float32)
+    else:
+        c0, n0 = state["C"], state["n"]
+    (c_f, n_f), hs = jax.lax.scan(
+        step, (c0, n0),
+        (qc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+         vc.transpose(1, 0, 2, 3, 4), lfc.transpose(1, 0, 2, 3),
+         lic.transpose(1, 0, 2, 3)))
+    hs = hs.transpose(1, 0, 2, 3, 4).reshape(b, tp, h * hd)[:, :t]
+    y = _mlstm_out(p, hs, z, x.dtype, collect_cb)
+    if return_state:
+        return y, {"C": c_f, "n": n_f}
+    return y
+
+
+def _mlstm_out(p, hs, z, dtype, collect_cb=None):
+    from .common import rms_norm
+    y = rms_norm(hs.astype(jnp.float32), p["out_norm"])
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(dtype)
+    if collect_cb is not None:
+        collect_cb("mlstm_out", y)
+    return qlinear(y, p["down_proj"])
+
+
+def mlstm_step(p, x, state, n_heads: int):
+    """Single decode step with carried (C, n) state.  x: (B, 1, d_model)."""
+    q, k, v, logf, logi, z, _ = _mlstm_qkvg(p, x, n_heads)
+    b, _, h, hd = q.shape
+    qw = q[:, 0].astype(jnp.float32) * hd ** -0.5
+    kw = k[:, 0].astype(jnp.float32)
+    vw = v[:, 0].astype(jnp.float32)
+    f = jnp.exp(logf[:, 0])[..., None, None]            # (B,H,1,1)
+    i = jnp.exp(jnp.clip(logi[:, 0], -60.0, 30.0))[..., None, None]
+    C = state["C"] * f + i * jnp.einsum("bhd,bhe->bhde", kw, vw)
+    n = state["n"] * f[..., 0] + i[..., 0] * kw
+    num = jnp.einsum("bhd,bhde->bhe", qw, C)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", qw, n))
+    hout = (num / jnp.maximum(den, 1.0)[..., None]).reshape(b, 1, h * hd)
+    y = _mlstm_out(p, hout, z, x.dtype)
+    return y, {"C": C, "n": n}
+
+
+def mlstm_state_init(batch: int, n_heads: int, head_dim: int) -> dict:
+    return {"C": jnp.zeros((batch, n_heads, head_dim, head_dim), jnp.float32),
+            "n": jnp.zeros((batch, n_heads, head_dim), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM — exponential-gated scalar LSTM with head-wise memory mixing
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, d_model: int, n_heads: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    hd = d_model // n_heads
+    return {
+        "w_in": dense_init(ks[0], d_model, 4 * d_model, dtype),
+        "r": (jax.random.normal(ks[1], (4, n_heads, hd, hd)) * hd ** -0.5
+              ).astype(dtype),
+        "bias": jnp.zeros((4 * d_model,), dtype),
+        "out_norm": jnp.ones((d_model,), dtype),
+        "out_proj": dense_init(ks[2], d_model, d_model, dtype),
+    }
+
+
+def slstm_axes() -> dict:
+    return {"w_in": (None, "fsdp", None), "r": (None, None, None, None, None),
+            "bias": (None, None), "out_norm": (None, None),
+            "out_proj": (None, "fsdp", None)}
+
+
+def _slstm_cell(p, gx, state, n_heads):
+    """gx: (B, 4, H, hd) pre-activation input contribution."""
+    h, c, n, m = state
+    r = p["r"].astype(jnp.float32)
+    gr = jnp.einsum("bhd,ghde->bghe", h, r)              # (B,4,H,hd)
+    zt, it, ft, ot = [ (gx[:, g] + gr[:, g]) for g in range(4) ]
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + m, it)
+    i_act = jnp.exp(it - m_new)
+    f_act = jnp.exp(logf + m - m_new)
+    c_new = f_act * c + i_act * jnp.tanh(zt)
+    n_new = f_act * n + i_act
+    h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1.0)
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_scan(p, x, n_heads: int, collect_cb=None):
+    """x: (B, T, d_model) -> (B, T, d_model), sequential over T."""
+    b, t, d = x.shape
+    hd = d // n_heads
+    gx = (qlinear(x, p["w_in"]) + p["bias"].astype(x.dtype)).astype(jnp.float32)
+    gx = gx.reshape(b, t, 4, n_heads, hd)
+
+    def step(state, gx_t):
+        new = _slstm_cell(p, gx_t, state, n_heads)
+        return new, new[0]
+
+    z0 = jnp.zeros((b, n_heads, hd), jnp.float32)
+    state0 = (z0, z0, z0, jnp.full_like(z0, -1e9))
+    _, hs = jax.lax.scan(step, state0, gx.transpose(1, 0, 2, 3, 4))
+    hs = hs.transpose(1, 0, 2, 3).reshape(b, t, d)
+    from .common import rms_norm
+    y = rms_norm(hs, p["out_norm"]).astype(x.dtype)
+    if collect_cb is not None:
+        collect_cb("slstm_out", y)
+    return qlinear(y, p["out_proj"])
+
+
+def slstm_step(p, x, state, n_heads: int):
+    b, _, d = x.shape
+    hd = d // n_heads
+    gx = (qlinear(x, p["w_in"]) + p["bias"].astype(x.dtype)).astype(jnp.float32)
+    gx = gx.reshape(b, 4, n_heads, hd)
+    new = _slstm_cell(p, gx, tuple(state), n_heads)
+    hs = new[0].reshape(b, 1, d)
+    from .common import rms_norm
+    y = rms_norm(hs, p["out_norm"]).astype(x.dtype)
+    return qlinear(y, p["out_proj"]), list(new)
+
+
+def slstm_state_init(batch: int, n_heads: int, head_dim: int) -> list:
+    z = jnp.zeros((batch, n_heads, head_dim), jnp.float32)
+    return [z, z, z, jnp.full_like(z, -1e9)]

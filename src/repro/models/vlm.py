@@ -1,0 +1,75 @@
+"""Qwen2-VL backbone: DenseLM + M-RoPE + stub vision frontend.
+
+Per the assignment the vision tower is a STUB: batches carry precomputed
+patch embeddings ``patches (B, P, d_model)`` which are prepended to the
+token embeddings.  M-RoPE is implemented in common.apply_rope (sections
+over head_dim); with the stub's text-style position ids it reduces to
+standard RoPE, which is exactly Qwen2-VL's behaviour for text tokens.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard_hint
+from .common import (embed_tokens, layer_scan,
+                     logits_from_hidden, rms_norm)
+from .dense import DenseLM
+
+
+class VLM(DenseLM):
+    def forward(self, params, batch, collect_stats: bool = False):
+        tokens = batch["tokens"]
+        b, t = tokens.shape
+        x = embed_tokens(params["embed"], tokens).astype(self.dtype)
+        n_patch = 0
+        if "patches" in batch:
+            patches = batch["patches"].astype(self.dtype)
+            n_patch = patches.shape[1]
+            x = jnp.concatenate([patches, x], axis=1)
+        total = n_patch + t
+        positions = self._maybe_mrope(
+            jnp.broadcast_to(jnp.arange(total), (b, total)))
+        x = shard_hint(x, "batch", "seq", "embed")
+
+        def body(x, p):
+            x, _, stats = self._block(p, x, positions, collect_stats)
+            return x, (stats if collect_stats else None)
+
+        if self.cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, stats = layer_scan(body, x, params["blocks"])
+        x = rms_norm(x, params["final_norm"], self.cfg.norm_eps)
+        # logits over token positions only (patch positions carry no labels)
+        x = x[:, n_patch:]
+        logits = logits_from_hidden(x, params["lm_head"], self.cfg.vocab_size)
+        return logits, {"stats": stats if collect_stats else {},
+                        "moe_aux": jnp.zeros((), jnp.float32)}
+
+    def prefill(self, params, tokens, cache, patches=None):
+        b, t = tokens.shape
+        x = embed_tokens(params["embed"], tokens).astype(self.dtype)
+        n_patch = 0
+        if patches is not None:
+            n_patch = patches.shape[1]
+            x = jnp.concatenate([patches.astype(self.dtype), x], axis=1)
+        total = n_patch + t
+        positions = self._maybe_mrope(
+            jnp.broadcast_to(jnp.arange(total), (b, total)))
+        x = shard_hint(x, "batch", "seq", "embed")
+
+        def body(x, xs):
+            p, kc, vc = xs
+            x, (k, v), _ = self._block(p, x, positions, False)
+            kc = jax.lax.dynamic_update_slice(
+                kc, k.transpose(0, 2, 1, 3), (0, 0, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                vc, v.transpose(0, 2, 1, 3), (0, 0, 0, 0))
+            return x, (kc, vc)
+
+        x, (kc, vc) = layer_scan(body, x, (params["blocks"], cache["k"],
+                                             cache["v"]))
+        x = rms_norm(x[:, -1:], params["final_norm"], self.cfg.norm_eps)
+        logits = logits_from_hidden(x, params["lm_head"], self.cfg.vocab_size)
+        return logits, {"k": kc, "v": vc,
+                        "len": jnp.full((b,), total, jnp.int32)}

@@ -1,0 +1,316 @@
+"""Whisper-small: encoder-decoder transformer over stub frame embeddings.
+
+Per the assignment the conv/mel frontend is a STUB: ``input_specs`` (and
+all entry points here) take precomputed frame embeddings
+``frames (B, T_enc, d_model)``.  Faithful to Whisper where it matters for
+system shape: LayerNorm (with bias), GELU MLP, learned positional
+embeddings (no RoPE), bidirectional encoder self-attention, decoder with
+causal self-attention + cross-attention.  FAQ previews run per-stack
+(encoder window over encoder blocks, decoder over decoder blocks).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.stats import site_stat
+from repro.dist.sharding import shard_hint
+from .common import (layer_scan,
+                     chunked_attention, decode_attention, dense_init,
+                     embed_tokens, layer_norm, logits_from_hidden,
+                     padded_vocab, qlinear, stack_layer_params,
+                     update_cache_at)
+
+MAX_DEC_POS = 36864  # learned positional table (covers 32k prefill + decode)
+
+
+class WhisperLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.dtype)
+
+    # -- params ------------------------------------------------------------
+    def _attn_params(self, k, with_cross=False):
+        cfg = self.cfg
+        hd = cfg.head_dim_
+        ks = jax.random.split(k, 8)
+        p = {
+            "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * hd, self.dtype),
+            "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * hd, self.dtype),
+            "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * hd, self.dtype),
+            "wo": dense_init(ks[3], cfg.n_heads * hd, cfg.d_model, self.dtype),
+        }
+        return p
+
+    def _block_init(self, k, cross: bool):
+        cfg = self.cfg
+        ks = jax.random.split(k, 4)
+        d = cfg.d_model
+        p = {
+            "ln1_w": jnp.ones((d,), self.dtype), "ln1_b": jnp.zeros((d,), self.dtype),
+            "attn": self._attn_params(ks[0]),
+            "ln2_w": jnp.ones((d,), self.dtype), "ln2_b": jnp.zeros((d,), self.dtype),
+            "w1": dense_init(ks[1], d, cfg.d_ff, self.dtype),
+            "b1": jnp.zeros((cfg.d_ff,), self.dtype),
+            "w2": dense_init(ks[2], cfg.d_ff, d, self.dtype),
+            "b2": jnp.zeros((d,), self.dtype),
+        }
+        if cross:
+            p["lnx_w"] = jnp.ones((d,), self.dtype)
+            p["lnx_b"] = jnp.zeros((d,), self.dtype)
+            p["cross"] = self._attn_params(ks[3])
+        return p
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        v_pad = padded_vocab(cfg.vocab_size)
+        ks = jax.random.split(key, 6)
+        return {
+            "enc_pos": (jax.random.normal(ks[0], (cfg.encoder_len, cfg.d_model))
+                        * 0.02).astype(self.dtype),
+            "enc_blocks": stack_layer_params(
+                ks[1], cfg.n_encoder_layers, lambda k: self._block_init(k, False)),
+            "enc_norm_w": jnp.ones((cfg.d_model,), self.dtype),
+            "enc_norm_b": jnp.zeros((cfg.d_model,), self.dtype),
+            "embed": dense_init(ks[2], v_pad, cfg.d_model, self.dtype, scale=0.02),
+            "dec_pos": (jax.random.normal(ks[3], (MAX_DEC_POS, cfg.d_model))
+                        * 0.02).astype(self.dtype),
+            "dec_blocks": stack_layer_params(
+                ks[4], cfg.n_layers, lambda k: self._block_init(k, True)),
+            "dec_norm_w": jnp.ones((cfg.d_model,), self.dtype),
+            "dec_norm_b": jnp.zeros((cfg.d_model,), self.dtype),
+            "lm_head": dense_init(ks[5], cfg.d_model, v_pad, self.dtype),
+        }
+
+    def param_axes(self) -> dict:
+        def attn_ax():
+            return {"wq": (None, "fsdp", "heads"), "wk": (None, "fsdp", None),
+                    "wv": (None, "fsdp", None), "wo": (None, "heads", "fsdp")}
+
+        def block_ax(cross):
+            ax = {"ln1_w": (None, None), "ln1_b": (None, None),
+                  "attn": attn_ax(),
+                  "ln2_w": (None, None), "ln2_b": (None, None),
+                  "w1": (None, "fsdp", "ff"), "b1": (None, None),
+                  "w2": (None, "ff", "fsdp"), "b2": (None, None)}
+            if cross:
+                ax["lnx_w"] = (None, None)
+                ax["lnx_b"] = (None, None)
+                ax["cross"] = attn_ax()
+            return ax
+
+        return {
+            "enc_pos": (None, None), "enc_blocks": block_ax(False),
+            "enc_norm_w": (None,), "enc_norm_b": (None,),
+            "embed": ("vocab", "fsdp"), "dec_pos": (None, None),
+            "dec_blocks": block_ax(True),
+            "dec_norm_w": (None,), "dec_norm_b": (None,),
+            "lm_head": ("fsdp", "vocab"),
+        }
+
+    def quant_site_map(self) -> dict:
+        m = {}
+        for w in ("wq", "wk", "wv"):
+            m[("enc_blocks", "attn", w)] = "enc_attn_in"
+            m[("dec_blocks", "attn", w)] = "dec_attn_in"
+        m[("enc_blocks", "attn", "wo")] = "enc_attn_out"
+        m[("dec_blocks", "attn", "wo")] = "dec_attn_out"
+        m[("enc_blocks", "w1")] = "enc_mlp_in"
+        m[("enc_blocks", "w2")] = "enc_mlp_down"
+        m[("dec_blocks", "w1")] = "dec_mlp_in"
+        m[("dec_blocks", "w2")] = "dec_mlp_down"
+        m[("dec_blocks", "cross", "wq")] = "cross_q_in"
+        m[("dec_blocks", "cross", "wk")] = "cross_kv_in"
+        m[("dec_blocks", "cross", "wv")] = "cross_kv_in"
+        m[("dec_blocks", "cross", "wo")] = "cross_out"
+        return m
+
+    # -- attention helpers ---------------------------------------------------
+    def _mha(self, p, xq, xkv, causal, collect, stats, prefix,
+             cache=None, cache_len=None, append=False):
+        cfg = self.cfg
+        hd = cfg.head_dim_
+        b, tq, _ = xq.shape
+        q = qlinear(xq, p["wq"]).reshape(b, tq, cfg.n_heads, hd)
+        if cache is not None and not append:
+            # cross-attention at decode: k/v precomputed in cache
+            k_c, v_c = cache
+            enc_len = jnp.full((b,), k_c.shape[2], jnp.int32)
+            o = decode_attention(q, k_c.transpose(0, 2, 1, 3),
+                                 v_c.transpose(0, 2, 1, 3), enc_len)
+            new_cache = cache
+        else:
+            src = xkv if xkv is not None else xq
+            tk = src.shape[1]
+            k = qlinear(src, p["wk"]).reshape(b, tk, cfg.n_kv_heads, hd)
+            v = qlinear(src, p["wv"]).reshape(b, tk, cfg.n_kv_heads, hd)
+            k = shard_hint(k, "batch", "seq", "kv_heads", None)
+            v = shard_hint(v, "batch", "seq", "kv_heads", None)
+            if cache is not None:
+                k_c, v_c = cache
+                pos = cache_len - 1                      # (B,)
+                k_c = update_cache_at(k_c, k.transpose(0, 2, 1, 3), pos)
+                v_c = update_cache_at(v_c, v.transpose(0, 2, 1, 3), pos)
+                o = decode_attention(q, k_c.transpose(0, 2, 1, 3),
+                                     v_c.transpose(0, 2, 1, 3), cache_len)
+                new_cache = (k_c, v_c)
+            else:
+                o = chunked_attention(q, k, v, causal=causal)
+                new_cache = (k, v)
+        o = o.reshape(b, tq, cfg.n_heads * hd)
+        if collect:
+            stats[prefix + "_out"] = site_stat(o)
+        return qlinear(o, p["wo"]), new_cache
+
+    def _mlp(self, p, x, collect, stats, prefix):
+        h = qlinear(x, p["w1"]) + p["b1"].astype(x.dtype)
+        h = jax.nn.gelu(h)
+        h = shard_hint(h, "batch", "seq", "ff")
+        if collect:
+            stats[prefix + "_down"] = site_stat(h)
+        return qlinear(h, p["w2"]) + p["b2"].astype(x.dtype)
+
+    # -- encoder -------------------------------------------------------------
+    def encode(self, params, frames, collect=False):
+        cfg = self.cfg
+        x = frames.astype(self.dtype) + params["enc_pos"][None, :frames.shape[1]]
+        x = shard_hint(x, "batch", "seq", "embed")
+
+        def body(x, p):
+            stats = {}
+            h = layer_norm(x, p["ln1_w"], p["ln1_b"])
+            if collect:
+                stats["enc_attn_in"] = site_stat(h)
+            a, _ = self._mha(p["attn"], h, None, False, collect, stats,
+                             "enc_attn")
+            x = x + a
+            h = layer_norm(x, p["ln2_w"], p["ln2_b"])
+            if collect:
+                stats["enc_mlp_in"] = site_stat(h)
+            x = x + self._mlp(p, h, collect, stats, "enc_mlp")
+            return x, (stats if collect else None)
+
+        if self.cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, stats = layer_scan(body, x, params["enc_blocks"])
+        x = layer_norm(x, params["enc_norm_w"], params["enc_norm_b"])
+        return x, stats
+
+    # -- decoder -------------------------------------------------------------
+    def _dec_block(self, p, x, memory, collect, stats_out,
+                   self_cache=None, cross_cache=None, cache_len=None):
+        stats = {}
+        h = layer_norm(x, p["ln1_w"], p["ln1_b"])
+        if collect:
+            stats["dec_attn_in"] = site_stat(h)
+        a, new_self = self._mha(p["attn"], h, None, True, collect, stats,
+                                "dec_attn", cache=self_cache,
+                                cache_len=cache_len, append=self_cache is not None)
+        x = x + a
+        h = layer_norm(x, p["lnx_w"], p["lnx_b"])
+        if collect:
+            stats["cross_q_in"] = site_stat(h)
+            stats["cross_kv_in"] = site_stat(memory)
+        a, new_cross = self._mha(p["cross"], h, memory, False, collect, stats,
+                                 "cross", cache=cross_cache)
+        x = x + a
+        h = layer_norm(x, p["ln2_w"], p["ln2_b"])
+        if collect:
+            stats["dec_mlp_in"] = site_stat(h)
+        x = x + self._mlp(p, h, collect, stats, "dec_mlp")
+        stats_out.update(stats)
+        return x, new_self, new_cross
+
+    def forward(self, params, batch, collect_stats: bool = False):
+        """Teacher-forced decoder over encoder memory.  batch:
+        {"tokens": (B, T), "frames": (B, T_enc, d)}."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, t = tokens.shape
+        memory, enc_stats = self.encode(params, batch["frames"], collect_stats)
+        x = embed_tokens(params["embed"], tokens).astype(self.dtype)
+        x = x + params["dec_pos"][None, :t]
+        x = shard_hint(x, "batch", "seq", "embed")
+
+        def body(x, p):
+            stats = {}
+            x, _, _ = self._dec_block(p, x, memory, collect_stats, stats)
+            return x, (stats if collect_stats else None)
+
+        if self.cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, dec_stats = layer_scan(body, x, params["dec_blocks"])
+        x = layer_norm(x, params["dec_norm_w"], params["dec_norm_b"])
+        logits = logits_from_hidden(x, params["lm_head"], cfg.vocab_size)
+        stats = {}
+        if collect_stats:
+            stats.update(enc_stats)
+            stats.update(dec_stats)
+        return logits, {"stats": stats, "moe_aux": jnp.zeros((), jnp.float32)}
+
+    # -- serving -------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        hd = cfg.head_dim_
+        self_shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_len, hd)
+        cross_shape = (cfg.n_layers, batch, cfg.n_kv_heads, cfg.encoder_len, hd)
+        return {"k": jnp.zeros(self_shape, self.dtype),
+                "v": jnp.zeros(self_shape, self.dtype),
+                "xk": jnp.zeros(cross_shape, self.dtype),
+                "xv": jnp.zeros(cross_shape, self.dtype),
+                "len": jnp.zeros((batch,), jnp.int32)}
+
+    def cache_axes(self) -> dict:
+        ax = (None, "batch", "kv_heads", "kv_seq", None)
+        return {"k": ax, "v": ax, "xk": ax, "xv": ax, "len": None}
+
+    def prefill(self, params, tokens, cache, frames=None):
+        cfg = self.cfg
+        b, t = tokens.shape
+        memory, _ = self.encode(params, frames)
+        x = embed_tokens(params["embed"], tokens).astype(self.dtype)
+        x = x + params["dec_pos"][None, :t]
+
+        def body(x, xs):
+            p, kc, vc, xkc, xvc = xs
+            stats = {}
+            x, (k, v), (xk, xv) = self._dec_block(p, x, memory, False, stats)
+            kc = jax.lax.dynamic_update_slice(
+                kc, k.transpose(0, 2, 1, 3), (0, 0, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                vc, v.transpose(0, 2, 1, 3), (0, 0, 0, 0))
+            xkc = xk.transpose(0, 2, 1, 3).astype(xkc.dtype)
+            xvc = xv.transpose(0, 2, 1, 3).astype(xvc.dtype)
+            return x, (kc, vc, xkc, xvc)
+
+        x, (kc, vc, xkc, xvc) = layer_scan(
+            body, x, (params["dec_blocks"], cache["k"], cache["v"],
+                      cache["xk"], cache["xv"]))
+        x = layer_norm(x[:, -1:], params["dec_norm_w"], params["dec_norm_b"])
+        logits = logits_from_hidden(x, params["lm_head"], cfg.vocab_size)
+        return logits, {"k": kc, "v": vc, "xk": xkc, "xv": xvc,
+                        "len": jnp.full((b,), t, jnp.int32)}
+
+    def decode_step(self, params, cache, token, pos=None):
+        cfg = self.cfg
+        b = token.shape[0]
+        new_len = cache["len"] + 1                       # (B,)
+        x = embed_tokens(params["embed"], token).astype(self.dtype)
+        x = x + jnp.take(params["dec_pos"], new_len - 1, axis=0)[:, None]
+
+        def body(x, xs):
+            p, kc, vc, xkc, xvc = xs
+            stats = {}
+            x, (kc, vc), _ = self._dec_block(
+                p, x, None, False, stats, self_cache=(kc, vc),
+                cross_cache=(xkc, xvc), cache_len=new_len)
+            return x, (kc, vc)
+
+        x, (kc, vc) = layer_scan(
+            body, x, (params["dec_blocks"], cache["k"], cache["v"],
+                      cache["xk"], cache["xv"]))
+        x = layer_norm(x, params["dec_norm_w"], params["dec_norm_b"])
+        logits = logits_from_hidden(x, params["lm_head"], cfg.vocab_size)
+        return logits, {"k": kc, "v": vc, "xk": cache["xk"],
+                        "xv": cache["xv"], "len": new_len}

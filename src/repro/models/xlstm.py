@@ -1,0 +1,209 @@
+"""xLSTM LM: mLSTM blocks with a sLSTM block every ``slstm_every`` layers.
+
+Per-layer params hold **both** block types (superset; the unused one per
+layer is small at this scale) so the layer scan stays homogeneous; a
+per-layer flag selects the branch with ``lax.cond``.  Recurrent state
+replaces the KV cache; it is O(1) in sequence length, which is exactly
+why this arch runs the long_500k cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.stats import site_stat
+from repro.dist.sharding import shard_hint
+from .common import (layer_scan,
+                     dense_init, embed_tokens, logits_from_hidden,
+                     padded_vocab, rms_norm, stack_layer_params)
+from .dense import DenseLM
+from . import ssm
+
+
+class XLSTMLM(DenseLM):
+    @property
+    def _d_inner(self) -> int:
+        return self.cfg.ssm_expand * self.cfg.d_model
+
+    def _slstm_flags(self):
+        k = self.cfg.slstm_every
+        return jnp.array([(i % k == k - 1) if k else False
+                          for i in range(self.cfg.n_layers)])
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        v_pad = padded_vocab(cfg.vocab_size)
+        k_emb, k_blocks, k_head = jax.random.split(key, 3)
+
+        def block_init(k):
+            ks = jax.random.split(k, 2)
+            return {
+                "norm": jnp.ones((cfg.d_model,), self.dtype),
+                "mlstm": ssm.mlstm_init(ks[0], cfg.d_model, self._d_inner,
+                                        cfg.n_heads, self.dtype),
+                "slstm": ssm.slstm_init(ks[1], cfg.d_model, cfg.n_heads,
+                                        self.dtype),
+            }
+
+        return {
+            "embed": dense_init(k_emb, v_pad, cfg.d_model, self.dtype, scale=0.02),
+            "blocks": stack_layer_params(k_blocks, cfg.n_layers, block_init),
+            "final_norm": jnp.ones((cfg.d_model,), self.dtype),
+            "lm_head": dense_init(k_head, cfg.d_model, v_pad, self.dtype),
+        }
+
+    def param_axes(self) -> dict:
+        return {
+            "embed": ("vocab", "fsdp"),
+            "blocks": {"norm": (None, None),
+                       "mlstm": ssm.mlstm_axes(),
+                       "slstm": ssm.slstm_axes()},
+            "final_norm": (None,),
+            "lm_head": ("fsdp", "vocab"),
+        }
+
+    def quant_site_map(self) -> dict:
+        return {
+            ("blocks", "mlstm", "up_proj"): "xin",
+            ("blocks", "mlstm", "wq"): "m_qkv",
+            ("blocks", "mlstm", "wk"): "m_qkv",
+            ("blocks", "mlstm", "wv"): "m_qkv",
+            ("blocks", "mlstm", "down_proj"): "m_out",
+            ("blocks", "slstm", "w_in"): "xin",
+            ("blocks", "slstm", "out_proj"): "s_out",
+        }
+
+    # -- forward -------------------------------------------------------------
+    def forward(self, params, batch, collect_stats: bool = False):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, t = tokens.shape
+        x = embed_tokens(params["embed"], tokens).astype(self.dtype)
+        x = shard_hint(x, "batch", "seq", "embed")
+        flags = self._slstm_flags()
+
+        def body(x, xs):
+            p, is_s = xs
+            h = rms_norm(x, p["norm"], cfg.norm_eps)
+            stats = {}
+            if collect_stats:
+                stats["xin"] = site_stat(h)
+                # mLSTM qkv input (xi) + branch outputs for down-proj sites
+                _, _, _, _, _, _, xi = ssm._mlstm_qkvg(p["mlstm"], h, cfg.n_heads)
+                stats["m_qkv"] = site_stat(xi)
+                holder = {}
+                cb = lambda name, val: holder.__setitem__(name, site_stat(val))
+                y_m = ssm.mlstm_chunked(p["mlstm"], h, cfg.n_heads, collect_cb=cb)
+                y_s = ssm.slstm_scan(p["slstm"], h, cfg.n_heads, collect_cb=cb)
+                stats["m_out"] = holder["mlstm_out"]
+                stats["s_out"] = holder["slstm_out"]
+                y = jnp.where(is_s, y_s, y_m)
+            else:
+                y = jax.lax.cond(
+                    is_s,
+                    lambda: ssm.slstm_scan(p["slstm"], h, cfg.n_heads),
+                    lambda: ssm.mlstm_chunked(p["mlstm"], h, cfg.n_heads))
+            x = x + y
+            x = shard_hint(x, "batch", "seq", "embed")
+            return x, (stats if collect_stats else None)
+
+        if self.cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, stats = layer_scan(body, x, (params["blocks"], flags))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = logits_from_hidden(x, params["lm_head"], cfg.vocab_size)
+        return logits, {"stats": stats if collect_stats else {},
+                        "moe_aux": jnp.zeros((), jnp.float32)}
+
+    # -- recurrent "cache" ---------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        L = cfg.n_layers
+        hd_m = self._d_inner // cfg.n_heads
+        hd_s = cfg.d_model // cfg.n_heads
+        bcast = lambda x: jnp.broadcast_to(x, (L,) + x.shape)
+        m_state = jax.tree_util.tree_map(
+            bcast, ssm.mlstm_state_init(batch, cfg.n_heads, hd_m))
+        s_state = [bcast(s) for s in
+                   ssm.slstm_state_init(batch, cfg.n_heads, hd_s)]
+        return {"mlstm": m_state, "slstm": s_state,
+                "len": jnp.zeros((batch,), jnp.int32)}
+
+    def cache_axes(self) -> dict:
+        return {"mlstm": {"C": (None, "batch", "heads", None, None),
+                          "n": (None, "batch", "heads", None)},
+                "slstm": [(None, "batch", "heads", None)] * 4,
+                "len": None}
+
+    def prefill(self, params, tokens, cache):
+        cfg = self.cfg
+        b, t = tokens.shape
+        x = embed_tokens(params["embed"], tokens).astype(self.dtype)
+        flags = self._slstm_flags()
+
+        def body(x, xs):
+            p, is_s, mst, sst = xs
+            h = rms_norm(x, p["norm"], cfg.norm_eps)
+
+            def m_branch():
+                y, new = ssm.mlstm_chunked(p["mlstm"], h, cfg.n_heads,
+                                           state=mst, return_state=True)
+                return y, new, sst
+
+            def s_branch():
+                y, new = _slstm_scan_final(p["slstm"], h, cfg.n_heads, sst)
+                return y, mst, new
+
+            y, mst2, sst2 = jax.lax.cond(is_s, s_branch, m_branch)
+            return x + y, (mst2, sst2)
+
+        x, (mst, sst) = layer_scan(
+            body, x, (params["blocks"], flags, cache["mlstm"], cache["slstm"]))
+        x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+        logits = logits_from_hidden(x, params["lm_head"], cfg.vocab_size)
+        return logits, {"mlstm": mst, "slstm": sst,
+                        "len": jnp.full((b,), t, jnp.int32)}
+
+    def decode_step(self, params, cache, token, pos=None):
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], token).astype(self.dtype)
+        flags = self._slstm_flags()
+
+        def body(x, xs):
+            p, is_s, mst, sst = xs
+            h = rms_norm(x, p["norm"], cfg.norm_eps)
+
+            def m_branch():
+                y, new = ssm.mlstm_step(p["mlstm"], h, mst, cfg.n_heads)
+                return y, new, sst
+
+            def s_branch():
+                y, new = ssm.slstm_step(p["slstm"], h, sst, cfg.n_heads)
+                return y, mst, list(new)
+
+            y, mst2, sst2 = jax.lax.cond(is_s, s_branch, m_branch)
+            return x + y, (mst2, sst2)
+
+        x, (mst, sst) = layer_scan(
+            body, x, (params["blocks"], flags, cache["mlstm"], cache["slstm"]))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = logits_from_hidden(x, params["lm_head"], cfg.vocab_size)
+        return logits, {"mlstm": mst, "slstm": sst, "len": cache["len"] + 1}
+
+
+def _slstm_scan_final(p, x, n_heads, state):
+    from .common import qlinear
+    b, t, d = x.shape
+    hd = d // n_heads
+    gx = (qlinear(x, p["w_in"]) + p["bias"].astype(x.dtype)
+          ).astype(jnp.float32).reshape(b, t, 4, n_heads, hd)
+
+    def step(st, gx_t):
+        new = ssm._slstm_cell(p, gx_t, st, n_heads)
+        return new, new[0]
+
+    final, hs = jax.lax.scan(step, tuple(state), gx.transpose(1, 0, 2, 3, 4))
+    hs = hs.transpose(1, 0, 2, 3).reshape(b, t, d)
+    from .common import qlinear
+    y = rms_norm(hs, p["out_norm"]).astype(x.dtype)
+    return qlinear(y, p["out_proj"]), list(final)

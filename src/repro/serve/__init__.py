@@ -1,0 +1,2 @@
+"""Serving: continuous-batching engine over FAQ-quantized weights."""
+from .engine import Request, ServeEngine

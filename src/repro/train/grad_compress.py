@@ -1,0 +1,45 @@
+"""Int8 error-feedback gradient compression for the data-parallel axis.
+
+Large-scale trick: before the optimizer consumes gradients, each tensor is
+quantized to int8 with a per-tensor scale; the quantization residual is
+kept in an error-feedback buffer and added back next step (Seide et al.,
+1-bit SGD lineage; EF-SGD convergence guarantees).  On a real pod this
+pairs with an int8 all-reduce on the DP axis (XLA performs the reduction
+in the compressed domain when the operand is int8 under shard_map psum);
+here the compress->decompress round-trip is exact to what the wire would
+carry, so convergence behaviour is faithfully reproduced on CPU.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    error: dict  # residual buffer, same structure as grads (fp32)
+
+
+def ef_init(params) -> EFState:
+    return EFState(error=jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def _compress_one(g: jax.Array, err: jax.Array):
+    g32 = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    new_err = g32 - deq
+    return deq, new_err
+
+
+def compress_grads(grads, ef: EFState):
+    """Returns (decompressed grads as the wire would deliver, new EF state)."""
+    out = jax.tree_util.tree_map(_compress_one, grads, ef.error)
+    deq = jax.tree_util.tree_map(lambda t: t[0], out,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree_util.tree_map(lambda t: t[1], out,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+    return deq, EFState(error=err)

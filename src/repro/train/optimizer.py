@@ -1,0 +1,89 @@
+"""AdamW + gradient clipping + LR schedules, on raw pytrees.
+
+(optax is not available in this environment; this implementation follows
+the standard decoupled-weight-decay AdamW.)  Moments live in fp32 by
+default (``moment_dtype="bfloat16"`` halves optimizer memory — used by
+the 405B memory-fit configuration, see EXPERIMENTS.md).  All ops are
+elementwise pytree maps, so optimizer state inherits the parameters'
+sharding (ZeRO-3 for free under pjit).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    moment_dtype: str = "float32"
+
+    def init(self, params) -> AdamWState:
+        dt = jnp.dtype(self.moment_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, dt)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          m=jax.tree_util.tree_map(zeros, params),
+                          v=jax.tree_util.tree_map(zeros, params))
+
+    def update(self, grads, state: AdamWState, params, lr: jax.Array):
+        g32 = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        if self.clip_norm is not None:
+            gnorm = global_norm(g32)
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-12))
+            g32 = jax.tree_util.tree_map(lambda g: g * scale, g32)
+        else:
+            gnorm = global_norm(g32)
+        step = state.step + 1
+        bc1 = 1.0 - self.b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - self.b2 ** step.astype(jnp.float32)
+        dt = jnp.dtype(self.moment_dtype)
+
+        def upd(p, g, m, v):
+            m32 = self.b1 * m.astype(jnp.float32) + (1 - self.b1) * g
+            v32 = self.b2 * v.astype(jnp.float32) + (1 - self.b2) * g * g
+            mh = m32 / bc1
+            vh = v32 / bc2
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            if self.weight_decay and p.ndim >= 2:  # no decay on norms/biases
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * delta
+            return new_p.astype(p.dtype), m32.astype(dt), v32.astype(dt)
+
+        flat = jax.tree_util.tree_map(upd, params, g32, state.m, state.v)
+        new_params = jax.tree_util.tree_map(
+            lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree_util.tree_map(
+            lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree_util.tree_map(
+            lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, AdamWState(step=step, m=new_m, v=new_v), gnorm
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+    return lr

@@ -1,0 +1,95 @@
+"""Train-step factory: loss, microbatch accumulation, mixed precision,
+optional gradient compression — one jitted function per configuration.
+
+The returned ``train_step(params, opt_state, batch) -> (params, opt_state,
+metrics)`` is pjit-ready: all sharding comes from the params/batch
+shardings plus the models' internal ``shard_hint`` constraints.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .grad_compress import EFState, compress_grads, ef_init
+from .optimizer import AdamW, cosine_schedule
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token cross-entropy in fp32.  Padded-vocab logits carry a -1e30
+    mask already (models guarantee it), so the softmax is exact."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moe_aux_coef: float = 0.01
+    microbatches: int = 1          # gradient accumulation
+    moment_dtype: str = "float32"
+    grad_compress: bool = False    # int8 EF compression on the DP axis
+
+
+def make_loss_fn(model, aux_coef: float):
+    def loss_fn(params, batch):
+        logits, aux = model.forward(params, batch)
+        labels = batch["labels"]
+        loss = cross_entropy(logits[:, :-1], labels[:, 1:])
+        total = loss + aux_coef * aux["moe_aux"]
+        return total, {"ce": loss, "moe_aux": aux["moe_aux"]}
+    return loss_fn
+
+
+def make_train_step(model, tcfg: TrainConfig):
+    opt = AdamW(weight_decay=tcfg.weight_decay, clip_norm=tcfg.clip_norm,
+                moment_dtype=tcfg.moment_dtype)
+    lr_fn = cosine_schedule(tcfg.lr, tcfg.warmup, tcfg.total_steps)
+    loss_fn = make_loss_fn(model, tcfg.moe_aux_coef)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch, ef_state=None):
+        if tcfg.microbatches > 1:
+            def micro(carry, mb):
+                acc, metr_acc = carry
+                (loss, metr), grads = grad_fn(params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32) / tcfg.microbatches,
+                    acc, grads)
+                metr_acc = jax.tree_util.tree_map(
+                    lambda a, x: a + x / tcfg.microbatches, metr_acc,
+                    {"loss": loss, **metr})
+                return (acc, metr_acc), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mzero = {"loss": 0.0, "ce": 0.0, "moe_aux": 0.0}
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape((tcfg.microbatches,
+                                     x.shape[0] // tcfg.microbatches)
+                                    + x.shape[1:]), batch)
+            (grads, metrics), _ = jax.lax.scan(micro, (zeros, mzero), mbs)
+        else:
+            (loss, metr), grads = grad_fn(params, batch)
+            metrics = {"loss": loss, **metr}
+
+        if tcfg.grad_compress:
+            grads, ef_state = compress_grads(grads, ef_state)
+
+        # schedule is indexed from 1 (warmup step 0 would be a zero-lr no-op)
+        lr = lr_fn(opt_state.step + 1)
+        params, opt_state, gnorm = opt.update(grads, opt_state, params, lr)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        if tcfg.grad_compress:
+            return params, opt_state, ef_state, metrics
+        return params, opt_state, metrics
+
+    return train_step, opt

@@ -1,0 +1,55 @@
+"""Checkpointing: atomicity, roundtrip, retention, async."""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dist import checkpoint as ckpt
+from repro.train.optimizer import AdamW
+
+
+def _tree():
+    return {"params": {"w": jnp.arange(12.0).reshape(3, 4),
+                       "blocks": {"x": jnp.ones((2, 2), jnp.bfloat16)}},
+            "step": jnp.asarray(7, jnp.int32),
+            "opt": AdamW().init({"w": jnp.zeros((3, 4))})}
+
+
+def test_roundtrip(tmp_path):
+    tree = _tree()
+    path = ckpt.save(str(tmp_path), 7, tree)
+    assert os.path.basename(path) == "step_00000007"
+    restored = ckpt.restore(str(tmp_path), 7, tree)
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(tree["params"]["w"]))
+    assert restored["opt"].step.dtype == tree["opt"].step.dtype
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["blocks"]["x"], np.float32),
+        np.asarray(tree["params"]["blocks"]["x"], np.float32))
+
+
+def test_no_tmp_left_behind(tmp_path):
+    ckpt.save(str(tmp_path), 1, _tree())
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+
+
+def test_latest_and_gc(tmp_path):
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(str(tmp_path), s, _tree(), keep=3)
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    kept = sorted(os.listdir(tmp_path))
+    assert kept == ["step_00000003", "step_00000004", "step_00000005"]
+
+
+def test_async_save(tmp_path):
+    t = ckpt.save_async(str(tmp_path), 9, _tree())
+    ckpt.wait_pending()
+    assert ckpt.latest_step(str(tmp_path)) == 9
+    restored = ckpt.restore(str(tmp_path), 9, _tree())
+    assert int(restored["step"]) == 7  # the saved tree's value
+
+
+def test_restore_missing_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(str(tmp_path), 1, _tree())

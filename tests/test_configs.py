@@ -1,0 +1,43 @@
+"""Assigned-architecture configs must match the assignment exactly."""
+import pytest
+
+from repro.configs import ARCHS
+
+EXPECT = {
+    # name: (L, d_model, H, kv, d_ff, vocab)
+    "stablelm-12b": (40, 5120, 32, 8, 13824, 100352),
+    "llama3-405b": (126, 16384, 128, 8, 53248, 128256),
+    "llama3-8b": (32, 4096, 32, 8, 14336, 128256),
+    "deepseek-coder-33b": (62, 7168, 56, 8, 19200, 32256),
+    "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+    "whisper-small": (12, 768, 12, 12, 3072, 51865),
+    "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+    "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+    "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+    "qwen2-vl-2b": (28, 1536, 12, 2, 8960, 151936),
+}
+
+
+@pytest.mark.parametrize("name", sorted(EXPECT))
+def test_exact_assigned_config(name):
+    cfg = ARCHS[name]
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.d_ff, cfg.vocab_size) == EXPECT[name]
+
+
+def test_family_specifics():
+    assert ARCHS["llama4-maverick-400b-a17b"].n_experts == 128
+    assert ARCHS["llama4-maverick-400b-a17b"].experts_per_token == 1
+    assert ARCHS["qwen2-moe-a2.7b"].n_experts == 60
+    assert ARCHS["qwen2-moe-a2.7b"].experts_per_token == 4
+    assert ARCHS["hymba-1.5b"].ssm_state == 16
+    assert ARCHS["hymba-1.5b"].sliding_window == 1024
+    assert ARCHS["whisper-small"].n_encoder_layers == 12
+    assert ARCHS["qwen2-vl-2b"].mrope_sections == (16, 24, 24)
+    assert ARCHS["xlstm-350m"].slstm_every > 0
+
+
+def test_tiny_configs_build():
+    from repro.models.registry import build_model
+    for name, cfg in ARCHS.items():
+        build_model(cfg.tiny())  # no exceptions

@@ -1,0 +1,116 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import QuantSpec, quantize_groupwise
+from repro.kernels import ref
+from repro.kernels.quant_error import quant_error_pallas
+from repro.kernels.quant_matmul import quant_matmul_pallas
+from repro.kernels.ops import quant_matmul, quant_matmul_experts
+
+
+@pytest.mark.parametrize("m,k,n", [(64, 256, 128), (128, 512, 256),
+                                   (32, 128, 384)])
+@pytest.mark.parametrize("xdtype", [jnp.float32, jnp.bfloat16])
+def test_quant_matmul_kernel_vs_oracle(m, k, n, xdtype):
+    ks = jax.random.split(jax.random.PRNGKey(m + k + n), 2)
+    w = jax.random.normal(ks[0], (k, n))
+    x = jax.random.normal(ks[1], (m, k)).astype(xdtype)
+    spec = QuantSpec(bits=4, group_size=128)
+    qt = quantize_groupwise(w, spec, pack=True)
+    out = quant_matmul_pallas(x.astype(jnp.float32), qt.codes, qt.scale,
+                              qt.zero, bm=min(64, m))
+    expect = ref.quant_matmul_ref(x.astype(jnp.float32), qt)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("blocks", [(128, 128), (256, 128), (128, 64)])
+def test_quant_matmul_block_shapes(blocks):
+    bk, bn = blocks
+    w = jax.random.normal(jax.random.PRNGKey(0), (512, 128))
+    x = jax.random.normal(jax.random.PRNGKey(1), (128, 512))
+    spec = QuantSpec(bits=4, group_size=128)
+    qt = quantize_groupwise(w, spec, pack=True)
+    out = quant_matmul_pallas(x, qt.codes, qt.scale, qt.zero, bk=bk, bn=bn)
+    expect = ref.quant_matmul_ref(x, qt)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-3)
+
+
+@pytest.mark.parametrize("a", [1, 5, 21])
+@pytest.mark.parametrize("sym", [False, True])
+def test_quant_error_kernel_vs_oracle(a, sym):
+    k, n = 256, 128
+    w = jax.random.normal(jax.random.PRNGKey(a), (k, n))
+    scales = jnp.abs(jax.random.normal(jax.random.PRNGKey(a + 1), (a, k))) + 0.5
+    msq = jnp.abs(jax.random.normal(jax.random.PRNGKey(a + 2), (k,)))
+    spec = QuantSpec(bits=4, group_size=128, symmetric=sym)
+    got = quant_error_pallas(w, scales, msq, spec, bk=128, bn=64)
+    expect = ref.quant_error_ref(w, scales, msq, spec)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect),
+                               rtol=1e-4)
+
+
+def test_ops_dispatch_leading_dims():
+    """quant_matmul handles (B, T, k) activations."""
+    w = jax.random.normal(jax.random.PRNGKey(0), (128, 64))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 128))
+    s = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (128,))) + 0.5
+    spec = QuantSpec(bits=4, group_size=64)
+    qt = quantize_groupwise(w, spec, act_scale=s, pack=True)
+    out = quant_matmul(x, qt)
+    expect = ref.quant_matmul_ref(x, qt)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-4)
+    assert out.shape == (2, 8, 64)
+
+
+def test_expert_quant_matmul():
+    e, c, d, f = 4, 8, 64, 32
+    w = jax.random.normal(jax.random.PRNGKey(0), (e, d, f))
+    x = jax.random.normal(jax.random.PRNGKey(1), (e, c, d))
+    spec = QuantSpec(bits=4, group_size=32)
+    qt = jax.vmap(lambda ww: quantize_groupwise(ww, spec, pack=True))(w)
+    out = quant_matmul_experts(x, qt)
+    for i in range(e):
+        sub = jax.tree_util.tree_map(lambda a: a[i], qt)
+        np.testing.assert_allclose(np.asarray(out[i]),
+                                   np.asarray(ref.quant_matmul_ref(x[i], sub)),
+                                   atol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(4, 256, 64), (2, 128, 128), (3, 384, 32)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_vs_oracle(shape, causal):
+    from repro.kernels.flash_attention import (flash_attention_pallas,
+                                               flash_attention_ref)
+    bh, t, hd = shape
+    ks = jax.random.split(jax.random.PRNGKey(t + hd), 3)
+    q = jax.random.normal(ks[0], (bh, t, hd))
+    k = jax.random.normal(ks[1], (bh, t, hd))
+    v = jax.random.normal(ks[2], (bh, t, hd))
+    out = flash_attention_pallas(q, k, v, causal=causal)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_flash_attention_matches_chunked_model_path():
+    """Kernel agrees with the model-side chunked attention (GQA layout)."""
+    from repro.kernels.flash_attention import flash_attention_pallas
+    from repro.models.common import chunked_attention, _repeat_kv
+    b, t, h, kh, hd = 2, 256, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, t, h, hd))
+    k = jax.random.normal(ks[1], (b, t, kh, hd))
+    v = jax.random.normal(ks[2], (b, t, kh, hd))
+    ref = chunked_attention(q, k, v, causal=True, chunk=64)
+    kr = _repeat_kv(k, h // kh)
+    vr = _repeat_kv(v, h // kh)
+    out = flash_attention_pallas(
+        q.transpose(0, 2, 1, 3).reshape(b * h, t, hd),
+        kr.transpose(0, 2, 1, 3).reshape(b * h, t, hd),
+        vr.transpose(0, 2, 1, 3).reshape(b * h, t, hd), causal=True)
+    out = out.reshape(b, h, t, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)

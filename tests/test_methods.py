@@ -1,0 +1,84 @@
+"""RTN/AWQ/FAQ method-level tests (paper Eq. 4, 5, 8)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import QuantSpec
+from repro.core.methods import (candidate_scale, full_search_faq, fuse_stats,
+                                normalize_scale, search_alpha,
+                                site_stat_for_method, window_preview)
+
+
+def test_window_preview_exact():
+    stats = jnp.arange(20, dtype=jnp.float32).reshape(5, 4)
+    pvw = window_preview(stats, 3)
+    # layer 0: mean(rows 1..3); layer 3: row 4; layer 4 (last): itself
+    np.testing.assert_allclose(pvw[0], np.mean(np.arange(20).reshape(5, 4)[1:4], 0))
+    np.testing.assert_allclose(pvw[3], stats[4])
+    np.testing.assert_allclose(pvw[4], stats[4])
+
+
+def test_window_clamps_at_end():
+    stats = jax.random.uniform(jax.random.PRNGKey(0), (6, 8)) + 0.1
+    for w in (1, 2, 3, 10):
+        pvw = window_preview(stats, w)
+        assert pvw.shape == stats.shape
+        np.testing.assert_allclose(pvw[-1], stats[-1], rtol=1e-6)
+
+
+def test_fuse_gamma_limits():
+    stats = jax.random.uniform(jax.random.PRNGKey(1), (4, 8)) + 0.1
+    # gamma=1 -> pure current-layer (AWQ limit)
+    np.testing.assert_allclose(fuse_stats(stats, 1.0, 3), stats, rtol=1e-6)
+    pvw = window_preview(stats, 3)
+    np.testing.assert_allclose(fuse_stats(stats, 0.0, 3), pvw, rtol=1e-6)
+
+
+def test_normalize_scale_invariance():
+    """Scaling the statistic by a constant must not change the search."""
+    a = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (64,))) + 0.1
+    s1 = candidate_scale(a, 0.5)
+    s2 = candidate_scale(a * 17.0, 0.5)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4)
+
+
+def test_search_alpha_beats_or_ties_rtn():
+    """The searched scale's loss can never exceed the RTN loss, since
+    alpha=0 (s=1) is in the grid."""
+    for seed in range(6):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        w = jax.random.normal(ks[0], (128, 64))
+        chan = jnp.exp(jax.random.normal(ks[1], (128,)))
+        sample = jax.random.normal(ks[2], (32, 128)) * chan
+        a = jnp.mean(jnp.abs(sample), axis=0)
+        res = search_alpha(w, a, QuantSpec(bits=3, group_size=64),
+                           sample=sample)
+        assert float(res.loss) <= float(res.rtn_loss) + 1e-6
+
+
+def test_method_stats_dispatch():
+    stats = jnp.abs(jax.random.normal(jax.random.PRNGKey(3), (4, 16))) + 0.1
+    assert site_stat_for_method("rtn", stats) is None
+    np.testing.assert_allclose(site_stat_for_method("awq", stats), stats)
+    faq = site_stat_for_method("faq", stats, gamma=0.85, window=3)
+    assert faq.shape == stats.shape
+    assert not np.allclose(np.asarray(faq)[:-1], np.asarray(stats)[:-1])
+    with pytest.raises(ValueError):
+        site_stat_for_method("gptq", stats)
+
+
+def test_full_search_no_worse_than_presearched():
+    """Eq. 8's joint search must achieve <= the pre-searched config loss."""
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    L, n, m = 3, 128, 32
+    w = jax.random.normal(ks[0], (L, n, m))
+    stats = jnp.abs(jax.random.normal(ks[1], (L, n))) + 0.1
+    msq = stats ** 2
+    spec = QuantSpec(bits=3, group_size=64)
+    best = full_search_faq(w, stats, spec, mean_sq=msq)
+    # presearched config loss per layer
+    fused = fuse_stats(stats, 0.85, 3)
+    pre = jax.vmap(lambda ww, aa, mm: search_alpha(ww, aa, spec, mean_sq=mm)
+                   )(w, fused, msq)
+    assert np.all(np.asarray(best["loss"]) <= np.asarray(pre.loss) + 1e-6)

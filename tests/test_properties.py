@@ -1,0 +1,96 @@
+"""Seeded randomized property sweeps (hypothesis is not installed in this
+environment; these are explicit-seed property tests over the same
+invariants)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import QuantSpec, quant_dequant, quantize_groupwise
+from repro.core.methods import (candidate_scale, fuse_stats, normalize_scale,
+                                window_preview)
+from repro.core.quantizer import dequantize_groupwise, numpy_quant_reference
+
+SEEDS = range(12)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_quant_idempotent(seed):
+    """Quantizing an already-quantized weight is a fixed point."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(64, 16)), jnp.float32)
+    spec = QuantSpec(bits=4, group_size=32)
+    once = quant_dequant(w, spec)
+    twice = quant_dequant(once, spec)
+    np.testing.assert_allclose(np.asarray(twice), np.asarray(once), atol=2e-5)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_scale_invariance_of_fused_search_stat(seed):
+    """Global rescaling of activations must not change candidate scales."""
+    rng = np.random.default_rng(seed)
+    stats = jnp.asarray(np.abs(rng.normal(size=(5, 32))) + 0.05)
+    fused = fuse_stats(stats, 0.85, 3)
+    s1 = candidate_scale(fused[2], 0.45)
+    s2 = candidate_scale(fused[2] * 123.0, 0.45)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_window_mean_within_bounds(seed):
+    """Preview is a mean -> bounded by min/max of the window."""
+    rng = np.random.default_rng(seed)
+    stats = jnp.asarray(np.abs(rng.normal(size=(8, 16))) + 0.01)
+    pvw = np.asarray(window_preview(stats, 3))
+    s = np.asarray(stats)
+    for l in range(7):
+        hi = min(l + 3, 7)
+        w = s[l + 1: hi + 1]
+        assert (pvw[l] >= w.min(0) - 1e-6).all()
+        assert (pvw[l] <= w.max(0) + 1e-6).all()
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_monotone_bits(seed):
+    """More bits can only reduce (weighted) reconstruction error."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(128, 32)), jnp.float32)
+    errs = []
+    for bits in (2, 3, 4, 8):
+        wh = quant_dequant(w, QuantSpec(bits=bits, group_size=64))
+        errs.append(float(jnp.linalg.norm(wh - w)))
+    assert errs == sorted(errs, reverse=True)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_smaller_groups_no_worse(seed):
+    """Finer groups can only reduce quantization error (more params)."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(256, 16)) *
+                    np.exp(rng.normal(size=(256, 1))), jnp.float32)
+    e_small = float(jnp.linalg.norm(
+        quant_dequant(w, QuantSpec(bits=3, group_size=32)) - w))
+    e_big = float(jnp.linalg.norm(
+        quant_dequant(w, QuantSpec(bits=3, group_size=256)) - w))
+    assert e_small <= e_big + 1e-5
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_normalize_scale_geo_mean_one(seed):
+    rng = np.random.default_rng(seed)
+    s = normalize_scale(jnp.asarray(np.abs(rng.normal(size=(64,))) + 0.01))
+    geo = float(jnp.exp(jnp.mean(jnp.log(s))))
+    assert abs(geo - 1.0) < 1e-3
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_jnp_numpy_agree_random_specs(seed):
+    rng = np.random.default_rng(seed)
+    bits = int(rng.choice([3, 4, 8]))
+    group = int(rng.choice([16, 32, 64]))
+    sym = bool(rng.choice([True, False]))
+    w = rng.normal(size=(128, 8)).astype(np.float32)
+    spec = QuantSpec(bits=bits, group_size=group, symmetric=sym)
+    np.testing.assert_allclose(
+        np.asarray(quant_dequant(jnp.asarray(w), spec)),
+        numpy_quant_reference(w, spec), atol=1e-4)

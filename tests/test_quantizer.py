@@ -1,0 +1,89 @@
+"""Unit + property tests for the group-wise quantizer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantizer import (QuantSpec, dequantize_groupwise,
+                                  effective_group_size, numpy_quant_reference,
+                                  pack_codes, quant_dequant,
+                                  quantize_groupwise, storage_bits,
+                                  unpack_codes)
+
+
+@pytest.mark.parametrize("bits", [3, 4, 8])
+@pytest.mark.parametrize("symmetric", [False, True])
+@pytest.mark.parametrize("group", [32, 128, -1])
+def test_roundtrip_error_bound(bits, symmetric, group):
+    """Reconstruction error per element is bounded by half a step."""
+    w = jax.random.normal(jax.random.PRNGKey(0), (256, 64))
+    spec = QuantSpec(bits=bits, group_size=group, symmetric=symmetric)
+    qt = quantize_groupwise(w, spec)
+    w_hat = dequantize_groupwise(qt)
+    g = 256 // qt.scale.shape[0]
+    step = jnp.repeat(qt.scale, g, axis=0)
+    # away from clip boundaries the error is <= step/2 (+fp slack)
+    err = jnp.abs(w_hat - w)
+    assert float(jnp.mean(err <= step * 0.5 + 1e-6)) > 0.99
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_matches_numpy_oracle(seed):
+    w = np.random.default_rng(seed).normal(size=(128, 32)).astype(np.float32)
+    spec = QuantSpec(bits=4, group_size=64)
+    ref = numpy_quant_reference(w, spec)
+    got = np.asarray(quant_dequant(jnp.asarray(w), spec))
+    np.testing.assert_allclose(got, ref, atol=1e-5)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_oracle_with_act_scale(seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(128, 32)).astype(np.float32)
+    s = np.abs(rng.normal(size=(128,))).astype(np.float32) + 0.3
+    spec = QuantSpec(bits=3, group_size=32)
+    ref = numpy_quant_reference(w, spec, act_scale=s)
+    got = np.asarray(quant_dequant(jnp.asarray(w), spec,
+                                   act_scale=jnp.asarray(s)))
+    np.testing.assert_allclose(got, ref, atol=1e-4)
+
+
+def test_pack_unpack_roundtrip():
+    for seed in range(8):
+        codes = jax.random.randint(jax.random.PRNGKey(seed), (64, 16),
+                                   0, 16).astype(jnp.uint8)
+        packed = pack_codes(codes, 4)
+        assert packed.shape == (32, 16)
+        un = unpack_codes(packed, 4, 64)
+        assert jnp.array_equal(un, codes)
+
+
+def test_packed_equals_unpacked_dequant():
+    w = jax.random.normal(jax.random.PRNGKey(1), (256, 64))
+    spec = QuantSpec(bits=4, group_size=128)
+    a = dequantize_groupwise(quantize_groupwise(w, spec, pack=False))
+    b = dequantize_groupwise(quantize_groupwise(w, spec, pack=True))
+    assert jnp.array_equal(a, b)
+
+
+def test_effective_group_size():
+    assert effective_group_size(1600, 128) == 100
+    assert effective_group_size(4096, 128) == 128
+    assert effective_group_size(100, 128) == 100
+    assert effective_group_size(7, 128) == 7
+    assert effective_group_size(128, -1) == 128
+
+
+def test_exact_zero_preserved_asymmetric():
+    """Asymmetric quantization must represent 0 exactly (zero-point)."""
+    w = jax.random.normal(jax.random.PRNGKey(2), (128, 8))
+    w = w.at[3].set(0.0)
+    got = quant_dequant(w, QuantSpec(bits=4, group_size=64))
+    assert float(jnp.max(jnp.abs(got[3]))) < 1e-6
+
+
+def test_storage_bits_packed():
+    w = jax.random.normal(jax.random.PRNGKey(3), (1024, 1024))
+    qt = quantize_groupwise(w, QuantSpec(bits=4, group_size=128), pack=True)
+    bits = storage_bits(qt)
+    assert 4.0 < bits < 5.0  # 4 bits + group metadata overhead
