@@ -117,11 +117,17 @@ def window_preview(stats: jax.Array, window: int) -> jax.Array:
     then degenerates to plain AWQ there — see DESIGN.md §1).
     """
     L = stats.shape[0]
-    csum = jnp.concatenate([jnp.zeros_like(stats[:1]), jnp.cumsum(stats, axis=0)], axis=0)
     l = jnp.arange(L)
     hi = jnp.minimum(l + window, L - 1)          # inclusive upper index
     count = (hi - l).astype(stats.dtype)          # 0 for the last block
-    window_sum = csum[hi + 1] - csum[l + 1]
+    # Direct shift-and-mask sum over the (small, j <= 4) window — a cumsum
+    # difference here loses bits to cancellation, pushing the "mean" outside
+    # the window's [min, max]; this form is exact for window=1.
+    window_sum = jnp.zeros_like(stats)
+    for j in range(1, window + 1):
+        shifted = jnp.roll(stats, -j, axis=0)     # row l holds stats[l+j]
+        in_window = (l + j <= hi)[:, None]
+        window_sum = window_sum + jnp.where(in_window, shifted, 0.0)
     safe = jnp.maximum(count, 1.0)[:, None]
     pvw = window_sum / safe
     return jnp.where(count[:, None] > 0, pvw, stats)

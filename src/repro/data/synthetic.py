@@ -71,9 +71,13 @@ class SyntheticLM:
     def batch(self, step: int, batch_size: int, length: int,
               host: int = 0, n_hosts: int = 1,
               first_token_range: Optional[Tuple[int, int]] = None) -> dict:
-        """Batch for a global step; host h materializes its shard only."""
-        base = step * batch_size * n_hosts
-        idx = [base + j * n_hosts + host for j in range(batch_size)]
+        """Batch for a global step; host h materializes its shard only.
+
+        Index layout is delegated to ``dist.elastic.resume_batch_indices``
+        (the single source of truth), so elastic restarts resume the exact
+        same global sample stream by construction."""
+        from repro.dist.elastic import resume_batch_indices
+        idx = resume_batch_indices(step, batch_size, host, n_hosts)
         toks = np.stack([self.sequence(i, length, first_token_range)
                          for i in idx])
         return {"tokens": toks, "labels": toks}

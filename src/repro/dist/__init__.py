@@ -1,0 +1,12 @@
+"""Distribution subsystem: sharding rules, checkpointing, elastic re-mesh.
+
+Three small, orthogonal modules (contracts in DESIGN.md §6):
+
+* :mod:`repro.dist.sharding`   — logical-axis -> mesh-axis rule tables and
+  the ``shard_hint`` / ``axis_rules`` context machinery every model uses.
+* :mod:`repro.dist.checkpoint` — atomic directory checkpoints with async
+  writes, retention GC and dtype-preserving restore.
+* :mod:`repro.dist.elastic`    — mesh re-planning after host loss and
+  deterministic data-pipeline resume indices.
+"""
+from . import checkpoint, elastic, sharding  # noqa: F401

@@ -1,0 +1,41 @@
+"""Shared pytree key-path walking for prefix/annotation trees.
+
+Both :mod:`repro.dist.sharding` (logical-axis annotation trees) and
+:mod:`repro.dist.checkpoint` (NamedSharding prefix trees) walk a
+user-supplied side tree along ``tree_flatten_with_path`` key paths; this
+is the one implementation of the key normalization and descent.
+"""
+from __future__ import annotations
+
+
+def path_key(entry):
+    """The plain dict-key / index / field-name behind a pytree key entry
+    (DictKey.key, SequenceKey.idx, FlattenedIndexKey.key, GetAttrKey.name
+    — or the entry itself for plain keys)."""
+    for attr in ("key", "idx", "name"):
+        if hasattr(entry, attr):
+            return getattr(entry, attr)
+    return entry
+
+
+def descend(node, path, is_leaf):
+    """Walk ``node`` along ``path``, stopping early at ``is_leaf`` nodes.
+
+    Returns the reached node — the caller decides whether it is a valid
+    leaf — or ``None`` when the path leaves the tree (missing key, wrong
+    container kind), which every caller treats as 'no annotation'.
+    """
+    for k in path:
+        if node is None or is_leaf(node):
+            break
+        key = path_key(k)
+        if isinstance(node, dict):
+            node = node.get(key)
+        elif isinstance(node, (list, tuple)):
+            node = node[key] if isinstance(key, int) \
+                and 0 <= key < len(node) else None
+        elif isinstance(key, str):
+            node = getattr(node, key, None)
+        else:
+            return None
+    return node

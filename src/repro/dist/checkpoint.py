@@ -1,0 +1,421 @@
+"""Atomic directory checkpoints for arbitrary pytrees.
+
+Layout: ``<dir>/step_XXXXXXXX/{manifest.json, data.bin}``.  Writes land
+in a per-writer ``step_XXXXXXXX.<host>-<pid>-<n>.tmp`` scratch directory
+and are renamed into place, so a reader (or :func:`latest_step`) never
+observes a partial checkpoint, a crash mid-save leaves the previous
+step as the newest complete one, and concurrent saves of the same step
+cannot interleave their files (last completed rename wins).  Any save or
+:func:`latest_step` sweeps crashed writers' ``.tmp`` dirs — recognized
+by a dead pid of *this* host in the name — so they cannot leak disk, and
+*recovers* (promotes) a dead writer's tmp that holds the only complete
+copy of its step; live writers (this process's registry, this host's
+live pids) and other hosts' tmps are never touched.  In multi-process
+runs only process 0 writes (the host snapshot is a collective) —
+DESIGN.md §6.2.  Restore is *target-directed*: the caller supplies a
+pytree of the expected structure and gets the same structure back with
+saved values — dtypes are taken from the manifest (bf16 params and int32
+counters round-trip exactly), and optimizer NamedTuples re-form because
+the target's treedef is reused rather than serialized.
+
+``save_async`` snapshots device arrays to host synchronously (so the
+training loop may donate/overwrite them immediately) and performs the
+file I/O on a background thread; ``wait_pending`` joins all outstanding
+writers and re-raises the first failure.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import re
+import shutil
+import socket
+import threading
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import _tree
+
+_STEP_RE = re.compile(r"^step_(\d{8,})$")   # 8+: steps >= 1e8 grow digits
+# writer tmps are step_XXXXXXXX.<host>-<pid>-<n>.tmp; <host> is sanitized
+# to contain no "-" so the parse is unambiguous.  A bare step_XXXXXXXX.tmp
+# (no owner info, e.g. pre-upgrade leftovers) is always reclaimable.
+_TMP_RE = re.compile(r"^(step_\d{8,})(?:\.(.+)-(\d+)-\d+)?\.tmp$")
+_RAW_HOST = socket.gethostname() or "host"
+# sanitized name + short hash: sanitization maps e.g. "gpu-01" and "gpu_01"
+# to the same string, and a collision would let one host pid-check (and
+# sweep) another's live tmp on a shared filesystem
+_HOST = (re.sub(r"[^A-Za-z0-9_]", "_", _RAW_HOST) + "_"
+         + hashlib.md5(_RAW_HOST.encode()).hexdigest()[:8])
+_PENDING: list = []
+_PENDING_LOCK = threading.Lock()
+_ACTIVE_TMPS: set = set()
+_ACTIVE_LOCK = threading.Lock()
+_TMP_COUNTER = iter(range(1 << 62))
+
+
+def _step_name(step: int) -> str:
+    return f"step_{step:08d}"
+
+
+def _leaf_key(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+def _check_keep(keep: Optional[int]):
+    if keep is not None and keep < 1:
+        raise ValueError(f"keep must be >= 1 (got {keep}); the checkpoint "
+                         f"just written always survives GC")
+
+
+def _host_tree(tree):
+    """Snapshot every leaf to host memory.  Leaves sharded across
+    *processes* are allgathered first (a collective — every process must
+    call this), so the snapshot is the full global value; process 0 then
+    does the writing (see save/save_async)."""
+    def get(x):
+        if isinstance(x, jax.Array) and not x.is_fully_addressable:
+            from jax.experimental import multihost_utils
+            x = multihost_utils.process_allgather(x, tiled=True)
+        return np.asarray(jax.device_get(x))
+
+    return jax.tree_util.tree_map(get, tree)
+
+
+def _pid_alive(pid: int) -> bool:
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except PermissionError:
+        return True           # exists, different user
+    return True
+
+
+def _proc_start_time(pid: int) -> Optional[float]:
+    """Unix epoch start time of ``pid`` (Linux /proc; None if unknowable)."""
+    try:
+        with open(f"/proc/{pid}/stat") as f:
+            # starttime is field 22 (1-indexed); split after the ')' that
+            # ends comm so spaces in the process name can't shift fields
+            ticks = int(f.read().rsplit(")", 1)[1].split()[19])
+        with open("/proc/stat") as f:
+            btime = next(int(line.split()[1]) for line in f
+                         if line.startswith("btime"))
+        return btime + ticks / os.sysconf("SC_CLK_TCK")
+    except (OSError, ValueError, IndexError, StopIteration):
+        return None
+
+
+def _writer_alive(pid: int, tmp_mtime: float) -> bool:
+    """Is the tmp's recorded writer pid still that writer?  A pid that is
+    alive but *started after the tmp was created* was recycled (e.g.
+    after a reboot) — the original writer is dead and its tmp is fair
+    game for sweep/recovery."""
+    if not _pid_alive(pid):
+        return False
+    start = _proc_start_time(pid)
+    return start is None or start <= tmp_mtime + 1.0  # 1s clock slack
+
+
+def _reclaim_stale_tmps(ckpt_dir: str):
+    """Remove crashed-save scratch dirs for *any* step (they are full
+    checkpoint size; leaking them until that exact step is re-saved could
+    fill the disk) — but never an in-flight writer's tmp:
+
+    * this process's live writers are registered in ``_ACTIVE_TMPS``
+      *before* their mkdir, so membership is checked per-path at deletion
+      time (no snapshot TOCTOU);
+    * this host's other processes are recognized by the pid encoded in
+      the tmp name and skipped while that pid is alive;
+    * other hosts' tmps (shared checkpoint filesystem) are never touched
+      — a machine-local pid check says nothing about them."""
+    for d in os.listdir(ckpt_dir):
+        m = _TMP_RE.match(d)
+        if not m:
+            continue
+        path = os.path.join(ckpt_dir, d)
+        with _ACTIVE_LOCK:
+            if path in _ACTIVE_TMPS:
+                continue
+        host, pid = m.group(2), m.group(3)
+        if host is not None:
+            if host != _HOST:
+                continue       # another machine's writer: liveness of its
+                               # pid is unknowable here, never touch it
+            pid = int(pid)
+            try:
+                mtime = os.stat(path).st_mtime
+            except OSError:
+                continue       # vanished under us (racing reclaimer)
+            if pid != os.getpid() and _writer_alive(pid, mtime):
+                continue
+        # A dead writer's tmp that holds a *complete* checkpoint is a
+        # retired-aside dir from a re-save that crashed between its two
+        # renames (or a crash after the manifest landed).  If the step has
+        # no final dir, that tmp is the only surviving copy — recover it
+        # instead of sweeping it.
+        final = os.path.join(ckpt_dir, m.group(1))
+        if not os.path.isdir(final) and _manifest_ok(path):
+            try:
+                os.replace(path, final)
+                continue
+            except OSError:
+                pass           # lost the race to another recoverer
+        shutil.rmtree(path, ignore_errors=True)
+
+
+def _manifest_ok(path: str) -> bool:
+    """True iff ``path`` holds a parseable manifest (a kill mid-manifest
+    write must not let recovery promote a corrupt checkpoint)."""
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            json.load(f)
+        return True
+    except (OSError, ValueError):
+        return False
+
+
+def _write_dir(ckpt_dir: str, step: int, host_tree, keep: Optional[int]):
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, _step_name(step))
+    _reclaim_stale_tmps(ckpt_dir)
+    # per-writer unique tmp: concurrent saves of the same step never share
+    # a scratch directory, so a complete checkpoint is always one writer's
+    # whole output (last os.replace wins)
+    tmp = f"{final}.{_HOST}-{os.getpid()}-{next(_TMP_COUNTER)}.tmp"
+    with _ACTIVE_LOCK:
+        _ACTIVE_TMPS.add(tmp)
+    os.makedirs(tmp)
+    try:
+        leaves = jax.tree_util.tree_flatten_with_path(host_tree)[0]
+        manifest = []
+        with open(os.path.join(tmp, "data.bin"), "wb") as f:
+            offset = 0
+            for path, leaf in leaves:
+                arr = np.asarray(leaf)
+                buf = arr.tobytes()
+                f.write(buf)
+                manifest.append({"key": _leaf_key(path),
+                                 "dtype": str(arr.dtype),
+                                 "shape": list(arr.shape),
+                                 "offset": offset,
+                                 "nbytes": len(buf)})
+                offset += len(buf)
+            f.flush()
+            os.fsync(f.fileno())
+        # manifest lands via its own write-then-rename so a kill mid-write
+        # leaves only manifest.json.part — a scratch dir counts as a
+        # complete checkpoint iff manifest.json exists *and parses*
+        with open(os.path.join(tmp, "manifest.json.part"), "w") as f:
+            json.dump({"step": step, "leaves": manifest}, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(os.path.join(tmp, "manifest.json.part"),
+                   os.path.join(tmp, "manifest.json"))
+        last_err = None
+        for _ in range(3):
+            try:
+                if os.path.isdir(final):
+                    # never destroy a complete checkpoint before its
+                    # replacement is in place: retire it aside with an
+                    # atomic rename, promote, then drop the retired copy
+                    # (a crash between the renames leaves the retired dir
+                    # as a reclaimable .tmp, not a lost step)
+                    retired = f"{final}.{_HOST}-{os.getpid()}-{next(_TMP_COUNTER)}.tmp"
+                    with _ACTIVE_LOCK:
+                        _ACTIVE_TMPS.add(retired)
+                    try:
+                        os.replace(final, retired)
+                        try:
+                            os.replace(tmp, final)
+                        except OSError:
+                            os.replace(retired, final)   # roll back
+                            raise
+                        shutil.rmtree(retired, ignore_errors=True)
+                    finally:
+                        with _ACTIVE_LOCK:
+                            _ACTIVE_TMPS.discard(retired)
+                else:
+                    os.replace(tmp, final)
+                last_err = None
+                break
+            except OSError as e:   # racing promoter of the same step
+                last_err = e
+        if last_err is not None:
+            raise last_err
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    finally:
+        with _ACTIVE_LOCK:
+            _ACTIVE_TMPS.discard(tmp)
+    if keep is not None:
+        _gc(ckpt_dir, keep, step)
+    return final
+
+
+def save(ckpt_dir: str, step: int, tree, *, keep: Optional[int] = None) -> str:
+    """Atomically write ``tree`` as ``<ckpt_dir>/step_XXXXXXXX``.
+
+    ``keep`` (optional) retains only the newest ``keep`` complete
+    checkpoints after a successful write.  Returns the checkpoint path.
+
+    Multi-process runs: every process must call this (the host snapshot
+    allgathers process-sharded leaves, a collective), but only process 0
+    touches the filesystem — one writer per checkpoint dir.
+    """
+    _check_keep(keep)
+    host_tree = _host_tree(tree)
+    if jax.process_index() != 0:
+        return os.path.join(ckpt_dir, _step_name(step))
+    return _write_dir(ckpt_dir, step, host_tree, keep)
+
+
+def save_async(ckpt_dir: str, step: int, tree,
+               *, keep: Optional[int] = None) -> threading.Thread:
+    """Like :func:`save` but the file I/O runs on a background thread.
+
+    The device->host snapshot happens before returning, so callers may
+    mutate/donate the tree immediately.  Join via :func:`wait_pending`.
+    """
+    _check_keep(keep)
+    host_tree = _host_tree(tree)
+    if jax.process_index() != 0:         # see save(): process 0 writes
+        t = threading.Thread(target=lambda: None, daemon=True)
+        t.start()
+        return t
+    record = {"exc": None}
+
+    def work():
+        try:
+            _write_dir(ckpt_dir, step, host_tree, keep)
+        except BaseException as e:  # re-raised by wait_pending
+            record["exc"] = e
+
+    t = threading.Thread(target=work, daemon=True,
+                         name=f"ckpt-save-{step}")
+    # register and start under one lock: wait_pending swaps the list under
+    # the same lock, so it can never join a not-yet-started thread
+    with _PENDING_LOCK:
+        _PENDING.append((t, record))
+        t.start()
+    return t
+
+
+def wait_pending():
+    """Block until every outstanding :func:`save_async` finishes; re-raise
+    the first writer failure."""
+    with _PENDING_LOCK:
+        pending, _PENDING[:] = _PENDING[:], []
+    first_exc = None
+    for t, record in pending:
+        t.join()
+        if first_exc is None and record["exc"] is not None:
+            first_exc = record["exc"]
+    if first_exc is not None:
+        raise first_exc
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Newest *complete* checkpoint step in ``ckpt_dir`` (None if none).
+
+    In-flight / crashed ``.tmp`` directories are never candidates, but the
+    dead-writer sweep (which *recovers* a complete retired checkpoint whose
+    re-save crashed between renames) runs first — a restart must see the
+    newest complete step even if it was mid-retirement at crash time, or it
+    would silently resume an older lineage."""
+    if not os.path.isdir(ckpt_dir):
+        return None
+    _reclaim_stale_tmps(ckpt_dir)
+    steps = [int(m.group(1)) for d in os.listdir(ckpt_dir)
+             if (m := _STEP_RE.match(d)) and
+             os.path.isfile(os.path.join(ckpt_dir, d, "manifest.json"))]
+    return max(steps) if steps else None
+
+
+def _gc(ckpt_dir: str, keep: int, written_step: int):
+    # only *complete* checkpoints count toward keep (and only those are
+    # deleted): an incomplete manifest-less dir must neither displace a
+    # real rollback point nor be destroyed while possibly mid-promote.
+    # Retention is scoped to steps <= the one just written, so re-saving
+    # an older step (rollback) can never GC its own fresh checkpoint;
+    # steps *newer* than the written one are deliberately untouched —
+    # whether they are a concurrent forward save or an abandoned lineage
+    # is the caller's call, not GC's (a rollback should clear them or
+    # restore an explicit step rather than latest_step).
+    steps = sorted(int(m.group(1)) for d in os.listdir(ckpt_dir)
+                   if (m := _STEP_RE.match(d)) and
+                   int(m.group(1)) <= written_step and
+                   os.path.isfile(os.path.join(ckpt_dir, d, "manifest.json")))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, _step_name(s)),
+                      ignore_errors=True)
+
+
+def _sharding_at(shardings, path):
+    """Walk a (possibly prefix-) tree of NamedShardings along ``path``;
+    ``None`` anywhere means 'no placement constraint for this subtree'."""
+    node = _tree.descend(shardings, path,
+                         lambda n: isinstance(n, jax.sharding.Sharding))
+    return node if isinstance(node, jax.sharding.Sharding) else None
+
+
+def restore(ckpt_dir: str, step: int, target, shardings=None):
+    """Read ``step`` back in the shape of ``target`` (a pytree whose
+    structure — including NamedTuples — defines the result's structure).
+
+    Dtypes come from the manifest, not the target, so mixed-precision
+    trees round-trip bit-exactly.  ``shardings`` (optional) is a matching
+    or prefix tree of ``NamedSharding``s: leaves under a sharding are
+    device_put with it, subtrees under ``None`` stay unconstrained.
+    """
+    path = os.path.join(ckpt_dir, _step_name(step))
+    man_path = os.path.join(path, "manifest.json")
+    for _ in range(40):                 # ~2s bound on the promote window
+        if os.path.isfile(man_path):
+            break
+        if os.path.isdir(ckpt_dir):
+            _reclaim_stale_tmps(ckpt_dir)   # may recover a retired ckpt
+        if os.path.isfile(man_path):
+            break
+        # a live writer mid-promote of exactly this step briefly leaves
+        # only its (complete) .tmp on disk; wait for its rename to land
+        if not (os.path.isdir(ckpt_dir) and any(
+                (m := _TMP_RE.match(d)) and m.group(1) == _step_name(step)
+                for d in os.listdir(ckpt_dir))):
+            break
+        time.sleep(0.05)
+    if not os.path.isfile(man_path):
+        raise FileNotFoundError(f"no checkpoint {_step_name(step)} "
+                                f"in {ckpt_dir}")
+    with open(man_path) as f:
+        manifest = {e["key"]: e for e in json.load(f)["leaves"]}
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(target)
+    out = []
+    # per-leaf seek+read: only one host copy of each leaf is ever resident
+    # beyond its device buffer (a whole-file blob would double peak RSS on
+    # multi-GB checkpoints)
+    with open(os.path.join(path, "data.bin"), "rb") as f:
+        for leaf_path, _ in flat:
+            key = _leaf_key(leaf_path)
+            entry = manifest.get(key)
+            if entry is None:
+                raise KeyError(f"checkpoint {_step_name(step)} has no leaf "
+                               f"{key!r} (tree structure changed?)")
+            f.seek(entry["offset"])
+            buf = f.read(entry["nbytes"])
+            arr = np.frombuffer(
+                buf, dtype=np.dtype(entry["dtype"]),
+                count=int(np.prod(entry["shape"], dtype=np.int64))
+            ).reshape(entry["shape"])
+            sh = _sharding_at(shardings, leaf_path)
+            out.append(jax.device_put(arr, sh) if sh is not None
+                       else jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)

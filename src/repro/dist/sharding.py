@@ -1,0 +1,199 @@
+"""Logical-axis sharding rules (GSPMD annotations for every code path).
+
+Models annotate tensors with *logical* axis names ("batch", "heads",
+"ff", ...); a rule table maps each logical name to zero or more *mesh*
+axes.  One table per execution regime:
+
+* :data:`DEFAULT_RULES`        — training / calibration: batch+FSDP over
+  ``(pod, data)``, tensor-parallel weights over ``model``.
+* :data:`SERVE_PREFILL_RULES`  — prefill additionally sequence-shards
+  activations over ``model`` (long prompts; weight layout unchanged).
+* :data:`SERVE_DECODE_RULES`   — the 2D-TP decode layout: weights split
+  over (data=input-dim, model=output-dim); ``qin: None`` is the explicit
+  opt-in marker for the packed-domain transfer constraint in
+  :func:`repro.kernels.ops.quant_matmul` (see DESIGN.md §6.1).
+
+The mapping is *best-effort by construction* (DESIGN.md §6.1): a rule is
+dropped for a given tensor dimension when the mesh axis is absent from
+the active mesh, already used by an earlier dimension of the same tensor
+(each mesh axis at most once per spec, earlier dims win), or does not
+divide the dimension size (replicate rather than pad).  This is what
+lets one model definition lower on a 16x16 pod, a 2x16x16 twin-pod, 8
+virtual CPU devices, or a single CPU without edits.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from . import _tree
+
+# ---------------------------------------------------------------------------
+# Rule tables
+# ---------------------------------------------------------------------------
+
+DEFAULT_RULES = {
+    # data / activation axes
+    "batch":    ("pod", "data"),
+    "seq":      None,
+    "embed":    None,
+    # weight / head axes (tensor parallel)
+    "heads":    "model",
+    "kv_heads": "model",
+    "kv_seq":   "model",     # fallback when the head count doesn't divide
+    "ff":       "model",
+    "vocab":    "model",
+    "expert":   "model",
+    "fsdp":     ("pod", "data"),
+    # QuantizedTensor children (non-None here = packed-domain constraint
+    # in kernels/ops.py stays OFF; see SERVE_DECODE_RULES)
+    "qin":      ("pod", "data"),
+    "qout":     "model",
+    "qgroups":  None,
+}
+
+SERVE_PREFILL_RULES = dict(DEFAULT_RULES, seq="model")
+
+SERVE_DECODE_RULES = dict(
+    DEFAULT_RULES,
+    # qin=None REPLICATES the packed input dim — it is deliberately not
+    # "data": kernels/ops.py treats a None "qin" rule as the explicit
+    # opt-in to constrain packed weights so cross-device movement happens
+    # in the uint8 domain (mapping qin to a mesh axis would turn that
+    # branch off, not shard the weights harder).
+    qin=None,
+)
+
+
+# ---------------------------------------------------------------------------
+# Active-context machinery
+# ---------------------------------------------------------------------------
+
+_CTX = threading.local()
+
+
+def _stack():
+    if not hasattr(_CTX, "stack"):
+        _CTX.stack = []
+    return _CTX.stack
+
+
+@contextlib.contextmanager
+def axis_rules(mesh, rules: Optional[dict] = None):
+    """Activate ``(mesh, rules)`` for :func:`shard_hint` /
+    :func:`active_rule` in this thread.  Nestable; inner wins."""
+    _stack().append((mesh, DEFAULT_RULES if rules is None else rules))
+    try:
+        yield mesh
+    finally:
+        _stack().pop()
+
+
+def active_mesh():
+    """The mesh of the innermost :func:`axis_rules` context (or None)."""
+    s = _stack()
+    return s[-1][0] if s else None
+
+
+def active_rules() -> dict:
+    s = _stack()
+    return s[-1][1] if s else DEFAULT_RULES
+
+
+def active_rule(name: str):
+    """The mesh-axis mapping the active rule table gives ``name``."""
+    return active_rules().get(name)
+
+
+# ---------------------------------------------------------------------------
+# Logical axes -> PartitionSpec
+# ---------------------------------------------------------------------------
+
+def _mesh_axis_sizes(mesh) -> dict:
+    # jax.sharding.Mesh.shape is an OrderedDict {axis: size}; tests use a
+    # duck-typed stand-in with a plain dict.
+    return dict(mesh.shape)
+
+
+def logical_to_spec(axes: Sequence[Optional[str]], *, shape: Sequence[int],
+                    mesh, rules: Optional[dict] = None) -> P:
+    """Map per-dimension logical names to a PartitionSpec on ``mesh``.
+
+    ``axes[i]`` names dimension ``i`` of a tensor with concrete ``shape``;
+    ``None`` entries replicate.  Rule entries may name one mesh axis or a
+    tuple of mesh axes (sharded over their product).  Fallbacks, in order:
+    mesh axes absent from ``mesh`` are dropped; mesh axes already claimed
+    by an earlier dimension are dropped (each-axis-used-once priority);
+    if the surviving axes' product doesn't divide ``shape[i]``, the
+    dimension replicates.
+    """
+    rules = active_rules() if rules is None else rules
+    sizes = _mesh_axis_sizes(mesh)
+    used: set = set()
+    entries = []
+    for dim, name in enumerate(axes):
+        rule = rules.get(name) if name is not None else None
+        if rule is None:
+            entries.append(None)
+            continue
+        cand = (rule,) if isinstance(rule, str) else tuple(rule)
+        cand = tuple(a for a in cand if a in sizes and a not in used)
+        if not cand:
+            entries.append(None)
+            continue
+        total = 1
+        for a in cand:
+            total *= sizes[a]
+        if shape[dim] % total != 0:
+            entries.append(None)
+            continue
+        used.update(cand)
+        entries.append(cand[0] if len(cand) == 1 else cand)
+    return P(*entries)
+
+
+def shard_hint(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """``with_sharding_constraint`` under the active mesh; identity when no
+    mesh is active (single-process CPU runs, shard_map bodies, tests)."""
+    mesh = active_mesh()
+    if mesh is None or x.ndim != len(axes):
+        return x
+    spec = logical_to_spec(axes, shape=x.shape, mesh=mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Tree-level shardings
+# ---------------------------------------------------------------------------
+
+def _axes_at(axes_tree, path):
+    """Walk a nested axes tree along a pytree key path; the first
+    tuple/list hit is the leaf annotation (stacked-layer params share
+    one annotation per site), anything else means 'replicate'."""
+    node = _tree.descend(axes_tree, path,
+                         lambda n: isinstance(n, (tuple, list)))
+    return node if isinstance(node, (tuple, list)) else None
+
+
+def tree_shardings(mesh, specs, axes_tree, rules: Optional[dict] = None):
+    """NamedSharding tree for ``specs`` (arrays or ShapeDtypeStructs) from
+    a matching tree of per-dimension logical-axis annotations.
+
+    Paths absent from ``axes_tree`` (or annotated ``None``) replicate.
+    Annotations shorter/longer than the leaf rank are padded/truncated
+    with ``None`` so scalar extras ("len", "step") never error.
+    """
+    def one(path, leaf):
+        ax = _axes_at(axes_tree, path)
+        if ax is None:
+            return NamedSharding(mesh, P())
+        ax = list(ax)[:len(leaf.shape)]
+        ax += [None] * (len(leaf.shape) - len(ax))
+        return NamedSharding(mesh, logical_to_spec(ax, shape=leaf.shape,
+                                                   mesh=mesh, rules=rules))
+
+    return jax.tree_util.tree_map_with_path(one, specs)

@@ -1,0 +1,6 @@
+"""Pallas API compatibility shims shared by the kernel modules."""
+from jax.experimental.pallas import tpu as pltpu
+
+# jax >= 0.5 renamed TPUCompilerParams -> CompilerParams; support both
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams as _CompilerParams
+
 
 def _kernel(x_ref, codes_ref, scale_ref, zero_ref, out_ref, *, bk: int):
     k_step = pl.program_id(2)
@@ -79,7 +81,7 @@ def quant_matmul_pallas(x: jax.Array, codes: jax.Array, scale: jax.Array,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel",                                              "arbitrary")),
         interpret=interpret,
     )(x, codes, scale, zero)

@@ -153,7 +153,7 @@ def _moe_body_sharded(x, router_w, wg, wu, wd, *, cfg: ModelConfig,
     x_flat = x.reshape(-1, d)
     n = b * t
     e_pad = router_w.shape[-1]
-    m = jax.lax.axis_size(model_axis)
+    m = int(jax.lax.psum(1, model_axis))  # static axis size (constant-folded)
     e_loc = e_pad // m
     k = cfg.experts_per_token
     cap = _capacity(n, k, cfg.n_experts, cfg.moe_capacity_factor)

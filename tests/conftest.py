@@ -1,0 +1,12 @@
+"""Make ``import repro`` work without installation or PYTHONPATH tricks.
+
+``pip install -e .`` also works (pyproject.toml); this keeps a bare
+``python -m pytest`` functional in a fresh clone.
+"""
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

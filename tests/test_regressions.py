@@ -1,0 +1,240 @@
+"""Targeted regression tests.
+
+1. ``window_preview`` precision: the original float32 cumsum-difference
+   implementation suffered catastrophic cancellation, letting the
+   windowed "mean" exceed the window max.  The shift-and-mask rewrite is
+   exact for window=1 and bounded for all windows.
+2. Checkpoint atomicity: a crash mid-save must never corrupt the
+   directory — no ``.tmp`` survives the failure path, and
+   ``latest_step`` keeps returning the last *complete* step.
+"""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.methods import window_preview
+from repro.dist import checkpoint as ckpt
+
+
+# ---------------------------------------------------------------------------
+# window_preview
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(6))
+def test_window_one_is_exact_next_layer(seed):
+    """window=1: pvw[l] must be bit-exactly stats[l+1] (no arithmetic may
+    intervene — this is the degenerate case the cumsum version broke)."""
+    rng = np.random.default_rng(seed)
+    stats = jnp.asarray(np.abs(rng.normal(size=(9, 24))) + 0.01,
+                        jnp.float32)
+    pvw = np.asarray(window_preview(stats, 1))
+    s = np.asarray(stats)
+    np.testing.assert_array_equal(pvw[:-1], s[1:])
+
+
+@pytest.mark.parametrize("window", [1, 2, 3, 4])
+def test_last_layer_returns_own_stat(window):
+    stats = jnp.asarray(np.abs(np.random.default_rng(0).normal(
+        size=(7, 16))) + 0.01, jnp.float32)
+    pvw = np.asarray(window_preview(stats, window))
+    np.testing.assert_array_equal(pvw[-1], np.asarray(stats)[-1])
+
+
+@pytest.mark.parametrize("seed", range(6))
+@pytest.mark.parametrize("window", [2, 3, 4])
+def test_window_mean_matches_numpy_reference(seed, window):
+    """Full-precision numpy reference, all (layer, window) clamp cases."""
+    rng = np.random.default_rng(seed)
+    s = np.abs(rng.normal(size=(8, 12))).astype(np.float32) + 0.01
+    pvw = np.asarray(window_preview(jnp.asarray(s), window))
+    L = s.shape[0]
+    for l in range(L - 1):
+        ref = s[l + 1: min(l + window, L - 1) + 1].mean(0)
+        np.testing.assert_allclose(pvw[l], ref, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint atomicity
+# ---------------------------------------------------------------------------
+
+def _tree():
+    return {"w": jnp.arange(6.0).reshape(2, 3),
+            "step": jnp.asarray(3, jnp.int32)}
+
+
+def test_crash_mid_save_leaves_no_tmp(tmp_path, monkeypatch):
+    """A failure before the rename must clean its .tmp and keep the
+    previous step as the newest complete checkpoint."""
+    ckpt.save(str(tmp_path), 1, _tree())
+
+    def boom(src, dst):
+        raise OSError("simulated crash before rename")
+
+    monkeypatch.setattr(ckpt.os, "replace", boom)
+    with pytest.raises(OSError, match="simulated crash"):
+        ckpt.save(str(tmp_path), 2, _tree())
+    monkeypatch.undo()
+
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+    assert ckpt.latest_step(str(tmp_path)) == 1
+
+
+def test_stale_tmp_from_hard_kill_is_ignored_and_reclaimed(tmp_path):
+    """A .tmp left by a SIGKILL (no cleanup ran) is invisible to
+    latest_step and silently reclaimed by the next save of that step."""
+    ckpt.save(str(tmp_path), 4, _tree())
+    stale = tmp_path / "step_00000005.tmp"
+    stale.mkdir()
+    (stale / "data.bin").write_bytes(b"\x00" * 8)  # partial write
+
+    assert ckpt.latest_step(str(tmp_path)) == 4
+    ckpt.save(str(tmp_path), 5, _tree())
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+    restored = ckpt.restore(str(tmp_path), 5, _tree())
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(_tree()["w"]))
+
+
+def test_concurrent_same_step_saves_promote_whole_checkpoint(tmp_path):
+    """An async save racing a sync save of the same step must end with a
+    complete, restorable checkpoint (writers use distinct .tmp dirs; one
+    writer's rename wins wholesale — never a mix of both)."""
+    ckpt.save_async(str(tmp_path), 7, _tree())
+    ckpt.save(str(tmp_path), 7, _tree())
+    ckpt.wait_pending()
+    assert ckpt.latest_step(str(tmp_path)) == 7
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+    restored = ckpt.restore(str(tmp_path), 7, _tree())
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(_tree()["w"]))
+
+
+def test_incomplete_dir_without_manifest_not_latest(tmp_path):
+    """Even a non-.tmp directory missing its manifest (truncated disk)
+    must not be reported as the latest step."""
+    ckpt.save(str(tmp_path), 6, _tree())
+    (tmp_path / "step_00000009").mkdir()   # no manifest.json inside
+    assert ckpt.latest_step(str(tmp_path)) == 6
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(str(tmp_path), 9, _tree())
+
+
+def test_dead_writer_tmps_swept_live_writer_tmps_kept(tmp_path):
+    """A crashed writer's tmp (dead pid of this host) for *any* step is
+    swept by the next save; live-pid and foreign-host tmps are kept."""
+    dead_pid = 4194304  # == kernel max pid_max; real pids are < this
+    assert not ckpt._pid_alive(dead_pid)
+    dead = f"step_00000003.{ckpt._HOST}-{dead_pid}-0.tmp"
+    live = f"step_00000004.{ckpt._HOST}-1-0.tmp"   # pid 1: alive, not ours
+    foreign = f"step_00000005.otherhost-{dead_pid}-0.tmp"
+    for d in (dead, live, foreign):
+        (tmp_path / d).mkdir()
+    ckpt.save(str(tmp_path), 9, _tree())
+    names = sorted(os.listdir(tmp_path))
+    assert dead not in names
+    assert live in names and foreign in names
+    assert ckpt.latest_step(str(tmp_path)) == 9
+
+
+def test_resave_same_step_survives_promote_failure(tmp_path, monkeypatch):
+    """Re-saving an existing step must not destroy the old complete
+    checkpoint when promotion fails — it is retired aside and rolled
+    back, never rmtree'd first."""
+    ckpt.save(str(tmp_path), 2, _tree())
+    real_replace = ckpt.os.replace
+    state = {"i": 0}
+
+    def fail_promote(src, dst):
+        # retire-aside renames (dst is a .tmp) pass through; of the
+        # .tmp -> final renames, promotes (odd) fail and the interleaved
+        # rollbacks (even) succeed
+        if src.endswith(".tmp") and not dst.endswith(".tmp"):
+            state["i"] += 1
+            if state["i"] % 2 == 1:
+                raise OSError("simulated promote failure")
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(ckpt.os, "replace", fail_promote)
+    with pytest.raises(OSError, match="simulated promote"):
+        ckpt.save(str(tmp_path), 2, _tree())
+    monkeypatch.undo()
+    assert ckpt.latest_step(str(tmp_path)) == 2     # old step intact
+    ckpt.restore(str(tmp_path), 2, _tree())          # and restorable
+
+
+def test_retired_complete_tmp_recovered_not_swept(tmp_path):
+    """Crash between the two renames of a same-step re-save: the only
+    complete copy of the step lives in a dead-writer .tmp.  The restart
+    path (latest_step) must recover (promote) it, not report an older
+    lineage — and a subsequent save must not sweep it."""
+    dead_pid = 4194304
+    ckpt.save(str(tmp_path), 2, _tree())
+    # simulate the crash window: final dir retired aside, writer died
+    os.rename(tmp_path / "step_00000002",
+              tmp_path / f"step_00000002.{ckpt._HOST}-{dead_pid}-0.tmp")
+    # a restart consults latest_step first — recovery happens right there,
+    # so training resumes from step 2, never from scratch
+    assert ckpt.latest_step(str(tmp_path)) == 2
+    ckpt.restore(str(tmp_path), 2, _tree())
+    ckpt.save(str(tmp_path), 3, _tree())
+    assert ckpt.latest_step(str(tmp_path)) == 3
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+
+
+def test_gc_counts_only_complete_checkpoints(tmp_path):
+    """A manifest-less junk dir must neither consume a keep= slot nor be
+    deleted by GC; keep= always refers to complete, restorable steps."""
+    ckpt.save(str(tmp_path), 1, _tree())
+    (tmp_path / "step_00000009").mkdir()   # incomplete, no manifest
+    ckpt.save(str(tmp_path), 2, _tree())
+    ckpt.save(str(tmp_path), 3, _tree(), keep=2)
+    kept = sorted(d for d in os.listdir(tmp_path))
+    assert kept == ["step_00000002", "step_00000003", "step_00000009"]
+    for s in (2, 3):
+        ckpt.restore(str(tmp_path), s, _tree())  # both survivors complete
+
+
+def test_truncated_manifest_tmp_swept_not_promoted(tmp_path):
+    """A dead writer killed mid-manifest-write leaves unparseable JSON;
+    recovery must sweep that tmp, never promote it as a complete step."""
+    dead_pid = 4194304
+    ckpt.save(str(tmp_path), 1, _tree())
+    bad = tmp_path / f"step_00000002.{ckpt._HOST}-{dead_pid}-0.tmp"
+    bad.mkdir()
+    (bad / "data.bin").write_bytes(b"\x00" * 16)
+    (bad / "manifest.json").write_text('{"step": 2, "leaves": [')  # truncated
+    assert ckpt.latest_step(str(tmp_path)) == 1   # not promoted
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))  # swept
+
+
+def test_resave_older_step_survives_gc(tmp_path):
+    """Rollback case: re-saving a step older than on-disk steps with
+    keep= must never GC the checkpoint just written (retention is scoped
+    to steps <= the written one; newer steps are left for the caller)."""
+    ckpt.save(str(tmp_path), 4, _tree())
+    ckpt.save(str(tmp_path), 5, _tree())
+    path = ckpt.save(str(tmp_path), 3, _tree(), keep=2)
+    assert os.path.isdir(path)                      # just-written survives
+    ckpt.restore(str(tmp_path), 3, _tree())
+    assert sorted(os.listdir(tmp_path)) == \
+        ["step_00000003", "step_00000004", "step_00000005"]
+
+
+def test_steps_beyond_eight_digits(tmp_path):
+    """Steps >= 1e8 grow past the zero-padded width; they must stay
+    visible to latest_step, GC, and restore."""
+    ckpt.save(str(tmp_path), 99_999_999, _tree())
+    path = ckpt.save(str(tmp_path), 100_000_001, _tree(), keep=1)
+    assert os.path.basename(path) == "step_100000001"
+    assert ckpt.latest_step(str(tmp_path)) == 100_000_001
+    assert sorted(os.listdir(tmp_path)) == ["step_100000001"]  # GC saw both
+    ckpt.restore(str(tmp_path), 100_000_001, _tree())
+
+
+def test_keep_zero_rejected(tmp_path):
+    with pytest.raises(ValueError, match="keep"):
+        ckpt.save(str(tmp_path), 1, _tree(), keep=0)
+    assert ckpt.latest_step(str(tmp_path)) is None  # rejected before write
