@@ -14,7 +14,7 @@ def emit(name, us_per_call, derived):
 
 
 def main() -> None:
-    from . import kernel_bench, roofline, table4_hparams, tables
+    from . import kernel_bench, roofline, serve_bench, table4_hparams, tables
 
     print("name,us_per_call,derived")
     tables.table1(emit)
@@ -23,6 +23,7 @@ def main() -> None:
     table4_hparams.run(emit)
     kernel_bench.run(emit)
     roofline.run(emit)
+    serve_bench.run(emit)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,203 @@
+"""Serving-throughput benchmark: bucketed batched engine vs the
+pre-refactor per-request-retrace baseline.
+
+The baseline reproduces the old engine's hot-path behavior exactly:
+per-request exact-length prefill (one XLA compile per distinct prompt
+length), host-side tree_map cache splice on admission, and a full
+vocab-row device->host round-trip with NumPy sampling per decoded token.
+The rebuilt engine pads admission batches to a fixed bucket grid
+(compile count bounded by the bucket count), merges prefilled rows into
+the live cache with one jitted op, and samples on-device.
+
+Each run appends a row to the BENCH trajectory at
+``reports/serve_bench.csv`` so tok/s progress is tracked across PRs.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench --tiny --requests 16
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "reports")
+
+
+# ---------------------------------------------------------------------------
+# Pre-refactor reference engine (kept verbatim-in-spirit for the baseline)
+# ---------------------------------------------------------------------------
+
+class LegacyEngine:
+    """The old serve loop: per-length prefill retrace, host splice,
+    host sampling of full logits rows."""
+
+    def __init__(self, model, params, *, n_slots=4, max_len=128):
+        self.model, self.params = model, params
+        self.n_slots, self.max_len = n_slots, max_len
+        self.cfg = model.cfg
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step)
+
+    def serve(self, requests):
+        queue = list(requests)
+        results = {}
+        cache = self.model.init_cache(self.n_slots, self.max_len)
+        slot_req = [None] * self.n_slots
+        slot_last = np.zeros((self.n_slots, 1), np.int32)
+        slot_left = np.zeros(self.n_slots, np.int32)
+
+        def splice(batched, single, slot):
+            def leaf(b, s):
+                for ax in range(b.ndim):
+                    if ax < s.ndim and b.shape[ax] != s.shape[ax]:
+                        idx = [slice(None)] * b.ndim
+                        idx[ax] = slice(slot, slot + 1)
+                        return b.at[tuple(idx)].set(s.astype(b.dtype))
+                return s
+            new = jax.tree_util.tree_map(leaf, batched, single)
+            for k in batched:
+                batched[k] = new[k]
+
+        def fill_slots():
+            for s in range(self.n_slots):
+                if slot_req[s] is None and queue:
+                    req = queue.pop(0)
+                    req.out_tokens = []
+                    c1 = self.model.init_cache(1, self.max_len)
+                    tok = jnp.asarray(np.asarray(req.prompt, np.int32))[None]
+                    logits, c1 = self._prefill(self.params, tok, c1)
+                    splice(cache, c1, s)
+                    nxt = int(np.argmax(
+                        np.asarray(logits[0, 0, :self.cfg.vocab_size])))
+                    req.out_tokens.append(nxt)
+                    slot_req[s] = req
+                    slot_last[s, 0] = nxt
+                    slot_left[s] = req.max_new_tokens - 1
+
+        fill_slots()
+        while any(r is not None for r in slot_req):
+            logits, new_cache = self._decode(self.params, cache,
+                                             jnp.asarray(slot_last))
+            for k in cache:
+                cache[k] = new_cache[k]
+            logits_np = np.asarray(logits[:, 0, :self.cfg.vocab_size])
+            for s in range(self.n_slots):
+                req = slot_req[s]
+                if req is None:
+                    continue
+                nxt = int(np.argmax(logits_np[s]))
+                req.out_tokens.append(nxt)
+                slot_last[s, 0] = nxt
+                slot_left[s] -= 1
+                if slot_left[s] <= 0:
+                    results[req.rid] = np.asarray(req.out_tokens, np.int32)
+                    slot_req[s] = None
+            fill_slots()
+        return results
+
+
+# ---------------------------------------------------------------------------
+# Harness
+# ---------------------------------------------------------------------------
+
+def _requests(cfg, n, new_tokens, seed=0):
+    from repro.serve import Request
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=int(rng.integers(4, 48))),
+                    max_new_tokens=new_tokens)
+            for i in range(n)]
+
+
+def bench(emit=print, *, requests=16, new_tokens=16, n_slots=4, max_len=128,
+          record=True):
+    """Returns (legacy tok/s, bucketed tok/s, speedup)."""
+    from repro.configs import ARCHS
+    from repro.core import QuantSpec, quantize_model, run_calibration
+    from repro.models.registry import build_model
+    from repro.serve import Request, ServeEngine
+
+    cfg = ARCHS["llama3-8b"].tiny()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    calib = [{"tokens": jax.random.randint(jax.random.PRNGKey(i), (2, 32),
+                                           0, cfg.vocab_size)}
+             for i in range(2)]
+    stats = run_calibration(model.forward, params, calib)
+    qp, _ = quantize_model(params, model.quant_site_map(), stats,
+                           method="faq", spec=QuantSpec(bits=4, group_size=64),
+                           mode="packed")
+
+    legacy = LegacyEngine(model, qp, n_slots=n_slots, max_len=max_len)
+    t0 = time.time()
+    res_l = legacy.serve(_requests(cfg, requests, new_tokens))
+    dt_l = time.time() - t0
+    tok_l = sum(len(v) for v in res_l.values())
+
+    eng = ServeEngine(model, qp, n_slots=n_slots, max_len=max_len)
+    t0 = time.time()
+    res_b = eng.serve(_requests(cfg, requests, new_tokens))
+    dt_b = time.time() - t0
+    tok_b = sum(len(v) for v in res_b.values())
+
+    for rid in res_l:  # both engines are greedy: outputs must agree
+        assert np.array_equal(res_l[rid], res_b[rid]), f"rid {rid} diverged"
+
+    tps_l, tps_b = tok_l / dt_l, tok_b / dt_b
+    speedup = tps_b / tps_l
+    m = eng.metrics()
+    emit(f"serve/legacy_tok_s,,{tps_l:.2f}")
+    emit(f"serve/bucketed_tok_s,,{tps_b:.2f}")
+    emit(f"serve/speedup,,{speedup:.2f}")
+    emit(f"serve/prefill_traces,,{m['prefill_traces']}")
+    emit(f"serve/decode_steps,,{m['decode_steps']}")
+
+    if record:
+        os.makedirs(REPORT_DIR, exist_ok=True)
+        path = os.path.join(REPORT_DIR, "serve_bench.csv")
+        fresh = not os.path.exists(path)
+        with open(path, "a") as f:
+            if fresh:
+                f.write("timestamp,requests,new_tokens,n_slots,max_len,"
+                        "legacy_tok_s,bucketed_tok_s,speedup,"
+                        "prefill_traces\n")
+            f.write(f"{int(time.time())},{requests},{new_tokens},{n_slots},"
+                    f"{max_len},{tps_l:.2f},{tps_b:.2f},{speedup:.2f},"
+                    f"{m['prefill_traces']}\n")
+    return tps_l, tps_b, speedup
+
+
+def run(emit):
+    """Entry point for benchmarks.run."""
+    bench(emit)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action=argparse.BooleanOptionalAction,
+                    default=True, help="tiny config (the only offline mode)")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--n-slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--no-record", action="store_true")
+    args = ap.parse_args()
+    if not args.tiny:
+        raise SystemExit("full-size serving bench needs accelerators; "
+                         "run with --tiny")
+    tps_l, tps_b, speedup = bench(requests=args.requests,
+                                  new_tokens=args.new_tokens,
+                                  n_slots=args.n_slots,
+                                  max_len=args.max_len,
+                                  record=not args.no_record)
+    print(f"legacy: {tps_l:.1f} tok/s | bucketed: {tps_b:.1f} tok/s | "
+          f"speedup: {speedup:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,7 +13,7 @@ import numpy as np
 
 from repro.core import QuantSpec, quantize_model, run_calibration
 from repro.data.synthetic import calibration_batches
-from repro.serve.engine import Request, ServeEngine
+from repro.serve import Request, Scheduler, ServeEngine
 
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
@@ -48,21 +48,32 @@ def main():
                     for p in jax.tree_util.tree_leaves(qparams))
     print(f"   weights: {n_bytes_fp/2**20:.1f} MiB -> {n_bytes_q/2**20:.1f} MiB")
 
-    print("== serving ==")
+    print("== serving (bucketed batched prefill + streaming) ==")
     eng = ServeEngine(model, qparams, n_slots=args.slots, max_len=128)
+    sched = Scheduler(eng)
     rng = np.random.default_rng(0)
-    reqs = [Request(rid=i,
-                    prompt=data.sequence(30_000_000 + i, int(rng.integers(8, 24))),
-                    max_new_tokens=args.new_tokens)
-            for i in range(args.requests)]
+    streamed = {}
+    for i in range(args.requests):
+        req = Request(rid=i,
+                      prompt=data.sequence(30_000_000 + i,
+                                           int(rng.integers(8, 24))),
+                      max_new_tokens=args.new_tokens)
+        streamed[i] = []
+        sched.submit(req, deadline=time.time() + 120.0,
+                     on_token=lambda rid, tok: streamed[rid].append(tok))
     t0 = time.time()
-    results = eng.serve(reqs)
+    results = sched.run()
     dt = time.time() - t0
     total = sum(len(v) for v in results.values())
     for rid in sorted(results):
+        assert results[rid].tolist() == streamed[rid]  # stream == result
         print(f"   req {rid}: {results[rid][:8]}...")
+    m = sched.metrics()
     print(f"   {total} tokens in {dt:.1f}s "
           f"({total/dt:.1f} tok/s CPU ref-path)")
+    print(f"   prefill {m['prefill_batches']} batches / "
+          f"{m['prefill_traces']} traces on buckets {m['buckets']}; "
+          f"{m['decode_steps']} decode steps")
 
 
 if __name__ == "__main__":

@@ -26,13 +26,13 @@ def run_calibration(apply_fn: Callable, params, batches: Iterable) -> dict:
     acc = None
     acc_tokens = 0.0
     collect = jax.jit(lambda p, b: apply_fn(p, b, collect_stats=True)[1]["stats"])
-    for batch in batches:
+    for i, batch in enumerate(batches):
         stats = jax.device_get(collect(params, batch))
         tokens = float(_batch_tokens(batch))
         if acc is None:
             acc, acc_tokens = stats, tokens
         else:
-            acc = merge_stats(acc, stats, acc_tokens, tokens)
+            acc = merge_stats(acc, stats, acc_tokens, tokens, batch_index=i)
             acc_tokens += tokens
     if acc is None:
         raise ValueError("empty calibration set")

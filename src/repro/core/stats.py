@@ -29,16 +29,34 @@ def site_stat(x: jax.Array, sample_rows: int = SAMPLE_ROWS) -> dict:
     }
 
 
-def merge_stats(acc: dict, new: dict, acc_weight: float, new_weight: float) -> dict:
-    """Weighted running merge of two stat pytrees (same structure)."""
+def merge_stats(acc: dict, new: dict, acc_weight: float, new_weight: float,
+                batch_index: int | None = None) -> dict:
+    """Weighted running merge of two stat pytrees (same structure).
+
+    The moment statistics are exact weighted averages.  The ``(K, d)``
+    ``sample`` rows are filled round-robin across calibration batches:
+    merging batch ``t`` (the ``t``-th batch after the first, so ``t >= 1``)
+    replaces the rows at indices ``i % (t + 1) == t`` with batch ``t``'s
+    rows — systematic reservoir filling that leaves each of the ``t + 1``
+    batches seen so far holding roughly ``K / (t + 1)`` rows.  Keeping
+    only batch 0's rows (the old behavior) biased the exact "sample"
+    search loss to whatever distribution the first batch happened to have.
+
+    ``batch_index`` is the 1-based merge step; when ``None`` it is
+    inferred from the weight ratio (exact for equal-sized batches).
+    """
     tot = acc_weight + new_weight
     wa, wb = acc_weight / tot, new_weight / tot
+    t = batch_index if batch_index is not None else max(
+        1, int(round(acc_weight / new_weight)))
 
     def merge_site(a, b):
+        k = a["sample"].shape[-2]
+        take_new = (jnp.arange(k) % (t + 1)) == t
         return {
             "mean_abs": wa * a["mean_abs"] + wb * b["mean_abs"],
             "mean_sq": wa * a["mean_sq"] + wb * b["mean_sq"],
-            "sample": a["sample"],  # keep the first batch's subsample
+            "sample": jnp.where(take_new[:, None], b["sample"], a["sample"]),
         }
 
     return {k: merge_site(acc[k], new[k]) for k in acc}

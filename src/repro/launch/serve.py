@@ -24,13 +24,21 @@ from repro.serve.engine import Request, ServeEngine
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-8b", choices=sorted(ARCHS))
-    ap.add_argument("--tiny", action="store_true", default=True)
+    # BooleanOptionalAction so --no-tiny can actually select the full
+    # config (the old store_true/default=True combo was impossible to
+    # disable from the command line)
+    ap.add_argument("--tiny", action=argparse.BooleanOptionalAction,
+                    default=True)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--bits", type=int, default=4)
     ap.add_argument("--method", default="faq", choices=["rtn", "awq", "faq"])
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--new-tokens", type=int, default=12)
     ap.add_argument("--calib-n", type=int, default=16)
+    ap.add_argument("--n-slots", type=int, default=4,
+                    help="decode batch width (continuous-batching slots)")
+    ap.add_argument("--max-len", type=int, default=128,
+                    help="per-slot KV-cache capacity (prompt + new tokens)")
     args = ap.parse_args()
 
     cfg = ARCHS[args.arch].tiny() if args.tiny else ARCHS[args.arch]
@@ -52,8 +60,9 @@ def main():
                                 method=args.method,
                                 spec=QuantSpec(bits=args.bits, group_size=64),
                                 mode="packed")
-    eng = ServeEngine(model, qparams, n_slots=min(4, args.requests),
-                      max_len=128)
+    eng = ServeEngine(model, qparams,
+                      n_slots=min(args.n_slots, args.requests),
+                      max_len=args.max_len)
     reqs = [Request(rid=i, prompt=data.sequence(40_000_000 + i, 12),
                     max_new_tokens=args.new_tokens)
             for i in range(args.requests)]
@@ -63,8 +72,13 @@ def main():
     tok = sum(len(v) for v in results.values())
     for rid in sorted(results):
         print(f"req {rid}: {results[rid].tolist()}")
+    m = eng.metrics()
     print(f"{tok} tokens in {dt:.1f}s ({tok/dt:.1f} tok/s, "
           f"{args.method} int{args.bits} packed)")
+    print(f"prefill: {m['prefill_batches']} batches / "
+          f"{m['prefill_traces']} traces (buckets {m['buckets']}), "
+          f"decode: {m['decode_steps']} steps, "
+          f"retraces: {m['retrace_count']}")
 
 
 if __name__ == "__main__":

@@ -146,23 +146,27 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                       causal: bool = True,
                       window: Optional[int] = None,
                       q_offset: int = 0,
-                      chunk: int = 512) -> jax.Array:
+                      chunk: int = 512,
+                      kv_lens: Optional[jax.Array] = None) -> jax.Array:
     """Memory-O(T·chunk) attention via a scan over KV chunks.
 
     q: (B, Tq, H, hd); k, v: (B, Tk, KH, hd) with H % KH == 0 (GQA).
     ``q_offset`` is the absolute position of q[0] (for decode/prefill
     continuation).  ``window`` enables sliding-window masking (hymba).
+    ``kv_lens`` (B,) int32 masks keys at positions >= kv_lens[b] — the
+    length-aware causal mask for bucket-padded batched prefill, where
+    prompts of different true lengths share one padded shape.
     """
     b, tq, h, hd = q.shape
     tk, kh = k.shape[1], k.shape[2]
-    if (window is not None and causal and tq == tk and q_offset == 0
-            and tk > 2 * window):
+    if (kv_lens is None and window is not None and causal and tq == tk
+            and q_offset == 0 and tk > 2 * window):
         # sliding-window self-attention: block-local path is O(T*2w)
         # instead of O(T^2) (perf iteration 3, EXPERIMENTS.md §Perf)
         return local_window_attention(q, k, v, window)
     if (jax.default_backend() == "tpu" and window is None and q_offset == 0
             and tq == tk and hd <= 128 and tq % 128 == 0
-            and not _COST_MODE):
+            and kv_lens is None and not _COST_MODE):
         # TPU deployments run the Pallas flash kernel (scores stay in
         # VMEM); CPU/tests keep the chunked jnp path below.
         from repro.kernels.flash_attention import flash_attention_pallas
@@ -191,7 +195,13 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             mask &= qpos[:, None] >= kpos[None, :]
         if window is not None:
             mask &= (qpos[:, None] - kpos[None, :]) < window
-        s = jnp.where(mask[None, None], s, -1e30)
+        if kv_lens is not None:
+            mask_b = mask[None] & (kpos[None, None, :]
+                                   < kv_lens[:, None, None])
+            mask = mask_b[:, None]            # (B, 1, Tq, Kb)
+        else:
+            mask = mask[None, None]           # (1, 1, Tq, Kb)
+        s = jnp.where(mask, s, -1e30)
         m_new = jnp.maximum(m, s.max(axis=-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
@@ -296,6 +306,18 @@ def logits_from_hidden(x: jax.Array, lm_head, vocab_size: int) -> jax.Array:
         bias = jnp.where(jnp.arange(v_pad) < vocab_size, 0.0, -1e30)
         out = out.astype(jnp.float32) + bias
     return out
+
+
+def last_valid_hidden(x: jax.Array, lens: jax.Array) -> jax.Array:
+    """Gather the hidden state of each row's last valid token.
+
+    x: (B, T, d); lens: (B,) int32 with 1 <= lens[b] <= T.  Returns
+    (B, 1, d) — row b's position ``lens[b] - 1``.  Bucket-padded prefill
+    uses this instead of ``x[:, -1:]`` so padded tail positions never
+    leak into the first sampled token.
+    """
+    idx = jnp.clip(lens.astype(jnp.int32) - 1, 0, x.shape[1] - 1)
+    return jnp.take_along_axis(x, idx[:, None, None], axis=1)
 
 
 def quantize_kv(x: jax.Array):

@@ -20,7 +20,8 @@ from repro.dist.sharding import shard_hint
 from .common import (layer_scan,
                      apply_rope, chunked_attention, decode_attention,
                      decode_attention_q8, quantize_kv,
-                     dense_init, embed_tokens, logits_from_hidden,
+                     dense_init, embed_tokens, last_valid_hidden,
+                     logits_from_hidden,
                      padded_vocab, qlinear, rms_norm, stack_layer_params,
                      update_cache_at)
 
@@ -90,7 +91,7 @@ class DenseLM:
 
     # -- block -------------------------------------------------------------
     def _attn(self, p, x, positions, *, kv_write=None, cache=None,
-              cache_len=None):
+              cache_len=None, kv_lens=None):
         """Attention sub-block.  Returns (out, (k, v)) — k/v as produced
         (for prefill cache capture)."""
         cfg = self.cfg
@@ -108,7 +109,8 @@ class DenseLM:
         v = shard_hint(v, "batch", "seq", "kv_heads", None)
         if cache is None:
             window = cfg.sliding_window or None
-            o = chunked_attention(q, k, v, causal=True, window=window)
+            o = chunked_attention(q, k, v, causal=True, window=window,
+                                  kv_lens=kv_lens)
         elif cfg.kv_cache_bits == 8:
             k_cache, k_sc, v_cache, v_sc = cache
             pos = cache_len - 1
@@ -137,13 +139,14 @@ class DenseLM:
         o = o.reshape(b, t, cfg.n_heads * hd)
         return qlinear(o, p["wo"]), (k, v), o
 
-    def _block(self, p, x, positions, collect, *, cache=None, cache_len=None):
+    def _block(self, p, x, positions, collect, *, cache=None, cache_len=None,
+               kv_lens=None):
         h = rms_norm(x, p["attn_norm"], self.cfg.norm_eps)
         stats = {}
         if collect:
             stats["attn_in"] = site_stat(h)
         attn_out, kv, o_pre = self._attn(p, h, positions, cache=cache,
-                                         cache_len=cache_len)
+                                         cache_len=cache_len, kv_lens=kv_lens)
         if collect:
             stats["attn_out"] = site_stat(o_pre)
         x = x + attn_out
@@ -185,21 +188,34 @@ class DenseLM:
                "moe_aux": jnp.zeros((), jnp.float32)}
         return logits, aux
 
-    def prefill(self, params, tokens, cache):
+    def prefill(self, params, tokens, cache, prompt_len=None):
         """Run the prompt and write the KV cache in-place (functional).
 
         cache: dict(k=(L,B,KH,S,hd), v=..., len=()) with S >= T.
+        ``prompt_len`` (B,) int32 marks each row's true prompt length for
+        bucket-padded batched prefill: keys at positions >= prompt_len[b]
+        are masked (length-aware causal mask), the returned logits are
+        each row's *last valid* position, and cache["len"] is per-batch
+        so decode continues from the right slot position.  ``None`` keeps
+        the dense full-length behavior (every row is exactly T long).
         Returns (logits_last, cache)."""
         b, t = tokens.shape
         positions = jnp.broadcast_to(jnp.arange(t), (b, t))
         positions = self._maybe_mrope(positions)
+        if prompt_len is None:
+            plen = jnp.full((b,), t, jnp.int32)
+            kv_lens = None
+        else:
+            plen = jnp.broadcast_to(prompt_len, (b,)).astype(jnp.int32)
+            kv_lens = plen
         x = embed_tokens(params["embed"], tokens).astype(self.dtype)
         x = shard_hint(x, "batch", "seq", "embed")
 
         if self.cfg.kv_cache_bits == 8:
             def body8(x, xs):
                 p, kc, ksc, vc, vsc = xs
-                x, (k, v), _ = self._block(p, x, positions, False)
+                x, (k, v), _ = self._block(p, x, positions, False,
+                                           kv_lens=kv_lens)
                 kq, ks = quantize_kv(k)
                 vq, vs = quantize_kv(v)
                 kc = jax.lax.dynamic_update_slice(
@@ -215,16 +231,17 @@ class DenseLM:
             x, (kc, ksc, vc, vsc) = layer_scan(
                 body8, x, (params["blocks"], cache["k"], cache["k_scale"],
                            cache["v"], cache["v_scale"]))
-            x = rms_norm(x[:, -1:], params["final_norm"], self.cfg.norm_eps)
+            x = x[:, -1:] if prompt_len is None else last_valid_hidden(x, plen)
+            x = rms_norm(x, params["final_norm"], self.cfg.norm_eps)
             logits = logits_from_hidden(x, params["lm_head"],
                                         self.cfg.vocab_size)
             return logits, {"k": kc, "k_scale": ksc, "v": vc,
-                            "v_scale": vsc,
-                            "len": jnp.full((b,), t, jnp.int32)}
+                            "v_scale": vsc, "len": plen}
 
         def body(x, xs):
             p, kc, vc = xs
-            x, (k, v), _ = self._block(p, x, positions, False)
+            x, (k, v), _ = self._block(p, x, positions, False,
+                                       kv_lens=kv_lens)
             kc = jax.lax.dynamic_update_slice(
                 kc, k.transpose(0, 2, 1, 3), (0, 0, 0, 0))
             vc = jax.lax.dynamic_update_slice(
@@ -233,10 +250,10 @@ class DenseLM:
 
         x, (kc, vc) = layer_scan(body, x, (params["blocks"], cache["k"],
                                              cache["v"]))
-        x = rms_norm(x[:, -1:], params["final_norm"], self.cfg.norm_eps)
+        x = x[:, -1:] if prompt_len is None else last_valid_hidden(x, plen)
+        x = rms_norm(x, params["final_norm"], self.cfg.norm_eps)
         logits = logits_from_hidden(x, params["lm_head"], self.cfg.vocab_size)
-        return logits, {"k": kc, "v": vc,
-                        "len": jnp.full((b,), t, jnp.int32)}
+        return logits, {"k": kc, "v": vc, "len": plen}
 
     def decode_step(self, params, cache, token, pos=None):
         """One decode step.  token: (B, 1) int32.  Returns (logits, cache).

@@ -33,7 +33,8 @@ from repro.core.stats import site_stat
 from repro.dist.sharding import active_mesh, shard_hint
 from .common import (layer_scan,
                      apply_rope, chunked_attention, decode_attention,
-                     dense_init, embed_tokens, logits_from_hidden,
+                     dense_init, embed_tokens, last_valid_hidden,
+                     logits_from_hidden,
                      padded_vocab, qlinear, rms_norm, stack_layer_params)
 from .dense import DenseLM
 
@@ -326,13 +327,14 @@ class MoELM(DenseLM):
         return m
 
     # override the FFN half of the block
-    def _block(self, p, x, positions, collect, *, cache=None, cache_len=None):
+    def _block(self, p, x, positions, collect, *, cache=None, cache_len=None,
+               kv_lens=None):
         h = rms_norm(x, p["attn_norm"], self.cfg.norm_eps)
         stats = {}
         if collect:
             stats["attn_in"] = site_stat(h)
         attn_out, kv, o_pre = self._attn(p, h, positions, cache=cache,
-                                         cache_len=cache_len)
+                                         cache_len=cache_len, kv_lens=kv_lens)
         if collect:
             stats["attn_out"] = site_stat(o_pre)
         x = x + attn_out
@@ -375,15 +377,22 @@ class MoELM(DenseLM):
                "moe_aux": jnp.mean(aux)}
         return logits, out
 
-    def prefill(self, params, tokens, cache):
+    def prefill(self, params, tokens, cache, prompt_len=None):
         b, t = tokens.shape
         positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+        if prompt_len is None:
+            plen = jnp.full((b,), t, jnp.int32)
+            kv_lens = None
+        else:
+            plen = jnp.broadcast_to(prompt_len, (b,)).astype(jnp.int32)
+            kv_lens = plen
         x = embed_tokens(params["embed"], tokens).astype(self.dtype)
         x = shard_hint(x, "batch", "seq", "embed")
 
         def body(x, xs):
             p, kc, vc = xs
-            x, (k, v), _, _ = self._block(p, x, positions, False)
+            x, (k, v), _, _ = self._block(p, x, positions, False,
+                                          kv_lens=kv_lens)
             kc = jax.lax.dynamic_update_slice(
                 kc, k.transpose(0, 2, 1, 3), (0, 0, 0, 0))
             vc = jax.lax.dynamic_update_slice(
@@ -392,10 +401,10 @@ class MoELM(DenseLM):
 
         x, (kc, vc) = layer_scan(body, x, (params["blocks"], cache["k"],
                                              cache["v"]))
-        x = rms_norm(x[:, -1:], params["final_norm"], self.cfg.norm_eps)
+        x = x[:, -1:] if prompt_len is None else last_valid_hidden(x, plen)
+        x = rms_norm(x, params["final_norm"], self.cfg.norm_eps)
         logits = logits_from_hidden(x, params["lm_head"], self.cfg.vocab_size)
-        return logits, {"k": kc, "v": vc,
-                        "len": jnp.full((b,), t, jnp.int32)}
+        return logits, {"k": kc, "v": vc, "len": plen}
 
     def decode_step(self, params, cache, token, pos=None):
         b = token.shape[0]

@@ -1,2 +1,6 @@
-"""Serving: continuous-batching engine over FAQ-quantized weights."""
-from .engine import Request, ServeEngine
+"""Serving: bucketed continuous-batching engine over FAQ-quantized weights."""
+from .buckets import bucket_for, default_buckets
+from .cache_ops import merge_slots, write_slot
+from .engine import Request, ServeEngine, TraceCounter
+from .sampler import sample_tokens
+from .scheduler import Scheduler

@@ -1,0 +1,54 @@
+"""Jitted cache-admission ops for the serve engine.
+
+Cache trees across every model family share one batch convention: the
+``len`` leaf is ``(B,)`` and every other leaf is ``(L, B, ...)`` — batch
+on axis 1 (see ``init_cache`` in models/*.py).  Both ops below rely only
+on that convention, so they work for dense, MoE, hymba, xlstm, and
+whisper caches alike.
+
+They replace the old engine's ``_splice_cache``: a host-side
+``tree_map`` that located the batch axis by shape comparison and issued
+one scatter per leaf from Python.  Here the whole tree update is a
+single jitted XLA program with the slot index traced, so admission costs
+one dispatch and never recompiles.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _batch_axis(leaf) -> int:
+    return 0 if leaf.ndim == 1 else 1
+
+
+def write_slot(batched_cache, single_cache, slot):
+    """Write a batch-1 cache into slot ``slot`` of the batched cache.
+
+    ``slot`` is a traced int32 scalar — one compile serves every slot.
+    Each leaf is one ``dynamic_update_index_in_dim`` on its batch axis.
+    """
+    def w(b, s):
+        ax = _batch_axis(b)
+        row = jax.lax.index_in_dim(s.astype(b.dtype), 0, ax, keepdims=False)
+        return jax.lax.dynamic_update_index_in_dim(b, row, slot, ax)
+
+    return jax.tree_util.tree_map(w, batched_cache, single_cache)
+
+
+def merge_slots(cache, new_cache, admit_mask):
+    """Per-slot select between two same-shape caches.
+
+    ``admit_mask`` (B,) bool: rows where it is True come from
+    ``new_cache`` (the freshly prefilled scratch), others keep ``cache``
+    (the live slots).  Used by bucketed batched admission, where the
+    prefill batch is slot-aligned.
+    """
+    def m(old, new):
+        ax = _batch_axis(old)
+        shape = [1] * old.ndim
+        shape[ax] = old.shape[ax]
+        return jnp.where(admit_mask.reshape(shape), new.astype(old.dtype),
+                         old)
+
+    return jax.tree_util.tree_map(m, cache, new_cache)

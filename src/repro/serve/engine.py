@@ -1,25 +1,49 @@
-"""Batched serving engine over FAQ-quantized weights.
+"""Bucketed continuous-batching engine over FAQ-quantized weights.
 
-Slot-based continuous batching: a fixed decode batch of ``n_slots``; new
-requests prefill into free slots (prefill is per-request, decode is
-batched).  The weights are the *packed* QuantizedTensor representation —
-every matmul runs through the dequant-matmul kernel path (``qlinear``
+Slot-based continuous batching with three hot-path properties:
+
+* **Bucketed batched prefill** — waiting requests are padded to a small
+  fixed grid of length buckets (:mod:`.buckets`) and prefilled together
+  in one slot-aligned batch with per-row ``prompt_len``; admission
+  compiles at most once per bucket instead of once per distinct prompt
+  length, and the prefilled rows land in the live decode cache through a
+  single jitted merge (:func:`.cache_ops.merge_slots`).
+* **On-device sampling** — a jitted batched sampler
+  (:func:`.sampler.sample_tokens`, greedy/temperature/top-k keyed by
+  per-slot temperature) runs fused with the decode step, so each step
+  transfers one int32 per slot instead of a vocab-size logits row.
+* **Inactive-slot masking** — finished/empty slots are frozen inside the
+  jitted decode wrapper (``len`` restored, sampled token suppressed), so
+  a draining batch can never advance a dead slot's cache length past
+  ``max_len`` and corrupt its last cache position.
+
+The weights are the *packed* QuantizedTensor representation — every
+matmul runs through the dequant-matmul kernel path (``qlinear``
 dispatch), i.e. the paper's deployment format is the first-class serving
-path, not a simulation.
+path, not a simulation.  Orchestration stays in Python (jitted
+prefill/decode inner loops) — on TPU the jitted steps dominate and
+Python overhead hides under the device queue.
 
-This engine intentionally keeps orchestration in Python (jitted prefill /
-decode_step inner loops) — the same structure used by production JAX
-servers; on TPU the jitted steps dominate and Python overhead hides under
-the device queue.
+Models whose ``prefill`` does not accept ``prompt_len`` (hymba's ring
+buffer, recurrent xlstm) fall back to per-request exact-length prefill
+admitted through the jitted per-slot :func:`.cache_ops.write_slot` op —
+correctness fixes apply there too, only the compile-per-length cost
+remains.
 """
 from __future__ import annotations
 
 import dataclasses
+import inspect
+import time
 from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from .buckets import bucket_for, default_buckets
+from .cache_ops import merge_slots, write_slot
+from .sampler import sample_tokens
 
 
 @dataclasses.dataclass
@@ -28,127 +52,349 @@ class Request:
     prompt: np.ndarray           # (T,) int32
     max_new_tokens: int = 32
     temperature: float = 0.0     # 0 => greedy
+    top_k: int = 0               # 0 => disabled
+    deadline: Optional[float] = None   # absolute time.time() cutoff
+    on_token: Optional[Callable[[int, int], None]] = None
+    on_finish: Optional[Callable[[int, np.ndarray], None]] = None
     out_tokens: Optional[list] = None
+
+
+class TraceCounter:
+    """Wraps a jitted callable; counts calls and distinct input
+    shape/dtype signatures (== XLA traces for a jit with no static
+    args).  The serving tests assert prefill traces <= bucket count."""
+
+    def __init__(self, fn):
+        self.fn = fn
+        self.calls = 0
+        self._sigs = set()
+
+    def __call__(self, *args):
+        self.calls += 1
+        sig = tuple(
+            (leaf.shape, str(leaf.dtype))
+            for leaf in jax.tree_util.tree_leaves(args)
+            if hasattr(leaf, "shape"))
+        self._sigs.add(sig)
+        return self.fn(*args)
+
+    @property
+    def traces(self) -> int:
+        return len(self._sigs)
+
+
+def _empty() -> np.ndarray:
+    return np.zeros((0,), np.int32)
 
 
 class ServeEngine:
     def __init__(self, model, params, *, n_slots: int = 4,
-                 max_len: int = 512, rng_seed: int = 0):
+                 max_len: int = 512, buckets=None, rng_seed: int = 0):
         self.model = model
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
         self.cfg = model.cfg
-        self._rng = np.random.Generator(np.random.PCG64(rng_seed))
+        if buckets is None:
+            self.buckets = default_buckets(max_len)
+        else:
+            # the largest bucket is always exactly max_len so every
+            # admissible prompt has a bucket (same invariant as
+            # default_buckets)
+            self.buckets = tuple(sorted({min(int(b), max_len)
+                                         for b in buckets} | {max_len}))
+        self._supports_plen = (
+            "prompt_len" in inspect.signature(model.prefill).parameters)
+        self._key = jax.random.PRNGKey(rng_seed)
+        self._rng_step = 0
 
-        self._prefill = jax.jit(model.prefill)
-        self._decode = jax.jit(model.decode_step)
-        # slot-state: per-slot cache is a full-batch cache of batch=1 each
-        self._caches: List = [None] * n_slots
-        self._active: List[Optional[Request]] = [None] * n_slots
-        self._tokens_done = 0
+        # jitted entry points (TraceCounter feeds metrics()["*_traces"])
+        self._prefill1 = TraceCounter(jax.jit(model.prefill))
+        self._prefill_admit = TraceCounter(jax.jit(self._prefill_admit_fn))
+        self._admit_one = TraceCounter(jax.jit(self._admit_one_fn))
+        self._decode = TraceCounter(jax.jit(self._decode_fn))
+        self._sample = jax.jit(sample_tokens)
+
+        self._m = dict(tokens_generated=0, decode_steps=0, prefill_batches=0,
+                       admitted=0, completed=0, expired=0, truncated=0,
+                       serve_time_s=0.0)
+
+    # -- jitted bodies -------------------------------------------------------
+    def _prefill_admit_fn(self, params, tokens, prompt_len, cache,
+                          admit_mask, temps, top_k, key, slot_last):
+        """Batched bucketed prefill + admission + first-token sampling.
+
+        tokens (n_slots, bucket) is slot-aligned: row s is the prompt
+        admitted into slot s (rows with admit_mask False are dummies).
+        """
+        scratch = self.model.init_cache(self.n_slots, self.max_len)
+        logits, new = self.model.prefill(params, tokens, scratch, prompt_len)
+        merged = merge_slots(cache, new, admit_mask)
+        first = sample_tokens(logits[:, 0], temps, top_k, key)
+        slot_last = jnp.where(admit_mask, first, slot_last)
+        return slot_last, merged
+
+    def _admit_one_fn(self, params, tokens, cache, slot, temps, top_k, key,
+                      slot_last):
+        """Fallback admission: exact-length batch-1 prefill, written into
+        the batched cache by one per-slot dynamic_update_index_in_dim op
+        (slot is traced — a single compile serves every slot)."""
+        c1 = self.model.init_cache(1, self.max_len)
+        logits, c1 = self.model.prefill(params, tokens, c1)
+        merged = write_slot(cache, c1, slot)
+        first = sample_tokens(logits[:, 0], temps, top_k, key)
+        slot_last = jax.lax.dynamic_update_index_in_dim(
+            slot_last, first[0], slot, 0)
+        return slot_last, merged
+
+    def _decode_fn(self, params, cache, slot_last, active, temps, top_k,
+                   key):
+        """One decode step with inactive slots masked.
+
+        Inactive slots still flow through the batched matmuls (shape
+        stability) but their ``len`` is restored afterwards and their
+        in-bounds scratch write lands at a position attention masks out —
+        a dead slot's cache length can never pass ``max_len``."""
+        old_len = cache["len"]
+        safe_len = jnp.where(active, old_len,
+                             jnp.minimum(old_len, self.max_len - 1))
+        cache = dict(cache, len=safe_len)
+        logits, cache = self.model.decode_step(params, cache,
+                                               slot_last[:, None])
+        cache = dict(cache, len=jnp.where(active, cache["len"], old_len))
+        nxt = sample_tokens(logits[:, 0], temps, top_k, key)
+        nxt = jnp.where(active, nxt, slot_last)
+        return nxt, cache
+
+    # -- helpers -------------------------------------------------------------
+    def _next_key(self):
+        self._rng_step += 1
+        return jax.random.fold_in(self._key, self._rng_step)
+
+    def _check_prompt(self, req: Request) -> int:
+        n = int(np.asarray(req.prompt).shape[0])
+        if n < 1:
+            raise ValueError(f"req {req.rid}: empty prompt")
+        limit = self.buckets[-1] if self._supports_plen else self.max_len
+        if n > limit:
+            raise ValueError(
+                f"req {req.rid}: prompt length {n} exceeds {limit}")
+        return n
 
     # -- single-request path -------------------------------------------------
-    def _sample(self, logits: jax.Array, temperature: float) -> int:
-        v = self.cfg.vocab_size
-        logits = np.asarray(logits[0, 0, :v], np.float64)
-        if temperature <= 0:
-            return int(np.argmax(logits))
-        logits = logits / temperature
-        p = np.exp(logits - logits.max())
-        p /= p.sum()
-        return int(self._rng.choice(v, p=p))
-
     def generate(self, request: Request) -> np.ndarray:
-        """Single-request generate (used by tests and the quickstart)."""
+        """Single-request generate (tests / quickstart): exact-length
+        batch-1 prefill + batch-1 decode through the same jitted sampler
+        ops as the batched path."""
+        self._check_prompt(request)
+        if request.max_new_tokens <= 0:
+            return _empty()
+        t0 = time.time()
         cache = self.model.init_cache(1, self.max_len)
-        tok = jnp.asarray(request.prompt, jnp.int32)[None]
-        logits, cache = self._prefill(self.params, tok, cache)
-        out = []
-        nxt = self._sample(logits, request.temperature)
-        out.append(nxt)
-        for _ in range(request.max_new_tokens - 1):
-            logits, cache = self._decode(
-                self.params, cache, jnp.asarray([[nxt]], jnp.int32))
-            nxt = self._sample(logits, request.temperature)
-            out.append(nxt)
-        self._tokens_done += len(out)
+        tok = jnp.asarray(np.asarray(request.prompt, np.int32))[None]
+        logits, cache = self._prefill1(self.params, tok, cache)
+        temps = jnp.asarray([request.temperature], jnp.float32)
+        top_k = jnp.asarray([request.top_k], jnp.int32)
+        active = jnp.ones((1,), bool)
+        nxt = self._sample(logits[:, 0], temps, top_k, self._next_key())
+        out = [int(nxt[0])]
+        n_steps = min(request.max_new_tokens - 1,
+                      self.max_len - len(request.prompt))
+        for _ in range(n_steps):
+            nxt, cache = self._decode(self.params, cache, nxt, active,
+                                      temps, top_k, self._next_key())
+            self._m["decode_steps"] += 1
+            out.append(int(nxt[0]))
+        self._m["tokens_generated"] += len(out)
+        self._m["serve_time_s"] += time.time() - t0
         return np.asarray(out, np.int32)
 
-    # -- batched continuous path ----------------------------------------------
+    # -- batched continuous path ---------------------------------------------
     def serve(self, requests: List[Request]) -> dict:
         """Run all requests to completion with slot-based batching.
 
-        Returns {rid: np.ndarray of generated tokens}."""
+        Returns {rid: np.ndarray of generated tokens}.  Requests with
+        ``max_new_tokens=0`` complete immediately with an empty sequence;
+        requests whose ``deadline`` already passed at admission expire
+        with an empty sequence; a running request whose deadline passes
+        mid-decode is truncated at the tokens produced so far."""
+        t0 = time.time()
+        for r in requests:
+            self._check_prompt(r)
         queue = list(requests)
-        results = {}
-        # batched cache: one cache with batch = n_slots
-        cache = self.model.init_cache(self.n_slots, self.max_len)
-        # per-slot state kept host-side
-        slot_req: List[Optional[Request]] = [None] * self.n_slots
-        slot_last = np.zeros((self.n_slots, 1), np.int32)
-        slot_left = np.zeros(self.n_slots, np.int32)
+        results: dict = {}
+
+        n = self.n_slots
+        cache = self.model.init_cache(n, self.max_len)
+        slot_req: List[Optional[Request]] = [None] * n
+        slot_last = jnp.zeros((n,), jnp.int32)
+        slot_len = np.zeros(n, np.int64)      # host mirror of cache["len"]
+        temps = np.zeros(n, np.float32)
+        top_k = np.zeros(n, np.int32)
+        active = np.zeros(n, bool)
+
+        def finish(s: int, counter: str = "completed"):
+            req = slot_req[s]
+            out = np.asarray(req.out_tokens, np.int32)
+            results[req.rid] = out
+            self._m[counter] += 1
+            slot_req[s] = None
+            active[s] = False
+            if req.on_finish:
+                req.on_finish(req.rid, out)
+
+        def handle_immediate(req: Request) -> bool:
+            """True if the request completes without ever taking a slot."""
+            if req.deadline is not None and time.time() > req.deadline:
+                results[req.rid] = _empty()
+                self._m["expired"] += 1
+                if req.on_finish:
+                    req.on_finish(req.rid, results[req.rid])
+                return True
+            if req.max_new_tokens <= 0:
+                results[req.rid] = _empty()
+                self._m["completed"] += 1
+                if req.on_finish:
+                    req.on_finish(req.rid, results[req.rid])
+                return True
+            return False
+
+        def emit(req: Request, tok: int):
+            req.out_tokens.append(tok)
+            self._m["tokens_generated"] += 1
+            if req.on_token:
+                req.on_token(req.rid, tok)
+
+        def admit(group, free):
+            nonlocal slot_last, cache
+            for req, s in zip(group, free):
+                req.out_tokens = []
+                slot_req[s] = req
+                active[s] = True
+                temps[s] = req.temperature
+                top_k[s] = req.top_k
+                slot_len[s] = len(req.prompt)
+                self._m["admitted"] += 1
+
+        def post_admit(req, s, first_tok):
+            emit(req, first_tok)
+            if len(req.out_tokens) >= req.max_new_tokens:
+                finish(s)
+            elif slot_len[s] >= self.max_len:
+                finish(s, counter="truncated")  # cache already full
 
         def fill_slots():
-            for s in range(self.n_slots):
-                if slot_req[s] is None and queue:
-                    req = queue.pop(0)
-                    req.out_tokens = []
-                    # per-request prefill into a batch-1 cache, then splice
-                    c1 = self.model.init_cache(1, self.max_len)
-                    tok = jnp.asarray(req.prompt, jnp.int32)[None]
-                    logits, c1 = self._prefill(self.params, tok, c1)
-                    _splice_cache(cache, c1, s)
-                    nxt = self._sample(logits, req.temperature)
-                    req.out_tokens.append(nxt)
-                    slot_req[s] = req
-                    slot_last[s, 0] = nxt
-                    slot_left[s] = req.max_new_tokens - 1
+            nonlocal slot_last, cache
+            while True:
+                free = [s for s in range(n) if slot_req[s] is None]
+                if not free or not queue:
+                    return
+                if not self._supports_plen:
+                    req = None
+                    while queue:
+                        cand = queue.pop(0)
+                        if not handle_immediate(cand):
+                            req = cand
+                            break
+                    if req is None:
+                        continue
+                    s = free[0]
+                    admit([req], [s])
+                    slot_last, cache = self._admit_one(
+                        self.params,
+                        jnp.asarray(np.asarray(req.prompt, np.int32))[None],
+                        cache, jnp.asarray(s, jnp.int32),
+                        jnp.asarray([req.temperature], jnp.float32),
+                        jnp.asarray([req.top_k], jnp.int32),
+                        self._next_key(), slot_last)
+                    self._m["prefill_batches"] += 1
+                    post_admit(req, s, int(np.asarray(slot_last)[s]))
+                    continue
+
+                # bucketed batched admission: group FIFO-ordered waiting
+                # requests that share the head request's bucket
+                while queue and handle_immediate(queue[0]):
+                    queue.pop(0)
+                if not queue:
+                    continue
+                b = bucket_for(self.buckets, len(queue[0].prompt))
+                group = []
+                i = 0
+                while i < len(queue) and len(group) < len(free):
+                    r = queue[i]
+                    if handle_immediate(r):
+                        queue.pop(i)
+                        continue
+                    if bucket_for(self.buckets, len(r.prompt)) == b:
+                        group.append(queue.pop(i))
+                        continue
+                    i += 1
+                if not group:
+                    continue
+                tokens = np.zeros((n, b), np.int32)
+                plen = np.ones(n, np.int32)
+                admit_mask = np.zeros(n, bool)
+                targets = free[:len(group)]
+                for req, s in zip(group, targets):
+                    p = np.asarray(req.prompt, np.int32)
+                    tokens[s, :len(p)] = p
+                    plen[s] = len(p)
+                    admit_mask[s] = True
+                admit(group, targets)
+                slot_last, cache = self._prefill_admit(
+                    self.params, jnp.asarray(tokens), jnp.asarray(plen),
+                    cache, jnp.asarray(admit_mask), jnp.asarray(temps),
+                    jnp.asarray(top_k), self._next_key(), slot_last)
+                self._m["prefill_batches"] += 1
+                toks = np.asarray(slot_last)
+                for req, s in zip(group, targets):
+                    post_admit(req, s, int(toks[s]))
 
         fill_slots()
-        while any(r is not None for r in slot_req):
-            logits, cache = self._decode(self.params, cache,
-                                         jnp.asarray(slot_last))
-            logits_np = np.asarray(logits[:, 0, :self.cfg.vocab_size])
-            for s in range(self.n_slots):
+        while active.any():
+            slot_last, cache = self._decode(
+                self.params, cache, slot_last, jnp.asarray(active),
+                jnp.asarray(temps), jnp.asarray(top_k), self._next_key())
+            self._m["decode_steps"] += 1
+            toks = np.asarray(slot_last)
+            now = time.time()
+            for s in range(n):
                 req = slot_req[s]
-                if req is None:
+                if req is None or not active[s]:
                     continue
-                row = logits_np[s]
-                if req.temperature <= 0:
-                    nxt = int(np.argmax(row))
-                else:
-                    p = np.exp((row - row.max()) / req.temperature)
-                    p /= p.sum()
-                    nxt = int(self._rng.choice(self.cfg.vocab_size, p=p))
-                req.out_tokens.append(nxt)
-                slot_last[s, 0] = nxt
-                slot_left[s] -= 1
-                if slot_left[s] <= 0:
-                    results[req.rid] = np.asarray(req.out_tokens, np.int32)
-                    self._tokens_done += len(req.out_tokens)
-                    slot_req[s] = None
-            fill_slots()
+                slot_len[s] += 1
+                assert slot_len[s] <= self.max_len, \
+                    f"slot {s}: cache len {slot_len[s]} > max_len"
+                emit(req, int(toks[s]))
+                if len(req.out_tokens) >= req.max_new_tokens:
+                    finish(s)
+                elif req.deadline is not None and now > req.deadline:
+                    finish(s, counter="truncated")
+                elif slot_len[s] >= self.max_len:
+                    finish(s, counter="truncated")
+            if queue and any(r is None for r in slot_req):
+                fill_slots()
+        self._m["serve_time_s"] += time.time() - t0
         return results
 
-
-def _splice_cache(batched_cache, single_cache, slot: int):
-    """Copy a batch-1 cache into slot ``slot`` of the batched cache.
-
-    The batch axis differs per leaf family — KV caches are (L, B, ...),
-    per-slot lengths are (B,) — so it is located generically as the first
-    axis where the batched and single shapes disagree."""
-    def splice(b, s):
-        if b.shape == s.shape:
-            return s  # fully replicated leaf (none today, future-proof)
-        for ax in range(b.ndim):
-            if ax < s.ndim and b.shape[ax] != s.shape[ax]:
-                idx = [slice(None)] * b.ndim
-                idx[ax] = slice(slot, slot + 1)
-                return b.at[tuple(idx)].set(s.astype(b.dtype))
-        raise ValueError(f"cannot locate batch axis: {b.shape} vs {s.shape}")
-
-    new = jax.tree_util.tree_map(splice, batched_cache, single_cache)
-    # mutate the caller's dict in place (cache trees are dicts at top level)
-    for k in batched_cache:
-        batched_cache[k] = new[k]
+    # -- observability -------------------------------------------------------
+    def metrics(self) -> dict:
+        """Counter snapshot: throughput, prefill/decode call and trace
+        counts, and the retrace count (compiles beyond the first per
+        jitted entry point — bounded by len(buckets)-1 for the bucketed
+        prefill)."""
+        m = dict(self._m)
+        m["prefill_calls"] = (self._prefill_admit.calls
+                              + self._admit_one.calls + self._prefill1.calls)
+        m["prefill_traces"] = self._prefill_admit.traces
+        m["prefill_traces_single"] = (self._admit_one.traces
+                                      + self._prefill1.traces)
+        m["decode_traces"] = self._decode.traces
+        m["retrace_count"] = sum(
+            max(0, c.traces - 1)
+            for c in (self._prefill_admit, self._admit_one, self._prefill1,
+                      self._decode))
+        m["buckets"] = list(self.buckets)
+        dt = m["serve_time_s"]
+        m["tokens_per_s"] = (m["tokens_generated"] / dt) if dt > 0 else 0.0
+        return m

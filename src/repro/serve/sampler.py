@@ -1,0 +1,44 @@
+"""On-device batched token sampling for the serve loop.
+
+One jitted call samples the whole decode batch: greedy, temperature, and
+top-k are all expressed per-slot, so mixed-policy batches share a single
+XLA program and the decode loop transfers one int32 per slot per step
+instead of a vocab-size logits row.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_tokens(logits: jax.Array, temperature: jax.Array,
+                  top_k: jax.Array, key: jax.Array) -> jax.Array:
+    """Sample one token per batch row.
+
+    logits: (B, V) — may carry the -1e30 padded-vocab mask from
+    :func:`~repro.models.common.logits_from_hidden`; masked columns have
+    probability zero and are never the argmax.
+    temperature: (B,) f32 — ``<= 0`` means greedy for that row.
+    top_k: (B,) int32 — ``0`` disables top-k for that row; otherwise only
+    the k highest logits stay eligible.
+    key: PRNG key for the whole batch (rows draw independent noise).
+
+    Returns (B,) int32.
+    """
+    logits = logits.astype(jnp.float32)
+    v = logits.shape[-1]
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    desc = jnp.sort(logits, axis=-1)[:, ::-1]
+    kth = jnp.take_along_axis(
+        desc, jnp.clip(top_k.astype(jnp.int32) - 1, 0, v - 1)[:, None],
+        axis=-1)
+    use_topk = (top_k > 0)[:, None]
+    masked = jnp.where(use_topk & (logits < kth), -jnp.inf, logits)
+
+    do_sample = temperature > 0
+    scaled = masked / jnp.maximum(temperature, 1e-6)[:, None]
+    # greedy rows skip the (potentially inf-scaled) division result
+    scaled = jnp.where(do_sample[:, None], scaled, 0.0)
+    drawn = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+    return jnp.where(do_sample, drawn, greedy)

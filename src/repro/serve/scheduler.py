@@ -1,0 +1,68 @@
+"""Admission scheduling in front of :class:`~repro.serve.engine.ServeEngine`.
+
+The engine drains a FIFO of requests; the scheduler decides the FIFO.
+It keeps an earliest-deadline-first priority queue (requests without a
+deadline sort last, FIFO among themselves), attaches per-request
+streaming callbacks, and exposes the engine's metrics snapshot.
+
+Deadline semantics (enforced by the engine, ordered by the scheduler):
+
+* a request whose deadline has already passed when it would be admitted
+  **expires** — empty output, counted in ``metrics()["expired"]``;
+* a running request whose deadline passes mid-decode is **truncated** at
+  the tokens produced so far (``metrics()["truncated"]``).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Callable, Optional
+
+import numpy as np
+
+from .engine import Request, ServeEngine
+
+
+class Scheduler:
+    """EDF admission queue over a ServeEngine."""
+
+    def __init__(self, engine: ServeEngine):
+        self.engine = engine
+        self._heap: list = []
+        self._seq = itertools.count()
+
+    def submit(self, request: Request, *,
+               deadline: Optional[float] = None,
+               on_token: Optional[Callable[[int, int], None]] = None,
+               on_finish: Optional[Callable[[int, np.ndarray], None]] = None,
+               ) -> int:
+        """Queue a request; returns its rid.
+
+        ``deadline`` is an absolute ``time.time()`` cutoff.  ``on_token``
+        is called as ``on_token(rid, token)`` for every generated token
+        (streaming); ``on_finish(rid, tokens)`` once on completion,
+        expiry, or truncation."""
+        if deadline is not None:
+            request.deadline = deadline
+        if on_token is not None:
+            request.on_token = on_token
+        if on_finish is not None:
+            request.on_finish = on_finish
+        key = request.deadline if request.deadline is not None else float("inf")
+        heapq.heappush(self._heap, (key, next(self._seq), request))
+        return request.rid
+
+    def pending(self) -> int:
+        return len(self._heap)
+
+    def run(self) -> dict:
+        """Drain the queue through the engine in EDF order.
+
+        Returns {rid: np.ndarray of generated tokens}."""
+        reqs = [heapq.heappop(self._heap)[2] for _ in range(len(self._heap))]
+        if not reqs:
+            return {}
+        return self.engine.serve(reqs)
+
+    def metrics(self) -> dict:
+        return self.engine.metrics()

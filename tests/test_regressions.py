@@ -238,3 +238,54 @@ def test_keep_zero_rejected(tmp_path):
     with pytest.raises(ValueError, match="keep"):
         ckpt.save(str(tmp_path), 1, _tree(), keep=0)
     assert ckpt.latest_step(str(tmp_path)) is None  # rejected before write
+
+
+# ---------------------------------------------------------------------------
+# merge_stats: the (K, d) "sample" subsample must mix rows from every
+# calibration batch (round-robin), not keep only batch 0's rows — keeping
+# only the first batch biased the exact search loss to batch 0.
+# ---------------------------------------------------------------------------
+
+def test_merge_stats_sample_round_robin():
+    from repro.core.stats import merge_stats
+
+    K, d = 8, 4
+
+    def batch_stats(val):
+        return {"site": {"mean_abs": np.full((d,), val, np.float32),
+                         "mean_sq": np.full((d,), val, np.float32),
+                         "sample": np.full((K, d), val, np.float32)}}
+
+    acc = batch_stats(0.0)
+    for t in range(1, 4):                      # merge batches 1, 2, 3
+        acc = merge_stats(acc, batch_stats(float(t)), float(t), 1.0,
+                          batch_index=t)
+    sample = np.asarray(acc["site"]["sample"])
+    row_vals = set(np.unique(sample[:, 0]).tolist())
+    assert 3.0 in row_vals, "latest batch's rows must appear"
+    assert len(row_vals) >= 3, f"expected a mix of batches, got {row_vals}"
+    # moments stay exact weighted means
+    np.testing.assert_allclose(acc["site"]["mean_abs"],
+                               np.full((d,), (1 + 2 + 3) / 4.0), rtol=1e-6)
+
+
+def test_run_calibration_samples_span_batches():
+    """End-to-end: a later batch's activation rows reach the final
+    subsample through run_calibration."""
+    from repro.core.calibration import run_calibration
+
+    K = 4
+
+    def apply_fn(params, batch, collect_stats=False):
+        x = batch["tokens"].astype(jnp.float32)
+        val = x[0, 0]
+        stats = {"site": {"mean_abs": jnp.full((2,), val),
+                          "mean_sq": jnp.full((2,), val),
+                          "sample": jnp.full((K, 2), val)}}
+        return None, {"stats": stats}
+
+    batches = [{"tokens": jnp.full((2, 3), float(i))} for i in range(4)]
+    out = run_calibration(apply_fn, None, batches)
+    vals = set(np.unique(np.asarray(out["site"]["sample"])).tolist())
+    assert vals & {1.0, 2.0, 3.0}, f"later batches missing: {vals}"
+    assert 0.0 in vals

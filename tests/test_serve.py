@@ -1,4 +1,8 @@
-"""Serving engine: quantized-weight generation + continuous batching."""
+"""Serving engine: quantized-weight generation + bucketed continuous
+batching (engine, sampler, cache ops, scheduler)."""
+import dataclasses
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,7 +11,8 @@ import pytest
 from repro.configs import ARCHS
 from repro.core import QuantSpec, quantize_model, run_calibration
 from repro.models.registry import build_model
-from repro.serve.engine import Request, ServeEngine
+from repro.serve import (Request, Scheduler, ServeEngine, default_buckets,
+                         sample_tokens, write_slot)
 
 
 @pytest.fixture(scope="module")
@@ -24,6 +29,23 @@ def quantized_setup():
     return cfg, m, qp
 
 
+@pytest.fixture(scope="module")
+def kv8_setup():
+    cfg = dataclasses.replace(ARCHS["llama3-8b"].tiny(), kv_cache_bits=8)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def _mixed_requests(cfg, n, seed=0, max_new=(1, 9)):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=int(rng.integers(3, 40))),
+                    max_new_tokens=int(rng.integers(*max_new)))
+            for i in range(n)]
+
+
 def test_generate_deterministic(quantized_setup):
     cfg, m, qp = quantized_setup
     eng = ServeEngine(m, qp, max_len=64)
@@ -36,13 +58,11 @@ def test_generate_deterministic(quantized_setup):
 
 
 def test_batched_serve_matches_single(quantized_setup):
-    """Continuous batching (different prompt lengths sharing slots) must
-    reproduce the single-request greedy outputs exactly."""
+    """Continuous batching (different prompt lengths and budgets sharing
+    slots) must reproduce the single-request greedy outputs exactly."""
     cfg, m, qp = quantized_setup
     eng = ServeEngine(m, qp, n_slots=3, max_len=64)
-    rng = np.random.default_rng(0)
-    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, size=5 + 3 * i),
-                    max_new_tokens=6) for i in range(5)]
+    reqs = _mixed_requests(cfg, 6, seed=0)
     batched = eng.serve([Request(rid=r.rid, prompt=r.prompt,
                                  max_new_tokens=r.max_new_tokens)
                          for r in reqs])
@@ -51,10 +71,92 @@ def test_batched_serve_matches_single(quantized_setup):
         np.testing.assert_array_equal(batched[r.rid], single)
 
 
+def test_bucketed_prefill_compiles_once_per_bucket(quantized_setup):
+    """16 mixed-length requests: prefill compiles at most once per
+    length bucket (asserted via the trace-counting jit wrapper), and the
+    batched greedy output matches generate() token-for-token."""
+    cfg, m, qp = quantized_setup
+    eng = ServeEngine(m, qp, n_slots=4, max_len=64)
+    reqs = _mixed_requests(cfg, 16, seed=1, max_new=(1, 7))
+    batched = eng.serve([Request(rid=r.rid, prompt=r.prompt,
+                                 max_new_tokens=r.max_new_tokens)
+                         for r in reqs])
+    metrics = eng.metrics()
+    assert metrics["prefill_traces"] <= len(eng.buckets)
+    assert metrics["prefill_batches"] >= metrics["prefill_traces"]
+    assert metrics["admitted"] == 16
+    assert metrics["completed"] == 16
+    for r in reqs:
+        np.testing.assert_array_equal(batched[r.rid], eng.generate(r))
+
+
+def test_batched_serve_matches_single_kv8(kv8_setup):
+    """Serving invariants hold on the int8 KV cache too."""
+    cfg, m, params = kv8_setup
+    eng = ServeEngine(m, params, n_slots=3, max_len=48)
+    reqs = _mixed_requests(cfg, 5, seed=2)
+    batched = eng.serve([Request(rid=r.rid, prompt=r.prompt,
+                                 max_new_tokens=r.max_new_tokens)
+                         for r in reqs])
+    assert eng.metrics()["prefill_traces"] <= len(eng.buckets)
+    for r in reqs:
+        np.testing.assert_array_equal(batched[r.rid], eng.generate(r))
+
+
+def test_max_new_tokens_zero(quantized_setup):
+    """max_new_tokens=0 returns an empty sequence (no token is sampled
+    from the prefill logits), in both generate() and serve()."""
+    cfg, m, qp = quantized_setup
+    eng = ServeEngine(m, qp, n_slots=2, max_len=64)
+    prompt = np.arange(6) % cfg.vocab_size
+    assert eng.generate(Request(rid=0, prompt=prompt,
+                                max_new_tokens=0)).shape == (0,)
+    res = eng.serve([Request(rid=0, prompt=prompt, max_new_tokens=0),
+                     Request(rid=1, prompt=prompt, max_new_tokens=3)])
+    assert res[0].shape == (0,)
+    assert res[1].shape == (3,)
+
+
+def test_finished_slots_never_overrun_cache(quantized_setup):
+    """A short request finishing early must not keep advancing its
+    slot's cache length while a long request drains: the inactive slot
+    is masked and every live slot obeys len <= max_len (capacity-limited
+    requests are truncated, not clamp-corrupted)."""
+    cfg, m, qp = quantized_setup
+    max_len = 24
+    eng = ServeEngine(m, qp, n_slots=2, max_len=max_len, buckets=(8, 24))
+    prompt = (np.arange(8) % cfg.vocab_size).astype(np.int32)
+    res = eng.serve([
+        Request(rid=0, prompt=prompt, max_new_tokens=2),
+        Request(rid=1, prompt=prompt, max_new_tokens=100),  # wants > capacity
+    ])
+    assert res[0].shape == (2,)
+    # rid 1 truncates at capacity: prefill token + (max_len - prompt) decodes
+    assert res[1].shape == (1 + max_len - len(prompt),)
+    assert eng.metrics()["truncated"] == 1
+    # the truncated prefix must equal an unconstrained run's prefix
+    big = ServeEngine(m, qp, n_slots=2, max_len=64)
+    ref = big.generate(Request(rid=9, prompt=prompt, max_new_tokens=100))
+    np.testing.assert_array_equal(res[1], ref[:len(res[1])])
+
+
+def test_prompt_filling_cache_exactly(quantized_setup):
+    """A prompt of exactly max_len still yields the prefill token (the
+    cache has no room to decode further — truncated, never clamped)."""
+    cfg, m, qp = quantized_setup
+    eng = ServeEngine(m, qp, n_slots=2, max_len=16)
+    prompt = (np.arange(16) % cfg.vocab_size).astype(np.int32)
+    res = eng.serve([Request(rid=0, prompt=prompt, max_new_tokens=5)])
+    assert res[0].shape == (1,)
+    assert eng.metrics()["truncated"] == 1
+    single = eng.generate(Request(rid=1, prompt=prompt, max_new_tokens=5))
+    np.testing.assert_array_equal(res[0], single[:1])
+    assert single.shape == (1,)
+
+
 def test_int8_kv_cache_decode():
     """Beyond-paper feature: int8 KV cache halves cache bytes with near-
     lossless decode (argmax agreement with the fp-cache path)."""
-    import dataclasses
     cfg = dataclasses.replace(ARCHS["llama3-8b"].tiny(), kv_cache_bits=8)
     m = build_model(cfg)
     params = m.init(jax.random.PRNGKey(0))
@@ -71,3 +173,95 @@ def test_int8_kv_cache_decode():
     assert rmse < 0.05
     assert bool(jnp.all(jnp.argmax(ld[:, 0, :cfg.vocab_size], -1)
                         == jnp.argmax(lf[:, -1, :cfg.vocab_size], -1)))
+
+
+# -- unit pieces -------------------------------------------------------------
+
+def test_default_buckets():
+    assert default_buckets(64) == (16, 32, 64)
+    assert default_buckets(48) == (16, 32, 48)
+    assert default_buckets(8) == (8,)
+
+
+def test_sampler_greedy_topk_temperature():
+    key = jax.random.PRNGKey(0)
+    logits = jnp.asarray([[0.1, 3.0, 1.0, -1e30],
+                          [2.0, 0.5, 1.5, -1e30]], jnp.float32)
+    # greedy rows: argmax regardless of key
+    out = sample_tokens(logits, jnp.zeros(2), jnp.zeros(2, jnp.int32), key)
+    np.testing.assert_array_equal(np.asarray(out), [1, 0])
+    # temperature rows never pick the -1e30 padded column; top_k=1 is greedy
+    temps = jnp.asarray([0.7, 1.3])
+    for i in range(20):
+        k = jax.random.fold_in(key, i)
+        out = sample_tokens(logits, temps, jnp.zeros(2, jnp.int32), k)
+        assert int(out.max()) < 3
+        out1 = sample_tokens(logits, temps, jnp.ones(2, jnp.int32), k)
+        np.testing.assert_array_equal(np.asarray(out1), [1, 0])
+    # top_k=2 restricts to the two highest logits per row
+    for i in range(20):
+        k = jax.random.fold_in(key, 100 + i)
+        out = sample_tokens(logits, temps, jnp.full(2, 2, jnp.int32), k)
+        assert int(out[0]) in (1, 2) and int(out[1]) in (0, 2)
+
+
+def test_write_slot_traced_index(quantized_setup):
+    """The jitted per-slot admission op writes one batch-1 cache row into
+    the batched cache, with the slot index traced (single compile)."""
+    cfg, m, _ = quantized_setup
+    batched = m.init_cache(3, 16)
+    single = m.init_cache(1, 16)
+    single = {k: jnp.ones_like(v) for k, v in single.items()}
+    jitted = jax.jit(write_slot)
+    out = jitted(batched, single, jnp.asarray(1, jnp.int32))
+    assert bool(jnp.all(out["k"][:, 1] == 1)) and bool(out["len"][1] == 1)
+    assert bool(jnp.all(out["k"][:, 0] == 0)) and bool(jnp.all(out["k"][:, 2] == 0))
+    out2 = jitted(out, single, jnp.asarray(2, jnp.int32))
+    assert bool(jnp.all(out2["k"][:, 2] == 1))
+    assert jitted._cache_size() == 1  # slot index is traced, not static
+
+
+def test_scheduler_deadlines_and_streaming(quantized_setup):
+    cfg, m, qp = quantized_setup
+    eng = ServeEngine(m, qp, n_slots=2, max_len=64)
+    sched = Scheduler(eng)
+    prompt = np.arange(5) % cfg.vocab_size
+    streamed = {0: [], 1: [], 2: []}
+    finished = []
+    sched.submit(Request(rid=0, prompt=prompt, max_new_tokens=4),
+                 on_token=lambda rid, t: streamed[rid].append(t),
+                 on_finish=lambda rid, out: finished.append(rid))
+    sched.submit(Request(rid=1, prompt=prompt, max_new_tokens=4),
+                 deadline=time.time() - 1.0,   # already expired
+                 on_finish=lambda rid, out: finished.append(rid))
+    sched.submit(Request(rid=2, prompt=prompt, max_new_tokens=2),
+                 deadline=time.time() + 300.0,
+                 on_token=lambda rid, t: streamed[rid].append(t))
+    res = sched.run()
+    assert res[1].shape == (0,)                     # expired before admission
+    assert sched.metrics()["expired"] == 1
+    assert res[0].tolist() == streamed[0]           # stream == final output
+    assert res[2].tolist() == streamed[2]
+    assert len(res[0]) == 4 and len(res[2]) == 2
+    assert sorted(finished) == [0, 1]
+    # EDF: the deadline-bearing request is admitted first
+    assert sched.pending() == 0
+
+
+def test_hymba_fallback_serve_matches_generate():
+    """Models without prompt_len support (hymba ring-buffer prefill) use
+    the per-request write_slot fallback and still serve correctly."""
+    cfg = ARCHS["hymba-1.5b"].tiny()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(m, params, n_slots=2, max_len=48)
+    assert not eng._supports_plen
+    rng = np.random.default_rng(3)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size,
+                                               size=5 + 4 * i),
+                    max_new_tokens=3 + i) for i in range(3)]
+    batched = eng.serve([Request(rid=r.rid, prompt=r.prompt,
+                                 max_new_tokens=r.max_new_tokens)
+                         for r in reqs])
+    for r in reqs:
+        np.testing.assert_array_equal(batched[r.rid], eng.generate(r))
