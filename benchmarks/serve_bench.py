@@ -114,13 +114,25 @@ def _requests(cfg, n, new_tokens, seed=0):
             for i in range(n)]
 
 
-def bench(emit=print, *, requests=16, new_tokens=16, n_slots=4, max_len=128,
-          record=True):
-    """Returns (legacy tok/s, bucketed tok/s, speedup)."""
+def _shared_prefix_requests(cfg, n, new_tokens, prefix_len=32, seed=0):
+    """Mixed-length requests sharing one system-prompt prefix — the
+    paged bench workload (prefix covers whole pages, tails vary)."""
+    from repro.serve import Request
+    rng = np.random.default_rng(seed)
+    sys_prompt = rng.integers(0, cfg.vocab_size, size=prefix_len)
+    return [Request(rid=i,
+                    prompt=np.concatenate(
+                        [sys_prompt,
+                         rng.integers(0, cfg.vocab_size,
+                                      size=int(rng.integers(4, 40)))]),
+                    max_new_tokens=new_tokens)
+            for i in range(n)]
+
+
+def _quantized_setup():
     from repro.configs import ARCHS
     from repro.core import QuantSpec, quantize_model, run_calibration
     from repro.models.registry import build_model
-    from repro.serve import Request, ServeEngine
 
     cfg = ARCHS["llama3-8b"].tiny()
     model = build_model(cfg)
@@ -132,6 +144,43 @@ def bench(emit=print, *, requests=16, new_tokens=16, n_slots=4, max_len=128,
     qp, _ = quantize_model(params, model.quant_site_map(), stats,
                            method="faq", spec=QuantSpec(bits=4, group_size=64),
                            mode="packed")
+    return cfg, model, qp
+
+
+CSV_HEADER = ("timestamp,requests,new_tokens,n_slots,max_len,"
+              "legacy_tok_s,bucketed_tok_s,speedup,prefill_traces,"
+              "paged_tok_s,dense_cache_bytes,paged_peak_bytes")
+
+
+def _append_row(values: dict):
+    """Append one row of the BENCH trajectory; columns absent from
+    ``values`` stay empty.  A file written before the paged columns
+    existed is migrated in place (old rows padded with empty fields)."""
+    os.makedirs(REPORT_DIR, exist_ok=True)
+    path = os.path.join(REPORT_DIR, "serve_bench.csv")
+    cols = CSV_HEADER.split(",")
+    if os.path.exists(path):
+        with open(path) as f:
+            lines = f.read().splitlines()
+        if lines and lines[0] != CSV_HEADER:
+            old_n = len(lines[0].split(","))
+            pad = "," * (len(cols) - old_n)
+            lines = [CSV_HEADER] + [ln + pad for ln in lines[1:] if ln]
+            with open(path, "w") as f:
+                f.write("\n".join(lines) + "\n")
+    else:
+        with open(path, "w") as f:
+            f.write(CSV_HEADER + "\n")
+    with open(path, "a") as f:
+        f.write(",".join(str(values.get(c, "")) for c in cols) + "\n")
+
+
+def bench(emit=print, *, requests=16, new_tokens=16, n_slots=4, max_len=128,
+          record=True):
+    """Returns (legacy tok/s, bucketed tok/s, speedup)."""
+    from repro.serve import ServeEngine
+
+    cfg, model, qp = _quantized_setup()
 
     legacy = LegacyEngine(model, qp, n_slots=n_slots, max_len=max_len)
     t0 = time.time()
@@ -158,23 +207,80 @@ def bench(emit=print, *, requests=16, new_tokens=16, n_slots=4, max_len=128,
     emit(f"serve/decode_steps,,{m['decode_steps']}")
 
     if record:
-        os.makedirs(REPORT_DIR, exist_ok=True)
-        path = os.path.join(REPORT_DIR, "serve_bench.csv")
-        fresh = not os.path.exists(path)
-        with open(path, "a") as f:
-            if fresh:
-                f.write("timestamp,requests,new_tokens,n_slots,max_len,"
-                        "legacy_tok_s,bucketed_tok_s,speedup,"
-                        "prefill_traces\n")
-            f.write(f"{int(time.time())},{requests},{new_tokens},{n_slots},"
-                    f"{max_len},{tps_l:.2f},{tps_b:.2f},{speedup:.2f},"
-                    f"{m['prefill_traces']}\n")
+        _append_row(dict(timestamp=int(time.time()), requests=requests,
+                         new_tokens=new_tokens, n_slots=n_slots,
+                         max_len=max_len, legacy_tok_s=f"{tps_l:.2f}",
+                         bucketed_tok_s=f"{tps_b:.2f}",
+                         speedup=f"{speedup:.2f}",
+                         prefill_traces=m["prefill_traces"]))
     return tps_l, tps_b, speedup
+
+
+def bench_paged(emit=print, *, requests=16, new_tokens=16, n_slots=4,
+                max_len=128, page_size=16, record=True):
+    """Paged vs dense cache at mixed-length requests sharing a system
+    prompt: tok/s plus peak cache bytes.  The dense engine pins
+    ``n_slots * max_len`` positions for the whole run; the paged engine
+    pins only the pages in use, and requests after the first map their
+    prompt-prefix pages to the blocks the first request published.
+
+    ``paged_peak_bytes`` is *pinned*-page accounting — the provisioning
+    signal (``n_pages`` sized to peak + slack).  The run itself uses the
+    deadlock-free default pool, whose device allocation
+    (``alloc_cache_bytes``, also emitted) slightly exceeds the dense
+    cache; the memory win is realized by provisioning, not by default.
+
+    Returns (dense tok/s, paged tok/s, dense bytes, paged peak bytes).
+    """
+    from repro.serve import ServeEngine
+
+    cfg, model, qp = _quantized_setup()
+
+    dense = ServeEngine(model, qp, n_slots=n_slots, max_len=max_len)
+    t0 = time.time()
+    res_d = dense.serve(_shared_prefix_requests(cfg, requests, new_tokens))
+    dt_d = time.time() - t0
+    tok_d = sum(len(v) for v in res_d.values())
+    dense_bytes = sum(
+        leaf.size * leaf.dtype.itemsize
+        for leaf in jax.tree_util.tree_leaves(
+            jax.eval_shape(lambda: model.init_cache(n_slots, max_len))))
+
+    paged = ServeEngine(model, qp, n_slots=n_slots, max_len=max_len,
+                        paged=True, page_size=page_size)
+    t0 = time.time()
+    res_p = paged.serve(_shared_prefix_requests(cfg, requests, new_tokens))
+    dt_p = time.time() - t0
+    tok_p = sum(len(v) for v in res_p.values())
+
+    for rid in res_d:  # both engines are greedy: outputs must agree
+        assert np.array_equal(res_d[rid], res_p[rid]), f"rid {rid} diverged"
+
+    m = paged.metrics()
+    paged_bytes = m["peak_cache_bytes"]
+    tps_d, tps_p = tok_d / dt_d, tok_p / dt_p
+    emit(f"serve/dense_tok_s,,{tps_d:.2f}")
+    emit(f"serve/paged_tok_s,,{tps_p:.2f}")
+    emit(f"serve/dense_cache_bytes,,{dense_bytes}")
+    emit(f"serve/paged_peak_bytes,,{paged_bytes}")
+    emit(f"serve/paged_alloc_bytes,,{m['alloc_cache_bytes']}")
+    emit(f"serve/prefix_hits,,{m['prefix_hits']}")
+    emit(f"serve/prefix_hit_tokens,,{m['prefix_hit_tokens']}")
+
+    if record:
+        _append_row(dict(timestamp=int(time.time()), requests=requests,
+                         new_tokens=new_tokens, n_slots=n_slots,
+                         max_len=max_len, bucketed_tok_s=f"{tps_d:.2f}",
+                         paged_tok_s=f"{tps_p:.2f}",
+                         dense_cache_bytes=dense_bytes,
+                         paged_peak_bytes=paged_bytes))
+    return tps_d, tps_p, dense_bytes, paged_bytes
 
 
 def run(emit):
     """Entry point for benchmarks.run."""
     bench(emit)
+    bench_paged(emit)
 
 
 def main():
@@ -197,6 +303,14 @@ def main():
                                   record=not args.no_record)
     print(f"legacy: {tps_l:.1f} tok/s | bucketed: {tps_b:.1f} tok/s | "
           f"speedup: {speedup:.2f}x")
+    tps_d, tps_p, db, pb = bench_paged(requests=args.requests,
+                                       new_tokens=args.new_tokens,
+                                       n_slots=args.n_slots,
+                                       max_len=args.max_len,
+                                       record=not args.no_record)
+    print(f"dense: {tps_d:.1f} tok/s / {db/1e6:.2f} MB cache | "
+          f"paged: {tps_p:.1f} tok/s / {pb/1e6:.2f} MB peak pinned "
+          f"({db/max(pb, 1):.1f}x less to provision)")
 
 
 if __name__ == "__main__":

@@ -48,14 +48,13 @@ def quant_matmul(x: jax.Array, qt: QuantizedTensor) -> jax.Array:
     x2 = x.reshape(-1, k)
     if qt.act_scale is not None:
         x2 = x2 / qt.act_scale.astype(x2.dtype)
-    m = x2.shape[0]
-    # pad rows to the 128 MXU tile
-    pad = (-m) % min(128, max(m, 1))
-    if pad:
-        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    # The kernel wrapper pads m and n up to the tiles it actually picks
+    # and slices the result, so the dispatch passes shapes through
+    # unchanged — the old pad-rows-to-min(128, m) here became redundant
+    # (and it never covered the dimension that actually crashed: n_out
+    # not a multiple of the 128 tile, e.g. hymba's d_model=1600).
     out = quant_matmul_pallas(x2, qt.codes, qt.scale, qt.zero,
                               interpret=(mode != "tpu"))
-    out = out[:m]
     return out.reshape(lead + (qt.codes.shape[-1],)).astype(x.dtype)
 
 

@@ -65,12 +65,30 @@ def quant_matmul_pallas(x: jax.Array, codes: jax.Array, scale: jax.Array,
     bm = min(bm, m)
     bn = min(bn, n)
     bk = min(bk, k)
-    if bk % g != 0:
-        bk = g  # never straddle a quant group across K blocks
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    if bk % g != 0 or k % bk != 0:
+        bk = g  # never straddle a quant group across K blocks; the
+        #         group size always divides k, so this also covers
+        #         k not a multiple of the default tile
+    assert k % bk == 0, (k, bk, g)
+    assert bk % 2 == 0, f"quant group size must be even to unpack " \
+                        f"nibble-packed codes in K blocks (bk={bk})"
+    # m and n need not divide the MXU tile (hymba's d_model=1600 leaves
+    # 1600 % 128 = 64): pad both up to the tile and slice the result.
+    # Padded activation rows are zeros; padded weight columns carry
+    # scale = zero = 0, so they dequantize to (0 - 0) * 0 = 0 — either
+    # way the padded region contributes nothing and is sliced away.
+    pad_m = (-m) % bm
+    pad_n = (-n) % bn
+    if pad_m:
+        x = jnp.pad(x, ((0, pad_m), (0, 0)))
+    if pad_n:
+        codes = jnp.pad(codes, ((0, 0), (0, pad_n)))
+        scale = jnp.pad(scale, ((0, 0), (0, pad_n)))
+        zero = jnp.pad(zero, ((0, 0), (0, pad_n)))
+    mp, np_ = m + pad_m, n + pad_n
 
-    grid = (m // bm, n // bn, k // bk)
-    return pl.pallas_call(
+    grid = (mp // bm, np_ // bn, k // bk)
+    out = pl.pallas_call(
         functools.partial(_kernel, bk=bk),
         grid=grid,
         in_specs=[
@@ -80,8 +98,9 @@ def quant_matmul_pallas(x: jax.Array, codes: jax.Array, scale: jax.Array,
             pl.BlockSpec((bk // g, bn), lambda i, j, kk: (kk, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel",                                              "arbitrary")),
         interpret=interpret,
     )(x, codes, scale, zero)
+    return out[:m, :n]

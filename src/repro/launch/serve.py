@@ -39,6 +39,16 @@ def main():
                     help="decode batch width (continuous-batching slots)")
     ap.add_argument("--max-len", type=int, default=128,
                     help="per-slot KV-cache capacity (prompt + new tokens)")
+    ap.add_argument("--paged", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="paged KV cache with shared-prefix reuse "
+                         "(DESIGN.md §10); --no-paged keeps the dense "
+                         "per-slot cache")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per physical KV page (paged mode)")
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="page-pool capacity; default sizes it so every "
+                         "slot can hold a full max_len sequence")
     args = ap.parse_args()
 
     cfg = ARCHS[args.arch].tiny() if args.tiny else ARCHS[args.arch]
@@ -62,7 +72,11 @@ def main():
                                 mode="packed")
     eng = ServeEngine(model, qparams,
                       n_slots=min(args.n_slots, args.requests),
-                      max_len=args.max_len)
+                      max_len=args.max_len, paged=args.paged,
+                      page_size=args.page_size, n_pages=args.n_pages)
+    if args.paged and not eng.paged:
+        print("note: model cache layout does not support paging; "
+              "serving from the dense cache")
     reqs = [Request(rid=i, prompt=data.sequence(40_000_000 + i, 12),
                     max_new_tokens=args.new_tokens)
             for i in range(args.requests)]
@@ -79,6 +93,13 @@ def main():
           f"{m['prefill_traces']} traces (buckets {m['buckets']}), "
           f"decode: {m['decode_steps']} steps, "
           f"retraces: {m['retrace_count']}")
+    if m["paged"]:
+        print(f"paged: page_size={m['page_size']}, "
+              f"peak {m['pages_peak']}/{m['pages_total']} pages "
+              f"({m['peak_cache_bytes']/1e6:.2f} MB), "
+              f"prefix hits {m['prefix_hits']} "
+              f"({m['prefix_hit_tokens']} tokens skipped), "
+              f"cow copies {m['cow_copies']}")
 
 
 if __name__ == "__main__":

@@ -367,6 +367,64 @@ def update_cache_at(cache: jax.Array, new: jax.Array,
         cache, new, pos)
 
 
+# ---------------------------------------------------------------------------
+# Paged KV cache (serve/pages.py holds the host-side allocator; these are
+# the device-side gather/scatter/attention primitives)
+# ---------------------------------------------------------------------------
+
+def gather_pages(store: jax.Array, page_table: jax.Array) -> jax.Array:
+    """Materialize each slot's logical KV view from the shared page store.
+
+    store: (P, KH, ps, d) — one layer's physical pages; page_table:
+    (B, NP) int32 physical ids per logical block.  Returns
+    (B, NP*ps, KH, d), the layout ``decode_attention`` consumes.
+    Unmapped table entries point at the trash page (id 0); its contents
+    sit at positions >= the slot's cache length, which the attention
+    mask already discards.
+    """
+    g = jnp.take(store, page_table, axis=0)        # (B, NP, KH, ps, d)
+    b, n_pages, kh, ps, d = g.shape
+    return g.transpose(0, 1, 3, 2, 4).reshape(b, n_pages * ps, kh, d)
+
+
+def update_pages_at(store: jax.Array, new: jax.Array, page_ids: jax.Array,
+                    offsets: jax.Array) -> jax.Array:
+    """Write each slot's fresh KV entry into its current physical page.
+
+    store: (P, KH, ps, d); new: (B, KH, 1, d); page_ids/offsets: (B,).
+    The engine guarantees every written page is exclusively owned
+    (copy-on-write happens host-side first), and inactive slots' tables
+    point at the trash page — so the static per-slot write loop never
+    races two owners on one page (writes are sequential; only the trash
+    page absorbs more than one, and nothing reads it).
+    """
+    for b in range(new.shape[0]):
+        store = jax.lax.dynamic_update_slice(
+            store, new[b:b + 1], (page_ids[b], 0, offsets[b], 0))
+    return store
+
+
+def paged_decode_attention(q, k_store, v_store, page_table, cache_len,
+                           window=None):
+    """:func:`decode_attention` against a paged cache: gather K/V pages
+    via the table, then the existing masked einsum."""
+    k = gather_pages(k_store, page_table)
+    v = gather_pages(v_store, page_table)
+    return decode_attention(q, k, v, cache_len, window=window)
+
+
+def paged_decode_attention_q8(q, k_codes, k_scale, v_codes, v_scale,
+                              page_table, cache_len, window=None):
+    """:func:`decode_attention_q8` against paged int8 stores — the
+    scales are paged alongside the codes, so the int8 fold is
+    preserved and the cache is consumed in int8."""
+    k = gather_pages(k_codes, page_table)
+    ks = gather_pages(k_scale, page_table)
+    v = gather_pages(v_codes, page_table)
+    vs = gather_pages(v_scale, page_table)
+    return decode_attention_q8(q, k, ks, v, vs, cache_len, window=window)
+
+
 def local_window_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                            window: int) -> jax.Array:
     """Causal sliding-window self-attention in block-local form.

@@ -22,8 +22,9 @@ from .common import (layer_scan,
                      decode_attention_q8, quantize_kv,
                      dense_init, embed_tokens, last_valid_hidden,
                      logits_from_hidden,
-                     padded_vocab, qlinear, rms_norm, stack_layer_params,
-                     update_cache_at)
+                     padded_vocab, paged_decode_attention,
+                     paged_decode_attention_q8, qlinear, rms_norm,
+                     stack_layer_params, update_cache_at, update_pages_at)
 
 
 class DenseLM:
@@ -91,9 +92,15 @@ class DenseLM:
 
     # -- block -------------------------------------------------------------
     def _attn(self, p, x, positions, *, kv_write=None, cache=None,
-              cache_len=None, kv_lens=None):
+              cache_len=None, kv_lens=None, paged=None):
         """Attention sub-block.  Returns (out, (k, v)) — k/v as produced
-        (for prefill cache capture)."""
+        (for prefill cache capture).
+
+        ``paged`` switches decode to the paged KV store: a
+        ``(page_table, page_ids, offsets)`` triple, with ``cache``
+        holding this layer's physical page-store leaves instead of
+        dense per-slot caches (see DESIGN.md §10).
+        """
         cfg = self.cfg
         hd = cfg.head_dim_
         b, t, _ = x.shape
@@ -107,6 +114,35 @@ class DenseLM:
         q = shard_hint(q, "batch", "seq", "heads", None)
         k = shard_hint(k, "batch", "seq", "kv_heads", None)
         v = shard_hint(v, "batch", "seq", "kv_heads", None)
+        if paged is not None:
+            table, page_ids, offsets = paged
+            window = cfg.sliding_window or None
+            if cfg.kv_cache_bits == 8:
+                k_st, ks_st, v_st, vs_st = cache
+                kq, ks = quantize_kv(k)
+                vq, vs = quantize_kv(v)
+                k_st = update_pages_at(k_st, kq.transpose(0, 2, 1, 3),
+                                       page_ids, offsets)
+                ks_st = update_pages_at(ks_st, ks.transpose(0, 2, 1, 3),
+                                        page_ids, offsets)
+                v_st = update_pages_at(v_st, vq.transpose(0, 2, 1, 3),
+                                       page_ids, offsets)
+                vs_st = update_pages_at(vs_st, vs.transpose(0, 2, 1, 3),
+                                        page_ids, offsets)
+                o = paged_decode_attention_q8(q, k_st, ks_st, v_st, vs_st,
+                                              table, cache_len, window=window)
+                kv = (k_st, ks_st, v_st, vs_st)
+            else:
+                k_st, v_st = cache
+                k_st = update_pages_at(k_st, k.transpose(0, 2, 1, 3),
+                                       page_ids, offsets)
+                v_st = update_pages_at(v_st, v.transpose(0, 2, 1, 3),
+                                       page_ids, offsets)
+                o = paged_decode_attention(q, k_st, v_st, table, cache_len,
+                                           window=window)
+                kv = (k_st, v_st)
+            o = o.reshape(b, t, cfg.n_heads * hd)
+            return qlinear(o, p["wo"]), kv, o
         if cache is None:
             window = cfg.sliding_window or None
             o = chunked_attention(q, k, v, causal=True, window=window,
@@ -140,13 +176,14 @@ class DenseLM:
         return qlinear(o, p["wo"]), (k, v), o
 
     def _block(self, p, x, positions, collect, *, cache=None, cache_len=None,
-               kv_lens=None):
+               kv_lens=None, paged=None):
         h = rms_norm(x, p["attn_norm"], self.cfg.norm_eps)
         stats = {}
         if collect:
             stats["attn_in"] = site_stat(h)
         attn_out, kv, o_pre = self._attn(p, h, positions, cache=cache,
-                                         cache_len=cache_len, kv_lens=kv_lens)
+                                         cache_len=cache_len, kv_lens=kv_lens,
+                                         paged=paged)
         if collect:
             stats["attn_out"] = site_stat(o_pre)
         x = x + attn_out
@@ -294,6 +331,58 @@ class DenseLM:
         logits = logits_from_hidden(x, params["lm_head"], self.cfg.vocab_size)
         return logits, {"k": kc, "v": vc, "len": new_len}
 
+    def decode_step_paged(self, params, store, token, page_table, lens):
+        """One decode step against the paged KV store.
+
+        store: page-store tree from :meth:`init_paged_cache` (leaves
+        (L, P, KH, ps, d) — no ``len``/table leaves, those are
+        host-managed); token: (B, 1) int32; page_table: (B, NP) int32
+        physical ids; lens: (B,) int32 valid entries *before* this step
+        (the fresh K/V is written at position ``lens[b]``, i.e. at
+        offset ``lens[b] % ps`` of page ``page_table[b, lens[b]//ps]``).
+        Returns (logits, store).  The page table is shared across layers
+        — one table per slot addresses every layer's pages.
+        """
+        lens = jnp.broadcast_to(lens, (token.shape[0],)).astype(jnp.int32)
+        new_len = lens + 1
+        positions = lens[:, None]
+        positions = self._maybe_mrope(positions)
+        ps = store["k"].shape[3]
+        page_ids = jnp.take_along_axis(page_table, (lens // ps)[:, None],
+                                       axis=1)[:, 0]
+        offsets = lens % ps
+        paged = (page_table, page_ids, offsets)
+        x = embed_tokens(params["embed"], token).astype(self.dtype)
+
+        if self.cfg.kv_cache_bits == 8:
+            def body8(x, xs):
+                p, kc, ksc, vc, vsc = xs
+                x, (kc, ksc, vc, vsc), _ = self._block(
+                    p, x, positions, False, cache=(kc, ksc, vc, vsc),
+                    cache_len=new_len, paged=paged)
+                return x, (kc, ksc, vc, vsc)
+
+            x, (kc, ksc, vc, vsc) = layer_scan(
+                body8, x, (params["blocks"], store["k"], store["k_scale"],
+                           store["v"], store["v_scale"]))
+            x = rms_norm(x, params["final_norm"], self.cfg.norm_eps)
+            logits = logits_from_hidden(x, params["lm_head"],
+                                        self.cfg.vocab_size)
+            return logits, {"k": kc, "k_scale": ksc, "v": vc, "v_scale": vsc}
+
+        def body(x, xs):
+            p, kc, vc = xs
+            x, (kc, vc), _ = self._block(p, x, positions, False,
+                                         cache=(kc, vc), cache_len=new_len,
+                                         paged=paged)
+            return x, (kc, vc)
+
+        x, (kc, vc) = layer_scan(body, x, (params["blocks"], store["k"],
+                                             store["v"]))
+        x = rms_norm(x, params["final_norm"], self.cfg.norm_eps)
+        logits = logits_from_hidden(x, params["lm_head"], self.cfg.vocab_size)
+        return logits, {"k": kc, "v": vc}
+
     # -- cache -------------------------------------------------------------
     def init_cache(self, batch: int, max_len: int) -> dict:
         cfg = self.cfg
@@ -309,6 +398,31 @@ class DenseLM:
         return {"k": jnp.zeros(shape, self.dtype),
                 "v": jnp.zeros(shape, self.dtype),
                 "len": jnp.zeros((batch,), jnp.int32)}
+
+    def init_paged_cache(self, n_pages: int, page_size: int) -> dict:
+        """Physical page store: ``n_pages`` fixed-size KV pages shared by
+        all slots through per-slot page tables (serve/pages.py owns the
+        allocator; the table and per-slot lengths stay host-side, so the
+        tree carries no ``len`` leaf)."""
+        cfg = self.cfg
+        hd = cfg.head_dim_
+        shape = (cfg.n_layers, n_pages, cfg.n_kv_heads, page_size, hd)
+        if cfg.kv_cache_bits == 8:
+            sshape = shape[:-1] + (1,)
+            return {"k": jnp.zeros(shape, jnp.int8),
+                    "k_scale": jnp.zeros(sshape, jnp.float32),
+                    "v": jnp.zeros(shape, jnp.int8),
+                    "v_scale": jnp.zeros(sshape, jnp.float32)}
+        return {"k": jnp.zeros(shape, self.dtype),
+                "v": jnp.zeros(shape, self.dtype)}
+
+    def supports_paged(self) -> bool:
+        """Paged serving relies on this class's exact prefill/decode
+        cache layout; subclasses that override either (hymba's ring
+        buffer, xlstm's recurrent state, MoE/VLM entry points) fall back
+        to the dense cache automatically."""
+        return (type(self).prefill is DenseLM.prefill
+                and type(self).decode_step is DenseLM.decode_step)
 
     def cache_axes(self) -> dict:
         ax = (None, "batch", "kv_heads", "kv_seq", None)

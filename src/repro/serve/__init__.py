@@ -1,6 +1,8 @@
 """Serving: bucketed continuous-batching engine over FAQ-quantized weights."""
 from .buckets import bucket_for, default_buckets
-from .cache_ops import merge_slots, write_slot
+from .cache_ops import (copy_page, merge_slots, scatter_prefill_pages,
+                        write_slot)
 from .engine import Request, ServeEngine, TraceCounter
+from .pages import PagePool, block_hashes
 from .sampler import sample_tokens
 from .scheduler import Scheduler

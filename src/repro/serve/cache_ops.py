@@ -36,6 +36,44 @@ def write_slot(batched_cache, single_cache, slot):
     return jax.tree_util.tree_map(w, batched_cache, single_cache)
 
 
+def scatter_prefill_pages(store, scratch, slots, phys_ids):
+    """Scatter the prefilled slot rows of one admission group from the
+    dense scratch cache into their freshly allocated physical pages.
+
+    ``store`` is the paged tree (leaves (L, P, KH, ps, d));
+    ``scratch`` the prefill scratch (leaves (L, B, KH, S, d) with S a
+    multiple of ps, plus a ``len`` leaf the page store doesn't carry).
+    ``slots`` (G,) and ``phys_ids`` (G, S//ps) are traced — the whole
+    group lands in one call (one store update instead of one full-store
+    copy per member); retraces are bounded by the bucket grid times the
+    group-size grid (both small).  Entries of ``phys_ids`` past a
+    prompt's last page point at the trash page, which absorbs the
+    padded tail.
+    """
+    def w(st, sc):
+        ps = st.shape[3]
+        for g in range(slots.shape[0]):
+            row = jax.lax.dynamic_index_in_dim(sc, slots[g], axis=1,
+                                               keepdims=False)
+            for i in range(sc.shape[3] // ps):
+                blk = row[:, None, :, i * ps:(i + 1) * ps]  # (L,1,KH,ps,d)
+                st = jax.lax.dynamic_update_slice(
+                    st, blk.astype(st.dtype), (0, phys_ids[g, i], 0, 0, 0))
+        return st
+
+    return {key: w(store[key], scratch[key]) for key in store}
+
+
+def copy_page(store, src, dst):
+    """Copy-on-write helper: duplicate physical page ``src`` into
+    ``dst`` across every leaf of the page store (src/dst traced)."""
+    def c(st):
+        page = jax.lax.dynamic_slice_in_dim(st, src, 1, axis=1)
+        return jax.lax.dynamic_update_slice(st, page, (0, dst, 0, 0, 0))
+
+    return jax.tree_util.tree_map(c, store)
+
+
 def merge_slots(cache, new_cache, admit_mask):
     """Per-slot select between two same-shape caches.
 

@@ -29,6 +29,12 @@ buffer, recurrent xlstm) fall back to per-request exact-length prefill
 admitted through the jitted per-slot :func:`.cache_ops.write_slot` op —
 correctness fixes apply there too, only the compile-per-length cost
 remains.
+
+``paged=True`` switches the persistent cache from one dense
+``(n_slots, max_len)`` block to a pool of fixed-size pages with
+per-slot page tables and shared-prefix reuse (:mod:`.pages`,
+DESIGN.md §10); the dense path remains the default and the fallback
+for models whose cache layout doesn't support paging.
 """
 from __future__ import annotations
 
@@ -42,7 +48,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from .buckets import bucket_for, default_buckets
-from .cache_ops import merge_slots, write_slot
+from .cache_ops import (copy_page, merge_slots, scatter_prefill_pages,
+                        write_slot)
+from .pages import PagePool, block_hashes
 from .sampler import sample_tokens
 
 
@@ -89,7 +97,9 @@ def _empty() -> np.ndarray:
 
 class ServeEngine:
     def __init__(self, model, params, *, n_slots: int = 4,
-                 max_len: int = 512, buckets=None, rng_seed: int = 0):
+                 max_len: int = 512, buckets=None, rng_seed: int = 0,
+                 paged: bool = False, page_size: int = 16,
+                 n_pages: Optional[int] = None):
         self.model = model
         self.params = params
         self.n_slots = n_slots
@@ -105,6 +115,9 @@ class ServeEngine:
                                          for b in buckets} | {max_len}))
         self._supports_plen = (
             "prompt_len" in inspect.signature(model.prefill).parameters)
+        probe = getattr(model, "supports_paged", None)
+        self.paged = bool(paged and self._supports_plen
+                          and probe is not None and probe())
         self._key = jax.random.PRNGKey(rng_seed)
         self._rng_step = 0
 
@@ -115,8 +128,26 @@ class ServeEngine:
         self._decode = TraceCounter(jax.jit(self._decode_fn))
         self._sample = jax.jit(sample_tokens)
 
+        if self.paged:
+            self.page_size = page_size
+            self.pages_per_slot = -(-max_len // page_size)
+            # default capacity guarantees admission can never deadlock:
+            # every slot can hold a full max_len sequence (+1 trash page)
+            self.n_pages = (int(n_pages) if n_pages
+                            else 1 + n_slots * self.pages_per_slot)
+            self.pool = PagePool(self.n_pages, page_size)
+            # persistent across serve() calls so the prefix index keeps
+            # paying off between bursts
+            self._store = model.init_paged_cache(self.n_pages, page_size)
+            self._prefill_paged = TraceCounter(
+                jax.jit(self._prefill_paged_fn))
+            self._decode_paged = TraceCounter(jax.jit(self._decode_paged_fn))
+            self._scatter_pages = jax.jit(scatter_prefill_pages)
+            self._copy_page = jax.jit(copy_page)
+
         self._m = dict(tokens_generated=0, decode_steps=0, prefill_batches=0,
                        admitted=0, completed=0, expired=0, truncated=0,
+                       prefix_hits=0, prefix_hit_tokens=0, fill_steps=0,
                        serve_time_s=0.0)
 
     # -- jitted bodies -------------------------------------------------------
@@ -166,6 +197,34 @@ class ServeEngine:
         nxt = jnp.where(active, nxt, slot_last)
         return nxt, cache
 
+    def _prefill_paged_fn(self, params, tokens, prompt_len, admit_mask,
+                          temps, top_k, key, slot_last):
+        """Bucketed batched prefill for the paged path: fills a dense
+        *scratch* cache sized to the bucket (padded up to a page
+        multiple), samples first tokens, and returns the scratch for the
+        host to scatter into freshly allocated pages.  Unlike the dense
+        path there is no merge — the persistent cache is the page store.
+        """
+        t = tokens.shape[1]
+        s_pages = -(-t // self.page_size) * self.page_size
+        scratch = self.model.init_cache(self.n_slots, s_pages)
+        logits, new = self.model.prefill(params, tokens, scratch, prompt_len)
+        first = sample_tokens(logits[:, 0], temps, top_k, key)
+        slot_last = jnp.where(admit_mask, first, slot_last)
+        return slot_last, new
+
+    def _decode_paged_fn(self, params, store, page_table, lens, slot_last,
+                         active, temps, top_k, key):
+        """One decode step against the page store.  ``lens`` is the
+        host-managed per-slot valid length (already clamped for retired
+        slots); retired slots' page-table rows point at the trash page,
+        so their masked write can never touch a live page."""
+        logits, store = self.model.decode_step_paged(
+            params, store, slot_last[:, None], page_table, lens)
+        nxt = sample_tokens(logits[:, 0], temps, top_k, key)
+        nxt = jnp.where(active, nxt, slot_last)
+        return nxt, store
+
     # -- helpers -------------------------------------------------------------
     def _next_key(self):
         self._rng_step += 1
@@ -209,6 +268,28 @@ class ServeEngine:
         self._m["serve_time_s"] += time.time() - t0
         return np.asarray(out, np.int32)
 
+    def _handle_immediate(self, req: Request, results: dict) -> bool:
+        """True if the request completes without ever taking a slot."""
+        if req.deadline is not None and time.time() > req.deadline:
+            results[req.rid] = _empty()
+            self._m["expired"] += 1
+            if req.on_finish:
+                req.on_finish(req.rid, results[req.rid])
+            return True
+        if req.max_new_tokens <= 0:
+            results[req.rid] = _empty()
+            self._m["completed"] += 1
+            if req.on_finish:
+                req.on_finish(req.rid, results[req.rid])
+            return True
+        return False
+
+    def _emit(self, req: Request, tok: int):
+        req.out_tokens.append(tok)
+        self._m["tokens_generated"] += 1
+        if req.on_token:
+            req.on_token(req.rid, tok)
+
     # -- batched continuous path ---------------------------------------------
     def serve(self, requests: List[Request]) -> dict:
         """Run all requests to completion with slot-based batching.
@@ -217,7 +298,12 @@ class ServeEngine:
         ``max_new_tokens=0`` complete immediately with an empty sequence;
         requests whose ``deadline`` already passed at admission expire
         with an empty sequence; a running request whose deadline passes
-        mid-decode is truncated at the tokens produced so far."""
+        mid-decode is truncated at the tokens produced so far.
+
+        With ``paged=True`` (and a model whose cache layout supports it)
+        the same contract is served from the paged KV cache."""
+        if self.paged:
+            return self._serve_paged(requests)
         t0 = time.time()
         for r in requests:
             self._check_prompt(r)
@@ -244,26 +330,10 @@ class ServeEngine:
                 req.on_finish(req.rid, out)
 
         def handle_immediate(req: Request) -> bool:
-            """True if the request completes without ever taking a slot."""
-            if req.deadline is not None and time.time() > req.deadline:
-                results[req.rid] = _empty()
-                self._m["expired"] += 1
-                if req.on_finish:
-                    req.on_finish(req.rid, results[req.rid])
-                return True
-            if req.max_new_tokens <= 0:
-                results[req.rid] = _empty()
-                self._m["completed"] += 1
-                if req.on_finish:
-                    req.on_finish(req.rid, results[req.rid])
-                return True
-            return False
+            return self._handle_immediate(req, results)
 
         def emit(req: Request, tok: int):
-            req.out_tokens.append(tok)
-            self._m["tokens_generated"] += 1
-            if req.on_token:
-                req.on_token(req.rid, tok)
+            self._emit(req, tok)
 
         def admit(group, free):
             nonlocal slot_last, cache
@@ -377,6 +447,252 @@ class ServeEngine:
         self._m["serve_time_s"] += time.time() - t0
         return results
 
+    # -- paged continuous path -----------------------------------------------
+    def _serve_paged(self, requests: List[Request]) -> dict:
+        """Continuous batching over the paged KV cache (DESIGN.md §10).
+
+        Same external contract as the dense ``serve()`` — results are
+        token-for-token identical — but the persistent cache is a pool
+        of fixed-size pages:
+
+        * admission consults the prefix index; fully-cached leading
+          blocks map to shared physical pages (refcounted) and their
+          prefill is skipped entirely,
+        * the uncached prompt remainder streams through the jitted
+          decode step (teacher-forced chunk-1 chunked prefill) while
+          other slots keep decoding in the same batch,
+        * prompts with no cached prefix go through the bucketed batched
+          prefill into a bucket-sized scratch, scattered into freshly
+          allocated pages, and their full blocks are published to the
+          prefix index,
+        * any write into a shared page is preceded by a host-side
+          copy-on-write, and retiring a slot releases its page refs
+          (index-held pages survive for cross-request reuse).
+        """
+        t0 = time.time()
+        for r in requests:
+            self._check_prompt(r)
+        queue = list(requests)
+        results: dict = {}
+
+        n, ps = self.n_slots, self.page_size
+        pool = self.pool
+        # prompt hashes are deterministic per request — compute once, not
+        # once per fill_slots pass (admission runs in the decode loop)
+        hash_cache: dict = {}
+
+        def hashes_of(req: Request) -> list:
+            key = id(req)
+            if key not in hash_cache:
+                hash_cache[key] = block_hashes(req.prompt, ps)
+            return hash_cache[key]
+        table = np.full((n, self.pages_per_slot), PagePool.TRASH, np.int32)
+        slot_req: List[Optional[Request]] = [None] * n
+        slot_last = jnp.zeros((n,), jnp.int32)
+        slot_len = np.zeros(n, np.int64)
+        fill: List[Optional[np.ndarray]] = [None] * n  # prompt tail to feed
+        slot_hashes: List[Optional[list]] = [None] * n
+        temps = np.zeros(n, np.float32)
+        top_k = np.zeros(n, np.int32)
+        active = np.zeros(n, bool)
+
+        def release(s: int):
+            for j in range(self.pages_per_slot):
+                if table[s, j] != PagePool.TRASH:
+                    pool.decref(int(table[s, j]))
+                    table[s, j] = PagePool.TRASH
+
+        def finish(s: int, counter: str = "completed"):
+            req = slot_req[s]
+            out = np.asarray(req.out_tokens, np.int32)
+            results[req.rid] = out
+            self._m[counter] += 1
+            slot_req[s] = None
+            active[s] = False
+            fill[s] = None
+            slot_hashes[s] = None
+            release(s)
+            if req.on_finish:
+                req.on_finish(req.rid, out)
+
+        def ensure_writable(s: int, pos: int):
+            """Make the page holding position ``pos`` safe for slot
+            ``s`` to write: allocate if unmapped, copy-on-write if
+            shared with another slot or the prefix index."""
+            lp = pos // ps
+            phys = int(table[s, lp])
+            if phys == PagePool.TRASH:
+                table[s, lp] = pool.alloc()
+            elif pool.is_shared(phys):
+                fresh = pool.alloc()
+                self._store = self._copy_page(self._store, phys, fresh)
+                pool.decref(phys)
+                table[s, lp] = fresh
+                pool.cow_copies += 1
+
+        def register_prompt_pages(s: int):
+            """Publish the slot's full prompt blocks for future reuse
+            (the index takes its own ref; partial tail blocks and
+            generated-token pages are never shared)."""
+            for j in range(len(slot_req[s].prompt) // ps):
+                pool.register(slot_hashes[s][j], int(table[s, j]))
+
+        def admit(req: Request, s: int):
+            req.out_tokens = []
+            slot_req[s] = req
+            active[s] = True
+            temps[s] = req.temperature
+            top_k[s] = req.top_k
+            self._m["admitted"] += 1
+
+        def finish_checks(req: Request, s: int, now=None):
+            if len(req.out_tokens) >= req.max_new_tokens:
+                finish(s)
+            elif now is not None and req.deadline is not None \
+                    and now > req.deadline:
+                finish(s, counter="truncated")
+            elif slot_len[s] >= self.max_len:
+                finish(s, counter="truncated")
+
+        def fill_slots():
+            nonlocal slot_last
+            while True:
+                free = [s for s in range(n) if slot_req[s] is None]
+                if not free or not queue:
+                    return
+                while queue and self._handle_immediate(queue[0], results):
+                    queue.pop(0)
+                if not queue:
+                    continue
+                head = queue[0]
+                head_hashes = hashes_of(head)
+                if pool.lookup_blocks(head_hashes):
+                    # prefix hit: map the shared pages, skip their
+                    # prefill, stream the tail through decode
+                    queue.pop(0)
+                    s = free[0]
+                    matched = pool.match(head_hashes)
+                    npr = len(head.prompt)
+                    # always leave >= 1 token to process so the first
+                    # sampled token has logits; a fully-cached prompt
+                    # re-feeds its last token (the write into the shared
+                    # final page is what triggers copy-on-write)
+                    cached = min(len(matched) * ps, npr - 1)
+                    for j, phys in enumerate(matched):
+                        table[s, j] = phys
+                    admit(head, s)
+                    slot_hashes[s] = head_hashes
+                    slot_len[s] = cached
+                    fill[s] = np.asarray(head.prompt, np.int32)[cached:]
+                    self._m["prefix_hits"] += 1
+                    self._m["prefix_hit_tokens"] += cached
+                    continue
+
+                # no cached prefix: bucketed batched prefill.  Defer
+                # queued requests whose first block duplicates a group
+                # member's — next pass they hit the index instead of
+                # prefilling the same prefix twice.
+                b = bucket_for(self.buckets, len(head.prompt))
+                group, seen_block0 = [], set()
+                i = 0
+                while i < len(queue) and len(group) < len(free):
+                    r = queue[i]
+                    if self._handle_immediate(r, results):
+                        queue.pop(i)
+                        continue
+                    hs = hashes_of(r)
+                    if r is not head and hs and (
+                            pool.lookup_blocks(hs) or hs[0] in seen_block0):
+                        i += 1
+                        continue
+                    if bucket_for(self.buckets, len(r.prompt)) == b:
+                        group.append((queue.pop(i), hs))
+                        if hs:
+                            seen_block0.add(hs[0])
+                        continue
+                    i += 1
+                if not group:
+                    continue
+                tokens = np.zeros((n, b), np.int32)
+                plen = np.ones(n, np.int32)
+                admit_mask = np.zeros(n, bool)
+                targets = free[:len(group)]
+                for (req, hs), s in zip(group, targets):
+                    p = np.asarray(req.prompt, np.int32)
+                    tokens[s, :len(p)] = p
+                    plen[s] = len(p)
+                    admit_mask[s] = True
+                    admit(req, s)
+                    slot_hashes[s] = hs
+                    slot_len[s] = len(p)
+                slot_last, scratch = self._prefill_paged(
+                    self.params, jnp.asarray(tokens), jnp.asarray(plen),
+                    jnp.asarray(admit_mask), jnp.asarray(temps),
+                    jnp.asarray(top_k), self._next_key(), slot_last)
+                self._m["prefill_batches"] += 1
+                n_scratch_pages = -(-b // ps)
+                all_ids = np.full((len(group), n_scratch_pages),
+                                  PagePool.TRASH, np.int32)
+                for gi, ((req, hs), s) in enumerate(zip(group, targets)):
+                    npages = -(-len(req.prompt) // ps)
+                    phys = [pool.alloc() for _ in range(npages)]
+                    all_ids[gi, :npages] = phys
+                    table[s, :npages] = phys
+                self._store = self._scatter_pages(
+                    self._store, scratch,
+                    jnp.asarray(np.asarray(targets, np.int32)),
+                    jnp.asarray(all_ids))
+                for (req, hs), s in zip(group, targets):
+                    register_prompt_pages(s)
+                toks = np.asarray(slot_last)
+                for (req, hs), s in zip(group, targets):
+                    self._emit(req, int(toks[s]))
+                    finish_checks(req, s)
+
+        fill_slots()
+        while active.any():
+            sl = np.asarray(slot_last).copy()
+            lens = np.minimum(slot_len, self.max_len - 1)  # retired slots
+            for s in range(n):
+                if not active[s]:
+                    continue
+                lens[s] = slot_len[s]
+                ensure_writable(s, int(slot_len[s]))
+                if fill[s] is not None:
+                    sl[s] = fill[s][0]      # teacher-force the prompt
+            slot_last, self._store = self._decode_paged(
+                self.params, self._store, jnp.asarray(table),
+                jnp.asarray(lens.astype(np.int32)), jnp.asarray(sl),
+                jnp.asarray(active), jnp.asarray(temps),
+                jnp.asarray(top_k), self._next_key())
+            self._m["decode_steps"] += 1
+            toks = np.asarray(slot_last)
+            now = time.time()
+            for s in range(n):
+                req = slot_req[s]
+                if req is None or not active[s]:
+                    continue
+                slot_len[s] += 1
+                assert slot_len[s] <= self.max_len, \
+                    f"slot {s}: cache len {slot_len[s]} > max_len"
+                if fill[s] is not None:
+                    self._m["fill_steps"] += 1
+                    fill[s] = fill[s][1:]
+                    if len(fill[s]):
+                        if req.deadline is not None and now > req.deadline:
+                            finish(s, counter="truncated")
+                        continue            # still prefilling this slot
+                    # fill done: this step consumed the last prompt
+                    # token, so the sampled token is the first output
+                    fill[s] = None
+                    register_prompt_pages(s)
+                self._emit(req, int(toks[s]))
+                finish_checks(req, s, now)
+            if queue and any(r is None for r in slot_req):
+                fill_slots()
+        self._m["serve_time_s"] += time.time() - t0
+        return results
+
     # -- observability -------------------------------------------------------
     def metrics(self) -> dict:
         """Counter snapshot: throughput, prefill/decode call and trace
@@ -384,17 +700,49 @@ class ServeEngine:
         jitted entry point — bounded by len(buckets)-1 for the bucketed
         prefill)."""
         m = dict(self._m)
+        counters = [self._prefill_admit, self._admit_one, self._prefill1,
+                    self._decode]
         m["prefill_calls"] = (self._prefill_admit.calls
                               + self._admit_one.calls + self._prefill1.calls)
         m["prefill_traces"] = self._prefill_admit.traces
         m["prefill_traces_single"] = (self._admit_one.traces
                                       + self._prefill1.traces)
         m["decode_traces"] = self._decode.traces
-        m["retrace_count"] = sum(
-            max(0, c.traces - 1)
-            for c in (self._prefill_admit, self._admit_one, self._prefill1,
-                      self._decode))
+        m["paged"] = self.paged
+        if self.paged:
+            counters += [self._prefill_paged, self._decode_paged]
+            m["prefill_calls"] += self._prefill_paged.calls
+            m["prefill_traces"] += self._prefill_paged.traces
+            m["decode_traces"] += self._decode_paged.traces
+            m["page_size"] = self.page_size
+            m["pages_total"] = self.n_pages - 1      # minus the trash page
+            m["pages_in_use"] = self.pool.pages_in_use()
+            m["pages_peak"] = self.pool.in_use_peak
+            m["page_bytes"] = self.page_bytes()
+            # peak_cache_bytes counts *pinned* pages — the provisioning
+            # signal a deployment would size n_pages from.  The engine's
+            # actual device allocation is alloc_cache_bytes (the full
+            # pool; with the deadlock-free default sizing that exceeds
+            # the dense cache — pass n_pages to provision to peak+slack)
+            m["peak_cache_bytes"] = self.pool.in_use_peak * self.page_bytes()
+            m["alloc_cache_bytes"] = sum(leaf.nbytes
+                                         for leaf in self._store.values())
+            m["page_allocs"] = self.pool.alloc_count
+            m["cow_copies"] = self.pool.cow_copies
+            m["page_evictions"] = self.pool.evictions
+            m["prefix_index_blocks"] = len(self.pool.index)
+            m["prefix_lookups"] = self.pool.prefix_lookups
+            m["prefix_block_hits"] = self.pool.prefix_block_hits
+        m["retrace_count"] = sum(max(0, c.traces - 1) for c in counters)
         m["buckets"] = list(self.buckets)
         dt = m["serve_time_s"]
         m["tokens_per_s"] = (m["tokens_generated"] / dt) if dt > 0 else 0.0
         return m
+
+    def page_bytes(self) -> int:
+        """Device bytes of one physical KV page (every leaf, all
+        layers)."""
+        if not self.paged:
+            return 0
+        return sum(leaf.nbytes // leaf.shape[1]
+                   for leaf in self._store.values())

@@ -54,6 +54,43 @@ def test_quant_error_kernel_vs_oracle(a, sym):
                                rtol=1e-4)
 
 
+@pytest.mark.parametrize("m", [1, 3, 130, 192])
+@pytest.mark.parametrize("k,n,g", [(128, 1600, 64), (1600, 128, 100),
+                                   (1600, 1600, 100)])
+def test_quant_matmul_kernel_non_tile_shapes(m, k, n, g):
+    """Tile-divisibility regression (hymba d_model=1600: 1600 % 128 = 64
+    used to trip the kernel's assert; non-multiple-of-128 m tripped the
+    dispatch's wrong row padding).  m/n pad to the tile inside the
+    kernel wrapper; k falls back to the group-size tile."""
+    w = jax.random.normal(jax.random.PRNGKey(m + n), (k, n))
+    x = jax.random.normal(jax.random.PRNGKey(m), (m, k))
+    qt = quantize_groupwise(w, QuantSpec(bits=4, group_size=g), pack=True)
+    out = quant_matmul_pallas(x, qt.codes, qt.scale, qt.zero)
+    assert out.shape == (m, n)
+    expect = ref.quant_matmul_ref(x, qt)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-3)
+
+
+@pytest.mark.parametrize("m", [1, 3, 130, 192])
+def test_ops_dispatch_kernel_path_non_tile_m(m, monkeypatch):
+    """The dispatch must pad to the tile the kernel actually uses —
+    forced onto the kernel path (interpret mode) so this is exercised
+    off-TPU, where the CPU "ref" default used to hide it."""
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")
+    k, n = 128, 1600            # hymba-shaped n_out
+    w = jax.random.normal(jax.random.PRNGKey(0), (k, n))
+    x = jax.random.normal(jax.random.PRNGKey(m), (m, k))
+    s = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (k,))) + 0.5
+    spec = QuantSpec(bits=4, group_size=64)
+    qt = quantize_groupwise(w, spec, act_scale=s, pack=True)
+    out = quant_matmul(x, qt)
+    assert out.shape == (m, n)
+    expect = ref.quant_matmul_ref(x, qt)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-3)
+
+
 def test_ops_dispatch_leading_dims():
     """quant_matmul handles (B, T, k) activations."""
     w = jax.random.normal(jax.random.PRNGKey(0), (128, 64))

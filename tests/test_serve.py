@@ -248,6 +248,33 @@ def test_scheduler_deadlines_and_streaming(quantized_setup):
     assert sched.pending() == 0
 
 
+def test_serve_smoke_interpret_kernel_path(monkeypatch):
+    """Minimal serve smoke forced onto the Pallas kernel path
+    (interpret mode), paged cache on: the CI interpret-mode job runs
+    this so tile-divisibility regressions in the serving hot path can
+    never again hide behind the CPU "ref" dispatch default.  RTN keeps
+    quantization itself cheap — the point is serving over the kernel."""
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")
+    cfg = ARCHS["llama3-8b"].tiny()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    stats = run_calibration(m.forward, params, [
+        {"tokens": jax.random.randint(jax.random.PRNGKey(1), (1, 16),
+                                      0, cfg.vocab_size)}])
+    qp, _ = quantize_model(params, m.quant_site_map(), stats, method="rtn",
+                           spec=QuantSpec(bits=4, group_size=64),
+                           mode="packed")
+    eng = ServeEngine(m, qp, n_slots=2, max_len=16, paged=True, page_size=8)
+    assert eng.paged
+    prompt = np.arange(6) % cfg.vocab_size
+    res = eng.serve([Request(rid=0, prompt=prompt, max_new_tokens=2),
+                     Request(rid=1, prompt=prompt[:4], max_new_tokens=2)])
+    np.testing.assert_array_equal(
+        res[0], eng.generate(Request(rid=2, prompt=prompt,
+                                     max_new_tokens=2)))
+    assert res[1].shape == (2,)
+
+
 def test_hymba_fallback_serve_matches_generate():
     """Models without prompt_len support (hymba ring-buffer prefill) use
     the per-request write_slot fallback and still serve correctly."""
