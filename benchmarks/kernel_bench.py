@@ -7,9 +7,18 @@ HBM-traffic model of the kernel's advantage on the TPU target:
 the fused quant-error kernel reads W once per candidate instead of
 materializing a fake-quantized copy (2x traffic + extra write), and the
 W4A16 matmul streams 4-bit weights (4.4x fewer weight bytes than bf16).
+
+``bench_decode`` additionally writes a machine-readable flash-decode
+baseline to ``BENCH_decode.json`` at the repo root (dense vs int8-KV vs
+paged, cache_len ≪ max_len): the jnp ref always pays for ``max_len``
+positions, the split-KV kernel's per-split ``pl.when`` guard + clamped
+index maps bound compute and cache fetches by ``ceil(cache_len / bs)``
+live splits — ``work_fraction`` is that deterministic ratio.
 """
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import jax
@@ -57,3 +66,117 @@ def run(emit):
     fused_traffic = len(DEFAULT_ALPHA_GRID) * (k * n * 4)
     emit("kernel/quant_error_traffic_ratio", None,
          round(naive_traffic / fused_traffic, 2))
+
+    bench_decode(emit)
+
+
+def bench_decode(emit, out_path=None):
+    """Flash-decode vs jnp-ref baseline -> BENCH_decode.json.
+
+    For each variant (dense fp, int8-KV, paged) at cache_len ≪ max_len:
+      * ``ref_us`` — the jitted jnp oracle, which gathers/upcasts and
+        scores all ``max_len`` positions no matter how short the slot is
+        (its time is ~flat across cache_len),
+      * ``kernel_interpret_us`` — the split-KV kernel under the Pallas
+        interpreter (CPU emulation: *not* TPU wall-time, recorded for
+        trend only),
+      * ``live_splits / total_splits`` and ``work_fraction`` — the
+        deterministic work bound: every split past ``cache_len`` skips
+        its MXU work under ``pl.when`` and its index_map clamps to the
+        last live block (no re-fetch), so kernel compute and cache
+        traffic scale with ``cache_len`` while the ref's scale with
+        ``max_len``.
+    """
+    from repro.kernels.flash_decode import (flash_decode_paged_pallas,
+                                            flash_decode_pallas,
+                                            flash_decode_q8_pallas)
+    from repro.models.common import quantize_kv
+
+    b, h, kh, hd = 4, 8, 2, 64
+    max_len, bs, ps = 1024, 128, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, 1, h, hd))
+    k = jax.random.normal(ks[1], (b, kh, max_len, hd))
+    v = jax.random.normal(ks[2], (b, kh, max_len, hd))
+    kq, kqs = quantize_kv(k.transpose(0, 2, 1, 3))
+    vq, vqs = quantize_kv(v.transpose(0, 2, 1, 3))
+    kq, kqs = kq.transpose(0, 2, 1, 3), kqs.transpose(0, 2, 1, 3)
+    vq, vqs = vq.transpose(0, 2, 1, 3), vqs.transpose(0, 2, 1, 3)
+    # paged store: identity-ish table (page j of slot b -> 1 + b*NP + j),
+    # page 0 is the pinned trash page
+    n_per = max_len // ps
+    store_k = k.reshape(b, kh, n_per, ps, hd).transpose(0, 2, 1, 3, 4) \
+               .reshape(b * n_per, kh, ps, hd)
+    store_v = v.reshape(b, kh, n_per, ps, hd).transpose(0, 2, 1, 3, 4) \
+               .reshape(b * n_per, kh, ps, hd)
+    trash = jnp.zeros((1, kh, ps, hd), store_k.dtype)
+    store_k = jnp.concatenate([trash, store_k])
+    store_v = jnp.concatenate([trash, store_v])
+    table = 1 + jnp.arange(b * n_per, dtype=jnp.int32).reshape(b, n_per)
+
+    kv_bytes = {
+        "dense": 2 * b * kh * max_len * hd * 4,
+        "q8": 2 * b * kh * max_len * (hd + 4),
+        "paged": 2 * b * kh * max_len * hd * 4,
+    }
+    cases = {
+        "dense": (
+            jax.jit(lambda L: ref.decode_attention_ref(
+                q, k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3), L)),
+            lambda L: flash_decode_pallas(q, k, v, L, bs=bs,
+                                          interpret=True),
+            bs),
+        "q8": (
+            jax.jit(lambda L: ref.decode_attention_q8_ref(
+                q, kq.transpose(0, 2, 1, 3), kqs.transpose(0, 2, 1, 3),
+                vq.transpose(0, 2, 1, 3), vqs.transpose(0, 2, 1, 3), L)),
+            lambda L: flash_decode_q8_pallas(q, kq, kqs, vq, vqs, L,
+                                             bs=bs, interpret=True),
+            bs),
+        "paged": (
+            jax.jit(lambda L: ref.paged_decode_attention_ref(
+                q, store_k, store_v, table, L)),
+            lambda L: flash_decode_paged_pallas(q, store_k, store_v,
+                                                table, L, interpret=True),
+            ps),
+    }
+    rows = []
+    for cache_len in (64, 256, 1024):
+        lens = jnp.full((b,), cache_len, jnp.int32)
+        for variant, (ref_fn, kern_fn, block) in cases.items():
+            ref_us = _time(ref_fn, lens, iters=5)
+            kern_us = _time(kern_fn, lens, iters=2)
+            live = -(-cache_len // block)
+            total = -(-max_len // block)
+            frac = live / total
+            rows.append({
+                "variant": variant, "cache_len": cache_len,
+                "max_len": max_len, "batch": b, "kv_heads": kh,
+                "q_heads": h, "head_dim": hd, "block": block,
+                "ref_us": round(ref_us, 1),
+                "kernel_interpret_us": round(kern_us, 1),
+                "live_splits": live, "total_splits": total,
+                "work_fraction": round(frac, 4),
+                "kv_bytes_ref": kv_bytes[variant],
+                "kv_bytes_kernel": int(kv_bytes[variant] * frac),
+            })
+            emit(f"kernel/flash_decode_{variant}_ref_us_len{cache_len}",
+                 ref_us, f"S={max_len}")
+            emit(f"kernel/flash_decode_{variant}_work_fraction_"
+                 f"len{cache_len}", None, round(frac, 4))
+
+    path = pathlib.Path(out_path) if out_path else \
+        pathlib.Path(__file__).resolve().parent.parent / "BENCH_decode.json"
+    path.write_text(json.dumps({
+        "bench": "flash_decode_vs_jnp_ref",
+        "note": ("kernel_interpret_us is the Pallas CPU interpreter, not "
+                 "TPU wall-time; work_fraction = live_splits/total_splits "
+                 "is the deterministic compute+fetch bound of the "
+                 "length-aware kernel (ref always pays max_len)"),
+        "rows": rows}, indent=1) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    from .run import emit
+    run(emit)

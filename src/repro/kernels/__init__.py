@@ -1,3 +1,8 @@
 """Pallas TPU kernels (validated in interpret mode on CPU) + jnp oracles."""
-from .ops import quant_error_batch, quant_matmul, quant_matmul_experts
+from .ops import (decode_attention, decode_attention_q8,
+                  paged_decode_attention, paged_decode_attention_q8,
+                  quant_error_batch, quant_matmul, quant_matmul_experts)
 from .flash_attention import flash_attention_pallas, flash_attention_ref
+from .flash_decode import (flash_decode_paged_pallas,
+                           flash_decode_paged_q8_pallas,
+                           flash_decode_pallas, flash_decode_q8_pallas)

@@ -8,10 +8,15 @@ chunk.  This kernel keeps the running max / denominator / output
 accumulator in VMEM scratch across the K-block loop, so score traffic
 never leaves the chip: HBM bytes drop from O(T²) to O(T·hd).
 
-Layout: q/k/v are (BH, T, hd) — batch and (already-repeated) heads
-flattened by the wrapper.  Grid is (BH, nq, nk) with the K axis innermost
-("arbitrary"); fully-future K blocks are skipped under causal masking via
-pl.when, halving compute for causal runs.
+Layout: GQA-grouped — q is (BKH, G, T, hd) against the *unrepeated*
+k/v (BKH, T, hd), so the kernel streams each KV head's cache once for
+all G query heads in its group instead of re-reading a head-repeated
+copy (the prefill analogue of the decode-side GQA rationale: repeating
+KV to q-heads replicates the cache and multiplies K/V HBM traffic by
+G).  A 3-D q (BH, T, hd) is accepted as the G=1 / MHA layout.  Grid is
+(BKH, nq, nk) with the K axis innermost ("arbitrary"); fully-future K
+blocks are skipped under causal masking via pl.when, halving compute
+for causal runs.
 """
 from __future__ import annotations
 
@@ -28,7 +33,7 @@ NEG_INF = -1e30
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-            causal: bool, bq: int, bk: int, scale: float):
+            causal: bool, g: int, bq: int, bk: int, hd: int, scale: float):
     iq = pl.program_id(1)
     ik = pl.program_id(2)
     nk = pl.num_programs(2)
@@ -46,13 +51,19 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
     @pl.when(run)
     def _block():
-        q = q_ref[0].astype(jnp.float32) * scale          # (bq, hd)
+        # (G, bq, hd) -> (G*bq, hd): all grouped query heads share this
+        # KV head's k/v block, fetched once
+        q = q_ref[0].astype(jnp.float32).reshape(g * bq, hd) * scale
         k = k_ref[0].astype(jnp.float32)                  # (bk, hd)
         v = v_ref[0].astype(jnp.float32)
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
         if causal:
-            qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
-            kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            # row r of the flattened (G, bq) tile is query position
+            # iq*bq + r % bq (group index r // bq shares the position)
+            r = jax.lax.broadcasted_iota(jnp.int32, (g * bq, bk), 0)
+            qpos = iq * bq + r % bq
+            kpos = ik * bk + jax.lax.broadcasted_iota(
+                jnp.int32, (g * bq, bk), 1)
             s = jnp.where(qpos >= kpos, s, NEG_INF)
         m_prev = m_scr[...]
         m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
@@ -65,8 +76,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
     @pl.when(ik == nk - 1)
     def _finish():
-        o_ref[0] = (acc_scr[...] /
-                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                    ).reshape(g, bq, hd).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit,
@@ -74,32 +85,40 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                            causal: bool = True, bq: int = 128, bk: int = 128,
                            interpret: bool = True) -> jax.Array:
-    """q/k/v: (BH, T, hd) with hd <= 128.  Returns (BH, T, hd)."""
-    bh, t, hd = q.shape
+    """q: (BKH, G, T, hd) grouped GQA — or (BH, T, hd) for G=1/MHA —
+    against unrepeated k/v (BKH, T, hd) with hd <= 128.  Returns q's
+    shape."""
+    squeeze = q.ndim == 3
+    if squeeze:
+        q = q[:, None]
+    bkh, g, t, hd = q.shape
+    assert k.shape[0] == bkh and k.shape[1] == t, (q.shape, k.shape)
     bq = min(bq, t)
     bk = min(bk, t)
     assert t % bq == 0 and t % bk == 0, (t, bq, bk)
-    grid = (bh, t // bq, t // bk)
+    grid = (bkh, t // bq, t // bk)
     scale = hd ** -0.5
-    return pl.pallas_call(
-        functools.partial(_kernel, causal=causal, bq=bq, bk=bk, scale=scale),
+    out = pl.pallas_call(
+        functools.partial(_kernel, causal=causal, g=g, bq=bq, bk=bk, hd=hd,
+                          scale=scale),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, g, bq, hd), lambda b, i, j: (b, 0, i, 0)),
             pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
             pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
         ],
-        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, t, hd), q.dtype),
+        out_specs=pl.BlockSpec((1, g, bq, hd), lambda b, i, j: (b, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bkh, g, t, hd), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((g * bq, 1), jnp.float32),
+            pltpu.VMEM((g * bq, 1), jnp.float32),
+            pltpu.VMEM((g * bq, hd), jnp.float32),
         ],
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)
+    return out[:, 0] if squeeze else out
 
 
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,

@@ -15,6 +15,9 @@ import jax.numpy as jnp
 from repro.core.quantizer import QuantizedTensor
 from repro.dist.sharding import active_rule, shard_hint
 from . import ref as ref_ops
+from .flash_decode import (flash_decode_paged_pallas,
+                           flash_decode_paged_q8_pallas,
+                           flash_decode_pallas, flash_decode_q8_pallas)
 from .quant_error import quant_error_pallas
 from .quant_matmul import quant_matmul_pallas
 
@@ -71,15 +74,91 @@ def quant_error_batch(w: jax.Array, scales: jax.Array, mean_sq: jax.Array,
 def quant_matmul_experts(x: jax.Array, qt: QuantizedTensor) -> jax.Array:
     """Per-expert dequant matmul: x (E, C, d) with qt codes (E, d[/2], f).
 
-    vmapped over the expert axis; each expert uses the same grouped-dequant
-    math as quant_matmul (ref path on CPU, kernel path on TPU)."""
-    def one(xe, codes, scale, zero, act):
-        sub = QuantizedTensor(codes=codes, scale=scale, zero=zero,
-                              spec=qt.spec, n_in=qt.n_in, packed=qt.packed,
-                              act_scale=act)
-        return ref_ops.quant_matmul_ref(xe, sub)
+    Same grouped-dequant math as quant_matmul: the ref path is vmapped
+    over the expert axis; the kernel path (interpret/tpu) unrolls the
+    (static) expert axis into per-expert ``quant_matmul_pallas`` calls,
+    so MoE serving consumes packed expert weights through the same
+    dequant-GEMM kernel as the dense matmuls."""
+    mode = _mode()
+    if mode == "ref" or not qt.packed or qt.spec.bits > 4:
+        def one(xe, codes, scale, zero, act):
+            sub = QuantizedTensor(codes=codes, scale=scale, zero=zero,
+                                  spec=qt.spec, n_in=qt.n_in,
+                                  packed=qt.packed, act_scale=act)
+            return ref_ops.quant_matmul_ref(xe, sub)
 
-    if qt.act_scale is None:
-        return jax.vmap(lambda xe, c, s, z: one(xe, c, s, z, None))(
-            x, qt.codes, qt.scale, qt.zero)
-    return jax.vmap(one)(x, qt.codes, qt.scale, qt.zero, qt.act_scale)
+        if qt.act_scale is None:
+            return jax.vmap(lambda xe, c, s, z: one(xe, c, s, z, None))(
+                x, qt.codes, qt.scale, qt.zero)
+        return jax.vmap(one)(x, qt.codes, qt.scale, qt.zero, qt.act_scale)
+
+    outs = []
+    for e in range(qt.codes.shape[0]):
+        xe = x[e]
+        if qt.act_scale is not None:
+            xe = xe / qt.act_scale[e].astype(xe.dtype)
+        outs.append(quant_matmul_pallas(xe, qt.codes[e], qt.scale[e],
+                                        qt.zero[e],
+                                        interpret=(mode != "tpu")))
+    return jnp.stack(outs).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (the serving engine's hottest loop).  All entry
+# points take the caches' *native* layouts — dense (B, KH, S, hd),
+# paged stores (P, KH, ps, hd) — q (B, 1, H, hd), cache_len (B,) int32.
+# Ref mode transposes into the jnp oracles (bit-identical to the
+# pre-kernel call sites); otherwise the split-KV flash-decode Pallas
+# kernels run (interpret off-TPU).
+# ---------------------------------------------------------------------------
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array, *, window=None) -> jax.Array:
+    """Single-position attention against a (possibly longer) cache."""
+    mode = _mode()
+    if mode == "ref":
+        return ref_ops.decode_attention_ref(
+            q, k_cache.transpose(0, 2, 1, 3), v_cache.transpose(0, 2, 1, 3),
+            cache_len, window=window)
+    return flash_decode_pallas(q, k_cache, v_cache, cache_len,
+                               window=window, interpret=(mode != "tpu"))
+
+
+def decode_attention_q8(q, k_codes, k_scale, v_codes, v_scale, cache_len, *,
+                        window=None):
+    """int8-KV decode attention; scales stay folded in the consumer."""
+    mode = _mode()
+    if mode == "ref":
+        return ref_ops.decode_attention_q8_ref(
+            q, k_codes.transpose(0, 2, 1, 3), k_scale.transpose(0, 2, 1, 3),
+            v_codes.transpose(0, 2, 1, 3), v_scale.transpose(0, 2, 1, 3),
+            cache_len, window=window)
+    return flash_decode_q8_pallas(q, k_codes, k_scale, v_codes, v_scale,
+                                  cache_len, window=window,
+                                  interpret=(mode != "tpu"))
+
+
+def paged_decode_attention(q, k_store, v_store, page_table, cache_len, *,
+                           window=None):
+    """Decode attention against the shared page store via the table."""
+    mode = _mode()
+    if mode == "ref":
+        return ref_ops.paged_decode_attention_ref(
+            q, k_store, v_store, page_table, cache_len, window=window)
+    return flash_decode_paged_pallas(q, k_store, v_store, page_table,
+                                     cache_len, window=window,
+                                     interpret=(mode != "tpu"))
+
+
+def paged_decode_attention_q8(q, k_codes, k_scale, v_codes, v_scale,
+                              page_table, cache_len, *, window=None):
+    """Paged int8-KV decode attention (scales paged alongside codes)."""
+    mode = _mode()
+    if mode == "ref":
+        return ref_ops.paged_decode_attention_q8_ref(
+            q, k_codes, k_scale, v_codes, v_scale, page_table, cache_len,
+            window=window)
+    return flash_decode_paged_q8_pallas(q, k_codes, k_scale, v_codes,
+                                        v_scale, page_table, cache_len,
+                                        window=window,
+                                        interpret=(mode != "tpu"))

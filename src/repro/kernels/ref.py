@@ -31,6 +31,110 @@ def dequant_ref(codes: jax.Array, scale: jax.Array, zero: jax.Array,
     return (w - z_full) * s_full
 
 
+# ---------------------------------------------------------------------------
+# Decode attention oracles (the portable CPU serving path).  Layout note:
+# these take the *gathered* (B, S, KH, hd) layout the pre-kernel code
+# used; the kernels and the ops dispatch take the caches' native
+# (B, KH, S, hd) / (P, KH, ps, hd) layouts and the dispatch transposes
+# before calling in here — bit-identical to the old call sites.
+# ---------------------------------------------------------------------------
+
+def decode_attention_ref(q: jax.Array, k_cache: jax.Array,
+                         v_cache: jax.Array, cache_len: jax.Array,
+                         window: Optional[int] = None) -> jax.Array:
+    """Single-position attention against a (possibly longer) cache.
+
+    q: (B, 1, H, hd); caches: (B, S, KH, hd); cache_len: (B,) int32 —
+    number of valid cache entries per batch element *including* the
+    current token's k/v (per-slot lengths enable continuous batching).
+
+    GQA is computed in grouped form — q reshaped to (B, KH, G, hd) and
+    einsummed against the *unrepeated* cache.  This keeps the cache's
+    sequence sharding intact (repeating KV to q-heads forces an SPMD
+    reshard that replicates the whole cache in f32 — the dominant
+    collective of the baseline decode cells; EXPERIMENTS.md §Perf).
+    Softmax over the sharded S axis costs only tiny stat psums.
+    """
+    b, _, h, hd = q.shape
+    s, kh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kh
+    qg = q.astype(jnp.float32).reshape(b, kh, g, hd)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg,
+                        k_cache.astype(jnp.float32)) * hd ** -0.5
+    cache_len = jnp.broadcast_to(cache_len, (b,))
+    kpos = jnp.arange(s)
+    mask = kpos[None, None, None, :] < cache_len[:, None, None, None]
+    if window is not None:
+        mask &= (kpos[None, None, None, :]
+                 >= (cache_len[:, None, None, None] - window))
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def decode_attention_q8_ref(q, k_codes, k_scale, v_codes, v_scale,
+                            cache_len, window=None):
+    """decode_attention against an int8 cache: scales fold into the score
+    matrix / probability weights, so the cache is consumed in int8."""
+    b, _, h, hd = q.shape
+    s, kh = k_codes.shape[1], k_codes.shape[2]
+    g = h // kh
+    qg = q.astype(jnp.float32).reshape(b, kh, g, hd)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg,
+                        k_codes.astype(jnp.float32)) * hd ** -0.5
+    scores = scores * k_scale[..., 0].transpose(0, 2, 1)[:, :, None, :]
+    cache_len = jnp.broadcast_to(cache_len, (b,))
+    kpos = jnp.arange(s)
+    mask = kpos[None, None, None, :] < cache_len[:, None, None, None]
+    if window is not None:
+        mask &= (kpos[None, None, None, :]
+                 >= (cache_len[:, None, None, None] - window))
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    pv = p * v_scale[..., 0].transpose(0, 2, 1)[:, :, None, :]
+    out = jnp.einsum("bkgs,bskd->bkgd", pv, v_codes.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def gather_pages(store: jax.Array, page_table: jax.Array) -> jax.Array:
+    """Materialize each slot's logical KV view from the shared page store.
+
+    store: (P, KH, ps, d) — one layer's physical pages; page_table:
+    (B, NP) int32 physical ids per logical block.  Returns
+    (B, NP*ps, KH, d), the layout ``decode_attention_ref`` consumes.
+    Unmapped table entries point at the trash page (id 0); its contents
+    sit at positions >= the slot's cache length, which the attention
+    mask already discards.
+    """
+    g = jnp.take(store, page_table, axis=0)        # (B, NP, KH, ps, d)
+    b, n_pages, kh, ps, d = g.shape
+    return g.transpose(0, 1, 3, 2, 4).reshape(b, n_pages * ps, kh, d)
+
+
+def paged_decode_attention_ref(q, k_store, v_store, page_table, cache_len,
+                               window=None):
+    """:func:`decode_attention_ref` against a paged cache: gather K/V
+    pages via the table into a dense HBM copy, then the masked einsum —
+    the HBM round-trip the paged flash-decode kernel deletes."""
+    k = gather_pages(k_store, page_table)
+    v = gather_pages(v_store, page_table)
+    return decode_attention_ref(q, k, v, cache_len, window=window)
+
+
+def paged_decode_attention_q8_ref(q, k_codes, k_scale, v_codes, v_scale,
+                                  page_table, cache_len, window=None):
+    """:func:`decode_attention_q8_ref` against paged int8 stores — the
+    scales are paged alongside the codes, so the int8 fold is
+    preserved and the cache is consumed in int8."""
+    k = gather_pages(k_codes, page_table)
+    ks = gather_pages(k_scale, page_table)
+    v = gather_pages(v_codes, page_table)
+    vs = gather_pages(v_scale, page_table)
+    return decode_attention_q8_ref(q, k, ks, v, vs, cache_len,
+                                   window=window)
+
+
 def quant_error_ref(w: jax.Array, scales: jax.Array, mean_sq: jax.Array,
                     spec: QuantSpec) -> jax.Array:
     """Weighted quantization error for a batch of candidate smoothing

@@ -168,14 +168,21 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             and tq == tk and hd <= 128 and tq % 128 == 0
             and kv_lens is None and not _COST_MODE):
         # TPU deployments run the Pallas flash kernel (scores stay in
-        # VMEM); CPU/tests keep the chunked jnp path below.
+        # VMEM); CPU/tests keep the chunked jnp path below.  q is passed
+        # in grouped GQA layout (BKH, G, T, hd) so the kernel reads the
+        # *unrepeated* cache — repeating KV to q-heads would multiply
+        # K/V HBM traffic by G and force the same replicating reshard
+        # the decode path avoids (see kernels/flash_decode.py).
         from repro.kernels.flash_attention import flash_attention_pallas
-        kr = _repeat_kv(k, h // kh).transpose(0, 2, 1, 3).reshape(b * h, tk, hd)
-        vr = _repeat_kv(v, h // kh).transpose(0, 2, 1, 3).reshape(b * h, tk, hd)
-        qr = q.transpose(0, 2, 1, 3).reshape(b * h, tq, hd)
+        g = h // kh
+        qr = q.reshape(b, tq, kh, g, hd).transpose(0, 2, 3, 1, 4) \
+             .reshape(b * kh, g, tq, hd)
+        kr = k.transpose(0, 2, 1, 3).reshape(b * kh, tk, hd)
+        vr = v.transpose(0, 2, 1, 3).reshape(b * kh, tk, hd)
         o = flash_attention_pallas(qr, kr, vr, causal=causal,
                                    interpret=False)
-        return o.reshape(b, h, tq, hd).transpose(0, 2, 1, 3)
+        return o.reshape(b, kh, g, tq, hd).transpose(0, 3, 1, 2, 4) \
+                .reshape(b, tq, h, hd)
     k = _repeat_kv(k, h // kh)
     v = _repeat_kv(v, h // kh)
     if _COST_MODE:
@@ -237,38 +244,11 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B, Tq, H, hd)
 
 
-def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
-                     cache_len: jax.Array,
-                     window: Optional[int] = None) -> jax.Array:
-    """Single-position attention against a (possibly longer) cache.
-
-    q: (B, 1, H, hd); caches: (B, S, KH, hd); cache_len: (B,) int32 —
-    number of valid cache entries per batch element *including* the
-    current token's k/v (per-slot lengths enable continuous batching).
-
-    GQA is computed in grouped form — q reshaped to (B, KH, G, hd) and
-    einsummed against the *unrepeated* cache.  This keeps the cache's
-    sequence sharding intact (repeating KV to q-heads forces an SPMD
-    reshard that replicates the whole cache in f32 — the dominant
-    collective of the baseline decode cells; EXPERIMENTS.md §Perf).
-    Softmax over the sharded S axis costs only tiny stat psums.
-    """
-    b, _, h, hd = q.shape
-    s, kh = k_cache.shape[1], k_cache.shape[2]
-    g = h // kh
-    qg = q.astype(jnp.float32).reshape(b, kh, g, hd)
-    scores = jnp.einsum("bkgd,bskd->bkgs", qg,
-                        k_cache.astype(jnp.float32)) * hd ** -0.5
-    cache_len = jnp.broadcast_to(cache_len, (b,))
-    kpos = jnp.arange(s)
-    mask = kpos[None, None, None, :] < cache_len[:, None, None, None]
-    if window is not None:
-        mask &= (kpos[None, None, None, :]
-                 >= (cache_len[:, None, None, None] - window))
-    scores = jnp.where(mask, scores, -1e30)
-    p = jax.nn.softmax(scores, axis=-1)
-    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
-    return out.reshape(b, 1, h, hd).astype(q.dtype)
+# ``decode_attention`` and friends live in kernels/ops.py now: the jnp
+# implementations moved to kernels/ref.py as the oracles of the split-KV
+# flash-decode Pallas kernels, and every decode call site dispatches
+# through the ops entry points (REPRO_KERNEL_MODE ref/interpret/tpu) in
+# the caches' native (B, KH, S, hd) / (P, KH, ps, hd) layouts.
 
 
 # ---------------------------------------------------------------------------
@@ -333,30 +313,6 @@ def quantize_kv(x: jax.Array):
     return codes.astype(jnp.int8), scale
 
 
-def decode_attention_q8(q, k_codes, k_scale, v_codes, v_scale, cache_len,
-                        window=None):
-    """decode_attention against an int8 cache: scales fold into the score
-    matrix / probability weights, so the cache is consumed in int8."""
-    b, _, h, hd = q.shape
-    s, kh = k_codes.shape[1], k_codes.shape[2]
-    g = h // kh
-    qg = q.astype(jnp.float32).reshape(b, kh, g, hd)
-    scores = jnp.einsum("bkgd,bskd->bkgs", qg,
-                        k_codes.astype(jnp.float32)) * hd ** -0.5
-    scores = scores * k_scale[..., 0].transpose(0, 2, 1)[:, :, None, :]
-    cache_len = jnp.broadcast_to(cache_len, (b,))
-    kpos = jnp.arange(s)
-    mask = kpos[None, None, None, :] < cache_len[:, None, None, None]
-    if window is not None:
-        mask &= (kpos[None, None, None, :]
-                 >= (cache_len[:, None, None, None] - window))
-    scores = jnp.where(mask, scores, -1e30)
-    p = jax.nn.softmax(scores, axis=-1)
-    pv = p * v_scale[..., 0].transpose(0, 2, 1)[:, :, None, :]
-    out = jnp.einsum("bkgs,bskd->bkgd", pv, v_codes.astype(jnp.float32))
-    return out.reshape(b, 1, h, hd).astype(q.dtype)
-
-
 def update_cache_at(cache: jax.Array, new: jax.Array,
                     pos: jax.Array) -> jax.Array:
     """Write ``new`` (B, KH, 1, hd) into ``cache`` (B, KH, S, hd) at
@@ -368,24 +324,10 @@ def update_cache_at(cache: jax.Array, new: jax.Array,
 
 
 # ---------------------------------------------------------------------------
-# Paged KV cache (serve/pages.py holds the host-side allocator; these are
-# the device-side gather/scatter/attention primitives)
+# Paged KV cache (serve/pages.py holds the host-side allocator; this is
+# the device-side scatter primitive — the gather/attention side lives in
+# kernels/flash_decode.py with its jnp oracle in kernels/ref.py)
 # ---------------------------------------------------------------------------
-
-def gather_pages(store: jax.Array, page_table: jax.Array) -> jax.Array:
-    """Materialize each slot's logical KV view from the shared page store.
-
-    store: (P, KH, ps, d) — one layer's physical pages; page_table:
-    (B, NP) int32 physical ids per logical block.  Returns
-    (B, NP*ps, KH, d), the layout ``decode_attention`` consumes.
-    Unmapped table entries point at the trash page (id 0); its contents
-    sit at positions >= the slot's cache length, which the attention
-    mask already discards.
-    """
-    g = jnp.take(store, page_table, axis=0)        # (B, NP, KH, ps, d)
-    b, n_pages, kh, ps, d = g.shape
-    return g.transpose(0, 1, 3, 2, 4).reshape(b, n_pages * ps, kh, d)
-
 
 def update_pages_at(store: jax.Array, new: jax.Array, page_ids: jax.Array,
                     offsets: jax.Array) -> jax.Array:
@@ -402,27 +344,6 @@ def update_pages_at(store: jax.Array, new: jax.Array, page_ids: jax.Array,
         store = jax.lax.dynamic_update_slice(
             store, new[b:b + 1], (page_ids[b], 0, offsets[b], 0))
     return store
-
-
-def paged_decode_attention(q, k_store, v_store, page_table, cache_len,
-                           window=None):
-    """:func:`decode_attention` against a paged cache: gather K/V pages
-    via the table, then the existing masked einsum."""
-    k = gather_pages(k_store, page_table)
-    v = gather_pages(v_store, page_table)
-    return decode_attention(q, k, v, cache_len, window=window)
-
-
-def paged_decode_attention_q8(q, k_codes, k_scale, v_codes, v_scale,
-                              page_table, cache_len, window=None):
-    """:func:`decode_attention_q8` against paged int8 stores — the
-    scales are paged alongside the codes, so the int8 fold is
-    preserved and the cache is consumed in int8."""
-    k = gather_pages(k_codes, page_table)
-    ks = gather_pages(k_scale, page_table)
-    v = gather_pages(v_codes, page_table)
-    vs = gather_pages(v_scale, page_table)
-    return decode_attention_q8(q, k, ks, v, vs, cache_len, window=window)
 
 
 def local_window_attention(q: jax.Array, k: jax.Array, v: jax.Array,

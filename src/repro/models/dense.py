@@ -17,13 +17,14 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.stats import site_stat
 from repro.dist.sharding import shard_hint
+from repro.kernels.ops import (decode_attention, decode_attention_q8,
+                               paged_decode_attention,
+                               paged_decode_attention_q8)
 from .common import (layer_scan,
-                     apply_rope, chunked_attention, decode_attention,
-                     decode_attention_q8, quantize_kv,
+                     apply_rope, chunked_attention, quantize_kv,
                      dense_init, embed_tokens, last_valid_hidden,
                      logits_from_hidden,
-                     padded_vocab, paged_decode_attention,
-                     paged_decode_attention_q8, qlinear, rms_norm,
+                     padded_vocab, qlinear, rms_norm,
                      stack_layer_params, update_cache_at, update_pages_at)
 
 
@@ -157,10 +158,8 @@ class DenseLM:
             k_sc = update_cache_at(k_sc, ks.transpose(0, 2, 1, 3), pos)
             v_sc = update_cache_at(v_sc, vs.transpose(0, 2, 1, 3), pos)
             window = cfg.sliding_window or None
-            o = decode_attention_q8(
-                q, k_cache.transpose(0, 2, 1, 3), k_sc.transpose(0, 2, 1, 3),
-                v_cache.transpose(0, 2, 1, 3), v_sc.transpose(0, 2, 1, 3),
-                cache_len, window=window)
+            o = decode_attention_q8(q, k_cache, k_sc, v_cache, v_sc,
+                                    cache_len, window=window)
             k, v = (k_cache, k_sc), (v_cache, v_sc)
         else:
             k_cache, v_cache = cache  # (B, KH, S, hd)
@@ -168,9 +167,8 @@ class DenseLM:
             k_cache = update_cache_at(k_cache, k.transpose(0, 2, 1, 3), pos)
             v_cache = update_cache_at(v_cache, v.transpose(0, 2, 1, 3), pos)
             window = cfg.sliding_window or None
-            o = decode_attention(q, k_cache.transpose(0, 2, 1, 3),
-                                 v_cache.transpose(0, 2, 1, 3),
-                                 cache_len, window=window)
+            o = decode_attention(q, k_cache, v_cache, cache_len,
+                                 window=window)
             k, v = k_cache, v_cache
         o = o.reshape(b, t, cfg.n_heads * hd)
         return qlinear(o, p["wo"]), (k, v), o

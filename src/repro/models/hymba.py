@@ -13,8 +13,9 @@ import jax.numpy as jnp
 
 from repro.core.stats import site_stat
 from repro.dist.sharding import shard_hint
+from repro.kernels.ops import decode_attention
 from .common import (layer_scan,
-                     apply_rope, chunked_attention, decode_attention,
+                     apply_rope, chunked_attention,
                      dense_init, embed_tokens, logits_from_hidden,
                      padded_vocab, qlinear, rms_norm, stack_layer_params,
                      update_cache_at)
@@ -129,8 +130,7 @@ class HymbaLM(DenseLM):
         k_cache = update_cache_at(k_cache, k.transpose(0, 2, 1, 3), slot)
         v_cache = update_cache_at(v_cache, v.transpose(0, 2, 1, 3), slot)
         valid = jnp.minimum(cache_len, w)                 # (B,)
-        o = decode_attention(q, k_cache.transpose(0, 2, 1, 3),
-                             v_cache.transpose(0, 2, 1, 3), valid)
+        o = decode_attention(q, k_cache, v_cache, valid)
         o = o.reshape(b, t, cfg.n_heads * hd)
         return qlinear(o, p["wo"]), (k_cache, v_cache), o
 

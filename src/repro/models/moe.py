@@ -32,7 +32,7 @@ from repro.configs.base import ModelConfig
 from repro.core.stats import site_stat
 from repro.dist.sharding import active_mesh, shard_hint
 from .common import (layer_scan,
-                     apply_rope, chunked_attention, decode_attention,
+                     apply_rope, chunked_attention,
                      dense_init, embed_tokens, last_valid_hidden,
                      logits_from_hidden,
                      padded_vocab, qlinear, rms_norm, stack_layer_params)

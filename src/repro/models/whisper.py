@@ -16,8 +16,9 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.stats import site_stat
 from repro.dist.sharding import shard_hint
+from repro.kernels.ops import decode_attention
 from .common import (layer_scan,
-                     chunked_attention, decode_attention, dense_init,
+                     chunked_attention, dense_init,
                      embed_tokens, layer_norm, logits_from_hidden,
                      padded_vocab, qlinear, stack_layer_params,
                      update_cache_at)
@@ -137,8 +138,7 @@ class WhisperLM:
             # cross-attention at decode: k/v precomputed in cache
             k_c, v_c = cache
             enc_len = jnp.full((b,), k_c.shape[2], jnp.int32)
-            o = decode_attention(q, k_c.transpose(0, 2, 1, 3),
-                                 v_c.transpose(0, 2, 1, 3), enc_len)
+            o = decode_attention(q, k_c, v_c, enc_len)
             new_cache = cache
         else:
             src = xkv if xkv is not None else xq
@@ -152,8 +152,7 @@ class WhisperLM:
                 pos = cache_len - 1                      # (B,)
                 k_c = update_cache_at(k_c, k.transpose(0, 2, 1, 3), pos)
                 v_c = update_cache_at(v_c, v.transpose(0, 2, 1, 3), pos)
-                o = decode_attention(q, k_c.transpose(0, 2, 1, 3),
-                                     v_c.transpose(0, 2, 1, 3), cache_len)
+                o = decode_attention(q, k_c, v_c, cache_len)
                 new_cache = (k_c, v_c)
             else:
                 o = chunked_attention(q, k, v, causal=causal)

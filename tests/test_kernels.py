@@ -6,6 +6,7 @@ import pytest
 
 from repro.core import QuantSpec, quantize_groupwise
 from repro.kernels import ref
+from repro.kernels import ops
 from repro.kernels.quant_error import quant_error_pallas
 from repro.kernels.quant_matmul import quant_matmul_pallas
 from repro.kernels.ops import quant_matmul, quant_matmul_experts
@@ -131,6 +132,160 @@ def test_flash_attention_vs_oracle(shape, causal):
     out = flash_attention_pallas(q, k, v, causal=causal)
     ref = flash_attention_ref(q, k, v, causal=causal)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_flash_attention_gqa_grouped_vs_chunked():
+    """Grouped-GQA prefill layout: 4-D q (BKH, G, T, hd) against the
+    *unrepeated* k/v must reproduce the model-side chunked attention —
+    the wrapper no longer repeats KV to q-heads before the kernel."""
+    from repro.kernels.flash_attention import flash_attention_pallas
+    from repro.models.common import chunked_attention
+    b, t, h, kh, hd = 2, 256, 8, 2, 64
+    g = h // kh
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (b, t, h, hd))
+    k = jax.random.normal(ks[1], (b, t, kh, hd))
+    v = jax.random.normal(ks[2], (b, t, kh, hd))
+    expect = chunked_attention(q, k, v, causal=True, chunk=64)
+    qr = q.reshape(b, t, kh, g, hd).transpose(0, 2, 3, 1, 4) \
+         .reshape(b * kh, g, t, hd)
+    out = flash_attention_pallas(
+        qr, k.transpose(0, 2, 1, 3).reshape(b * kh, t, hd),
+        v.transpose(0, 2, 1, 3).reshape(b * kh, t, hd), causal=True)
+    assert out.shape == (b * kh, g, t, hd)
+    out = out.reshape(b, kh, g, t, hd).transpose(0, 3, 1, 2, 4) \
+             .reshape(b, t, h, hd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Flash-decode kernel family vs the jnp oracles (forced onto the kernel
+# path through the ops dispatch: GQA ratios, per-slot cache_len
+# including 1 and full, window masking, non-tile head dims).
+# ---------------------------------------------------------------------------
+
+def _decode_inputs(b, h, kh, hd, s, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, 1, h, hd))
+    k = jax.random.normal(ks[1], (b, kh, s, hd))     # native (B, KH, S, hd)
+    v = jax.random.normal(ks[2], (b, kh, s, hd))
+    lens = jnp.array([1, s, 2 * s // 3], jnp.int32)  # 1, full, mid
+    return q, k, v, lens
+
+
+def _q8_caches(k, v):
+    """int8-quantize native-layout caches; returns native codes/scales."""
+    from repro.models.common import quantize_kv
+    kc, ks = quantize_kv(k.transpose(0, 2, 1, 3))
+    vc, vs = quantize_kv(v.transpose(0, 2, 1, 3))
+    return (kc.transpose(0, 2, 1, 3), ks.transpose(0, 2, 1, 3),
+            vc.transpose(0, 2, 1, 3), vs.transpose(0, 2, 1, 3))
+
+
+def _paged_store(k, v, ps, shuffle_seed=0):
+    """Cut native caches into ps-token pages behind a shuffled page
+    table with the trash page pinned at physical id 0."""
+    b, kh, s, hd = k.shape
+    n_per = s // ps
+    perm = np.random.RandomState(shuffle_seed).permutation(b * n_per) + 1
+
+    def paged(x):
+        pages = x.reshape(b, kh, n_per, ps, x.shape[-1]) \
+                 .transpose(0, 2, 1, 3, 4).reshape(b * n_per, kh, ps,
+                                                   x.shape[-1])
+        store = jnp.zeros((1 + b * n_per,) + pages.shape[1:], pages.dtype)
+        return store.at[perm].set(pages)
+
+    table = jnp.asarray(perm.reshape(b, n_per), jnp.int32)
+    return paged(k), paged(v), table, paged
+
+
+@pytest.mark.parametrize("h,kh", [(4, 4), (4, 2), (8, 2)])
+@pytest.mark.parametrize("hd", [64, 48])
+@pytest.mark.parametrize("window", [None, 32])
+def test_flash_decode_dense_vs_ref(h, kh, hd, window, monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")
+    q, k, v, lens = _decode_inputs(3, h, kh, hd, 160)
+    out = ops.decode_attention(q, k, v, lens, window=window)
+    expect = ref.decode_attention_ref(
+        q, k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3), lens,
+        window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("h,kh", [(4, 4), (8, 2)])
+@pytest.mark.parametrize("window", [None, 32])
+def test_flash_decode_q8_vs_ref(h, kh, window, monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")
+    q, k, v, lens = _decode_inputs(3, h, kh, 64, 160, seed=2)
+    kc, ksc, vc, vsc = _q8_caches(k, v)
+    out = ops.decode_attention_q8(q, kc, ksc, vc, vsc, lens, window=window)
+    expect = ref.decode_attention_q8_ref(
+        q, kc.transpose(0, 2, 1, 3), ksc.transpose(0, 2, 1, 3),
+        vc.transpose(0, 2, 1, 3), vsc.transpose(0, 2, 1, 3), lens,
+        window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("h,kh,hd", [(4, 4, 48), (8, 2, 64)])
+@pytest.mark.parametrize("window", [None, 24])
+def test_flash_decode_paged_vs_ref(h, kh, hd, window, monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")
+    q, k, v, lens = _decode_inputs(3, h, kh, hd, 128, seed=3)
+    k_st, v_st, table, _ = _paged_store(k, v, ps=16)
+    out = ops.paged_decode_attention(q, k_st, v_st, table, lens,
+                                     window=window)
+    expect = ref.paged_decode_attention_ref(q, k_st, v_st, table, lens,
+                                            window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [None, 24])
+def test_flash_decode_paged_q8_vs_ref(window, monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")
+    q, k, v, lens = _decode_inputs(3, 8, 2, 64, 128, seed=4)
+    kc, ksc, vc, vsc = _q8_caches(k, v)
+    _, _, table, paged = _paged_store(k, v, ps=16)
+    k_st, ks_st = paged(kc), paged(ksc)
+    v_st, vs_st = paged(vc), paged(vsc)
+    out = ops.paged_decode_attention_q8(q, k_st, ks_st, v_st, vs_st, table,
+                                        lens, window=window)
+    expect = ref.paged_decode_attention_q8_ref(q, k_st, ks_st, v_st, vs_st,
+                                               table, lens, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_flash_decode_ref_mode_dispatch(monkeypatch):
+    """mode=ref must bypass the kernel and hit the oracle bit-exactly."""
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "ref")
+    q, k, v, lens = _decode_inputs(3, 8, 2, 64, 96, seed=5)
+    out = ops.decode_attention(q, k, v, lens)
+    expect = ref.decode_attention_ref(
+        q, k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3), lens)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+def test_expert_quant_matmul_kernel_path(monkeypatch):
+    """quant_matmul_experts must honor _mode(): forced onto the kernel
+    path, every expert goes through quant_matmul_pallas and still
+    matches the vmapped ref."""
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")
+    e, c, d, f = 4, 8, 64, 32
+    w = jax.random.normal(jax.random.PRNGKey(0), (e, d, f))
+    x = jax.random.normal(jax.random.PRNGKey(1), (e, c, d))
+    spec = QuantSpec(bits=4, group_size=32)
+    qt = jax.vmap(lambda ww: quantize_groupwise(ww, spec, pack=True))(w)
+    out = quant_matmul_experts(x, qt)
+    for i in range(e):
+        sub = jax.tree_util.tree_map(lambda a: a[i], qt)
+        np.testing.assert_allclose(np.asarray(out[i]),
+                                   np.asarray(ref.quant_matmul_ref(x[i], sub)),
+                                   atol=1e-3)
 
 
 def test_flash_attention_matches_chunked_model_path():

@@ -248,6 +248,29 @@ def test_scheduler_deadlines_and_streaming(quantized_setup):
     assert sched.pending() == 0
 
 
+@pytest.mark.parametrize("kv_bits", [None, 8])
+def test_serve_matches_generate_interpret_flash_decode(kv_bits, monkeypatch):
+    """With the flash-decode kernels engaged (interpret mode), batched
+    serve() must stay token-for-token identical to generate() on both
+    fp16 and int8-KV dense caches — the decode hot loop now runs the
+    split-KV Pallas kernel in both paths.  Weights stay fp so the run
+    isolates the decode-attention kernels (the quant-matmul kernel has
+    its own interpret coverage above)."""
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")
+    cfg = ARCHS["llama3-8b"].tiny()
+    if kv_bits:
+        cfg = dataclasses.replace(cfg, kv_cache_bits=kv_bits)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(m, params, n_slots=2, max_len=64)
+    reqs = _mixed_requests(cfg, 3, seed=7, max_new=(2, 5))
+    batched = eng.serve([Request(rid=r.rid, prompt=r.prompt,
+                                 max_new_tokens=r.max_new_tokens)
+                         for r in reqs])
+    for r in reqs:
+        np.testing.assert_array_equal(batched[r.rid], eng.generate(r))
+
+
 def test_serve_smoke_interpret_kernel_path(monkeypatch):
     """Minimal serve smoke forced onto the Pallas kernel path
     (interpret mode), paged cache on: the CI interpret-mode job runs
