@@ -129,7 +129,18 @@ def _shared_prefix_requests(cfg, n, new_tokens, prefix_len=32, seed=0):
             for i in range(n)]
 
 
-def _quantized_setup():
+def _fresh_request(r):
+    """Fresh Request copy (engines mutate out_tokens in place)."""
+    from repro.serve import Request
+    return Request(rid=r.rid, prompt=r.prompt,
+                   max_new_tokens=r.max_new_tokens)
+
+
+def _quantized_setup(full=False):
+    """Target setup: FAQ int4-packed weights.  ``full=True`` also
+    returns the fp params and the calibration stats (the self-int8
+    draft reuses the stats when re-quantizing the serving weights,
+    DESIGN.md §12)."""
     from repro.configs import ARCHS
     from repro.core import QuantSpec, quantize_model, run_calibration
     from repro.models.registry import build_model
@@ -144,12 +155,15 @@ def _quantized_setup():
     qp, _ = quantize_model(params, model.quant_site_map(), stats,
                            method="faq", spec=QuantSpec(bits=4, group_size=64),
                            mode="packed")
+    if full:
+        return cfg, model, qp, params, stats
     return cfg, model, qp
 
 
 CSV_HEADER = ("timestamp,requests,new_tokens,n_slots,max_len,"
               "legacy_tok_s,bucketed_tok_s,speedup,prefill_traces,"
-              "paged_tok_s,dense_cache_bytes,paged_peak_bytes")
+              "paged_tok_s,dense_cache_bytes,paged_peak_bytes,"
+              "spec_tok_s,spec_speedup,accept_rate,tokens_per_step")
 
 
 def _append_row(values: dict):
@@ -277,10 +291,123 @@ def bench_paged(emit=print, *, requests=16, new_tokens=16, n_slots=4,
     return tps_d, tps_p, dense_bytes, paged_bytes
 
 
+def bench_spec(emit=print, *, requests=16, new_tokens=32, n_slots=4,
+               max_len=128, k=7, record=True):
+    """Speculative vs plain decode on the int4-packed target with the
+    FAQ int8 self-draft (DESIGN.md §12).
+
+    Greedy outputs are asserted token-for-token identical — the speedup
+    is pure latency: the self-draft's dense int8 reconstruction decodes
+    cheaply while the target's packed-int4 verify scores K+1 positions
+    for roughly the cost of one (the dequant dominates and is
+    length-independent), so accepted bursts amortize the expensive
+    target step.
+
+    Returns (plain tok/s, spec tok/s, accept_rate, tokens_per_step).
+    """
+    from repro.serve import ServeEngine, SpecConfig, self_int8_draft
+
+    cfg, model, qp, fp_params, stats = _quantized_setup(full=True)
+
+    # the draft re-quantizes the *serving* weights at int8 — it tracks
+    # the int4 target (not the fp model it came from), which is what the
+    # acceptance rate pays for
+    draft = self_int8_draft(model, qp, stats)
+    plain = ServeEngine(model, qp, n_slots=n_slots, max_len=max_len)
+    eng = ServeEngine(model, qp, n_slots=n_slots, max_len=max_len,
+                      spec=SpecConfig(k=k, draft=draft))
+    # steady-state comparison: warm both engines over the same bucket /
+    # cycle shapes first, so the measurement is decode throughput rather
+    # than XLA compile amortization (the legacy-vs-bucketed bench above
+    # owns the compile-count story)
+    warm = _requests(cfg, 2 * n_slots, new_tokens, seed=1)
+    plain.serve([_fresh_request(r) for r in warm])
+    eng.serve([_fresh_request(r) for r in warm])
+
+    t0 = time.time()
+    res_n = plain.serve(_requests(cfg, requests, new_tokens))
+    dt_n = time.time() - t0
+    tok_n = sum(len(v) for v in res_n.values())
+
+    t0 = time.time()
+    res_s = eng.serve(_requests(cfg, requests, new_tokens))
+    dt_s = time.time() - t0
+    tok_s = sum(len(v) for v in res_s.values())
+
+    for rid in res_n:  # greedy: speculative output must be identical
+        assert np.array_equal(res_n[rid], res_s[rid]), f"rid {rid} diverged"
+
+    tps_n, tps_s = tok_n / dt_n, tok_s / dt_s
+    m = eng.metrics()
+    emit(f"serve/nonspec_tok_s,,{tps_n:.2f}")
+    emit(f"serve/spec_tok_s,,{tps_s:.2f}")
+    emit(f"serve/spec_speedup,,{tps_s / tps_n:.2f}")
+    emit(f"serve/accept_rate,,{m['accept_rate']:.3f}")
+    emit(f"serve/tokens_per_step,,{m['tokens_per_step']:.2f}")
+    emit(f"serve/draft_share,,{m['draft_share']:.3f}")
+
+    if record:
+        _append_row(dict(timestamp=int(time.time()), requests=requests,
+                         new_tokens=new_tokens, n_slots=n_slots,
+                         max_len=max_len, bucketed_tok_s=f"{tps_n:.2f}",
+                         spec_tok_s=f"{tps_s:.2f}",
+                         spec_speedup=f"{tps_s / tps_n:.2f}",
+                         accept_rate=f"{m['accept_rate']:.3f}",
+                         tokens_per_step=f"{m['tokens_per_step']:.2f}"))
+    return tps_n, tps_s, m["accept_rate"], m["tokens_per_step"]
+
+
+def _write_json(summary: dict):
+    """BENCH trajectory snapshot at the repo root (like
+    BENCH_decode.json): tok/s and peak cache bytes per serving mode."""
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+    import json
+    with open(path, "w") as f:
+        json.dump(summary, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def _bench_all(emit, *, requests=16, new_tokens=16, n_slots=4, max_len=128,
+               spec_k=7, spec_new_tokens=32, record=True, write_json=True):
+    """Run all three serving benches and assemble the JSON summary."""
+    tps_l, tps_b, speedup = bench(emit, requests=requests,
+                                  new_tokens=new_tokens, n_slots=n_slots,
+                                  max_len=max_len, record=record)
+    tps_d, tps_p, db, pb = bench_paged(emit, requests=requests,
+                                       new_tokens=new_tokens,
+                                       n_slots=n_slots, max_len=max_len,
+                                       record=record)
+    # the spec cell decodes longer sequences: speculative cycles
+    # amortize per-step cost, so the decode-bound regime is the one a
+    # deployment would run it in (prefill dilution hides the signal at
+    # very short budgets)
+    tps_n, tps_s, acc, tpstep = bench_spec(emit, requests=requests,
+                                           new_tokens=spec_new_tokens,
+                                           n_slots=n_slots, max_len=max_len,
+                                           k=spec_k, record=record)
+    summary = {
+        "timestamp": int(time.time()),
+        "workload": {"requests": requests, "new_tokens": new_tokens,
+                     "n_slots": n_slots, "max_len": max_len},
+        "legacy": {"tok_s": round(tps_l, 2)},
+        "dense": {"tok_s": round(tps_b, 2), "peak_cache_bytes": int(db),
+                  "speedup_vs_legacy": round(speedup, 2)},
+        "paged": {"tok_s": round(tps_p, 2), "peak_cache_bytes": int(pb)},
+        "spec": {"tok_s": round(tps_s, 2), "peak_cache_bytes": int(db),
+                 "speedup_vs_nonspec": round(tps_s / tps_n, 2),
+                 "nonspec_tok_s": round(tps_n, 2), "k": spec_k,
+                 "new_tokens": spec_new_tokens,
+                 "draft": "self-int8", "accept_rate": round(acc, 3),
+                 "tokens_per_step": round(tpstep, 2)},
+    }
+    if write_json:
+        _write_json(summary)
+    return summary
+
+
 def run(emit):
     """Entry point for benchmarks.run."""
-    bench(emit)
-    bench_paged(emit)
+    _bench_all(emit)
 
 
 def main():
@@ -291,26 +418,30 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--n-slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
-    ap.add_argument("--no-record", action="store_true")
+    ap.add_argument("--spec-k", type=int, default=7)
+    ap.add_argument("--no-record", action="store_true",
+                    help="skip the CSV trajectory and BENCH_serve.json")
     args = ap.parse_args()
     if not args.tiny:
         raise SystemExit("full-size serving bench needs accelerators; "
                          "run with --tiny")
-    tps_l, tps_b, speedup = bench(requests=args.requests,
-                                  new_tokens=args.new_tokens,
-                                  n_slots=args.n_slots,
-                                  max_len=args.max_len,
-                                  record=not args.no_record)
-    print(f"legacy: {tps_l:.1f} tok/s | bucketed: {tps_b:.1f} tok/s | "
-          f"speedup: {speedup:.2f}x")
-    tps_d, tps_p, db, pb = bench_paged(requests=args.requests,
-                                       new_tokens=args.new_tokens,
-                                       n_slots=args.n_slots,
-                                       max_len=args.max_len,
-                                       record=not args.no_record)
-    print(f"dense: {tps_d:.1f} tok/s / {db/1e6:.2f} MB cache | "
-          f"paged: {tps_p:.1f} tok/s / {pb/1e6:.2f} MB peak pinned "
-          f"({db/max(pb, 1):.1f}x less to provision)")
+    s = _bench_all(print, requests=args.requests,
+                   new_tokens=args.new_tokens, n_slots=args.n_slots,
+                   max_len=args.max_len, spec_k=args.spec_k,
+                   record=not args.no_record,
+                   write_json=not args.no_record)
+    print(f"legacy: {s['legacy']['tok_s']:.1f} tok/s | "
+          f"bucketed: {s['dense']['tok_s']:.1f} tok/s | "
+          f"speedup: {s['dense']['speedup_vs_legacy']:.2f}x")
+    print(f"dense: {s['dense']['tok_s']:.1f} tok/s / "
+          f"{s['dense']['peak_cache_bytes']/1e6:.2f} MB cache | "
+          f"paged: {s['paged']['tok_s']:.1f} tok/s / "
+          f"{s['paged']['peak_cache_bytes']/1e6:.2f} MB peak pinned")
+    sp = s["spec"]
+    print(f"spec(k={sp['k']}, {sp['draft']}): {sp['tok_s']:.1f} tok/s vs "
+          f"{sp['nonspec_tok_s']:.1f} non-spec "
+          f"({sp['speedup_vs_nonspec']:.2f}x, accept {sp['accept_rate']:.2f},"
+          f" {sp['tokens_per_step']:.2f} tok/step)")
 
 
 if __name__ == "__main__":

@@ -162,3 +162,73 @@ def paged_decode_attention_q8(q, k_codes, k_scale, v_codes, v_scale,
                                         v_scale, page_table, cache_len,
                                         window=window,
                                         interpret=(mode != "tpu"))
+
+
+# ---------------------------------------------------------------------------
+# Verify attention (speculative decoding, DESIGN.md §12).  q carries T
+# speculative positions per slot; position i attends keys at cache
+# positions < base_len[b] + i + 1 (its own fresh entry included) —
+# shifted-causal over the tail, length-masked below it.  Ref mode runs
+# one fused masked einsum over all T positions (the cycle-cost win: one
+# score/softmax pass per layer instead of T); kernel modes unroll T
+# calls of the same split-KV flash-decode kernel the non-speculative
+# loop runs, each position with its own cache_len — so per mode, verify
+# row i computes exactly what the sequential decode step would.  T is a
+# small static K+1, so either form stays one fused XLA program inside
+# the engine's jitted cycle.
+# ---------------------------------------------------------------------------
+
+def verify_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     base_len: jax.Array, *, window=None) -> jax.Array:
+    """Multi-position decode attention: q (B, T, H, hd), dense caches in
+    native (B, KH, S, hd) layout, base_len (B,) valid entries *before*
+    the burst (the T fresh K/V entries are already written)."""
+    if _mode() == "ref":
+        return ref_ops.verify_attention_ref(
+            q, k_cache.transpose(0, 2, 1, 3), v_cache.transpose(0, 2, 1, 3),
+            base_len, window=window)
+    outs = [decode_attention(q[:, i:i + 1], k_cache, v_cache,
+                             base_len + i + 1, window=window)
+            for i in range(q.shape[1])]
+    return jnp.concatenate(outs, axis=1)
+
+
+def verify_attention_q8(q, k_codes, k_scale, v_codes, v_scale, base_len, *,
+                        window=None):
+    """int8-KV variant of :func:`verify_attention`."""
+    if _mode() == "ref":
+        return ref_ops.verify_attention_q8_ref(
+            q, k_codes.transpose(0, 2, 1, 3), k_scale.transpose(0, 2, 1, 3),
+            v_codes.transpose(0, 2, 1, 3), v_scale.transpose(0, 2, 1, 3),
+            base_len, window=window)
+    outs = [decode_attention_q8(q[:, i:i + 1], k_codes, k_scale, v_codes,
+                                v_scale, base_len + i + 1, window=window)
+            for i in range(q.shape[1])]
+    return jnp.concatenate(outs, axis=1)
+
+
+def paged_verify_attention(q, k_store, v_store, page_table, base_len, *,
+                           window=None):
+    """:func:`verify_attention` against the shared page store."""
+    if _mode() == "ref":
+        return ref_ops.paged_verify_attention_ref(
+            q, k_store, v_store, page_table, base_len, window=window)
+    outs = [paged_decode_attention(q[:, i:i + 1], k_store, v_store,
+                                   page_table, base_len + i + 1,
+                                   window=window)
+            for i in range(q.shape[1])]
+    return jnp.concatenate(outs, axis=1)
+
+
+def paged_verify_attention_q8(q, k_codes, k_scale, v_codes, v_scale,
+                              page_table, base_len, *, window=None):
+    """Paged int8-KV variant of :func:`verify_attention`."""
+    if _mode() == "ref":
+        return ref_ops.paged_verify_attention_q8_ref(
+            q, k_codes, k_scale, v_codes, v_scale, page_table, base_len,
+            window=window)
+    outs = [paged_decode_attention_q8(q[:, i:i + 1], k_codes, k_scale,
+                                      v_codes, v_scale, page_table,
+                                      base_len + i + 1, window=window)
+            for i in range(q.shape[1])]
+    return jnp.concatenate(outs, axis=1)

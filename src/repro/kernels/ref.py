@@ -97,6 +97,83 @@ def decode_attention_q8_ref(q, k_codes, k_scale, v_codes, v_scale,
     return out.reshape(b, 1, h, hd).astype(q.dtype)
 
 
+def verify_attention_ref(q: jax.Array, k_cache: jax.Array,
+                         v_cache: jax.Array, base_len: jax.Array,
+                         window: Optional[int] = None) -> jax.Array:
+    """Multi-position decode attention (speculative verify, one fused
+    masked einsum).
+
+    q: (B, T, H, hd); caches: (B, S, KH, hd); base_len: (B,) valid
+    entries *before* the burst.  Position ``i`` sees keys at cache
+    positions ``< base_len + i + 1`` (shifted-causal over the burst, its
+    own fresh entry included) — row ``i`` computes exactly what
+    :func:`decode_attention_ref` would with ``cache_len = base_len+i+1``,
+    but all T positions share one score/softmax/value pass instead of T
+    separate attention dispatches per layer.
+    """
+    b, t, h, hd = q.shape
+    s, kh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kh
+    qg = q.astype(jnp.float32).reshape(b, t, kh, g, hd)
+    scores = jnp.einsum("btkgd,bskd->btkgs", qg,
+                        k_cache.astype(jnp.float32)) * hd ** -0.5
+    base_len = jnp.broadcast_to(base_len, (b,))
+    lens = base_len[:, None] + 1 + jnp.arange(t)          # (B, T)
+    kpos = jnp.arange(s)
+    mask = kpos[None, None, :] < lens[..., None]          # (B, T, S)
+    if window is not None:
+        mask &= kpos[None, None, :] >= (lens[..., None] - window)
+    scores = jnp.where(mask[:, :, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("btkgs,bskd->btkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, t, h, hd).astype(q.dtype)
+
+
+def verify_attention_q8_ref(q, k_codes, k_scale, v_codes, v_scale,
+                            base_len, window=None):
+    """:func:`verify_attention_ref` against an int8 cache — the scale
+    folds of :func:`decode_attention_q8_ref` applied over T positions."""
+    b, t, h, hd = q.shape
+    s, kh = k_codes.shape[1], k_codes.shape[2]
+    g = h // kh
+    qg = q.astype(jnp.float32).reshape(b, t, kh, g, hd)
+    scores = jnp.einsum("btkgd,bskd->btkgs", qg,
+                        k_codes.astype(jnp.float32)) * hd ** -0.5
+    k_fold = k_scale[..., 0].transpose(0, 2, 1)           # (B, KH, S)
+    scores = scores * k_fold[:, None, :, None, :]
+    base_len = jnp.broadcast_to(base_len, (b,))
+    lens = base_len[:, None] + 1 + jnp.arange(t)
+    kpos = jnp.arange(s)
+    mask = kpos[None, None, :] < lens[..., None]
+    if window is not None:
+        mask &= kpos[None, None, :] >= (lens[..., None] - window)
+    scores = jnp.where(mask[:, :, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    v_fold = v_scale[..., 0].transpose(0, 2, 1)
+    pv = p * v_fold[:, None, :, None, :]
+    out = jnp.einsum("btkgs,bskd->btkgd", pv, v_codes.astype(jnp.float32))
+    return out.reshape(b, t, h, hd).astype(q.dtype)
+
+
+def paged_verify_attention_ref(q, k_store, v_store, page_table, base_len,
+                               window=None):
+    """Fused verify attention against a paged cache (gather + mask)."""
+    k = gather_pages(k_store, page_table)
+    v = gather_pages(v_store, page_table)
+    return verify_attention_ref(q, k, v, base_len, window=window)
+
+
+def paged_verify_attention_q8_ref(q, k_codes, k_scale, v_codes, v_scale,
+                                  page_table, base_len, window=None):
+    """Fused paged int8 verify attention (scales paged with codes)."""
+    k = gather_pages(k_codes, page_table)
+    ks = gather_pages(k_scale, page_table)
+    v = gather_pages(v_codes, page_table)
+    vs = gather_pages(v_scale, page_table)
+    return verify_attention_q8_ref(q, k, ks, v, vs, base_len,
+                                   window=window)
+
+
 def gather_pages(store: jax.Array, page_table: jax.Array) -> jax.Array:
     """Materialize each slot's logical KV view from the shared page store.
 

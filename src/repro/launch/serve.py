@@ -18,7 +18,9 @@ from repro.core import QuantSpec, quantize_model, run_calibration
 from repro.data.synthetic import DataConfig, SyntheticLM, calibration_batches
 from repro.dist import checkpoint as ckpt
 from repro.models.registry import build_model
+from repro.serve.draft import registry_draft, self_int8_draft
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.spec import SpecConfig
 
 
 def main():
@@ -49,6 +51,14 @@ def main():
     ap.add_argument("--n-pages", type=int, default=None,
                     help="page-pool capacity; default sizes it so every "
                          "slot can hold a full max_len sequence")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding draft depth (tokens "
+                         "proposed per cycle; 0 disables — DESIGN.md §12)")
+    ap.add_argument("--draft", default="self-int8",
+                    help="draft source for --spec-k: 'self-int8' (FAQ "
+                         "int8 self-draft sharing the target's KV) or a "
+                         "registry config name for an independent draft "
+                         "model")
     args = ap.parse_args()
 
     cfg = ARCHS[args.arch].tiny() if args.tiny else ARCHS[args.arch]
@@ -70,13 +80,26 @@ def main():
                                 method=args.method,
                                 spec=QuantSpec(bits=args.bits, group_size=64),
                                 mode="packed")
+    spec_cfg = None
+    if args.spec_k > 0:
+        # the self-draft re-quantizes the *serving* weights at int8 (the
+        # packed codes are all it needs) with the same calibration stats
+        if args.draft == "self-int8":
+            draft = self_int8_draft(model, qparams, stats)
+        else:
+            draft = registry_draft(args.draft, tiny=args.tiny)
+        spec_cfg = SpecConfig(k=args.spec_k, draft=draft)
     eng = ServeEngine(model, qparams,
                       n_slots=min(args.n_slots, args.requests),
                       max_len=args.max_len, paged=args.paged,
-                      page_size=args.page_size, n_pages=args.n_pages)
+                      page_size=args.page_size, n_pages=args.n_pages,
+                      spec=spec_cfg)
     if args.paged and not eng.paged:
         print("note: model cache layout does not support paging; "
               "serving from the dense cache")
+    if spec_cfg is not None and eng._spec is None:
+        print("note: model lacks the span-write decode path; serving "
+              "non-speculatively")
     reqs = [Request(rid=i, prompt=data.sequence(40_000_000 + i, 12),
                     max_new_tokens=args.new_tokens)
             for i in range(args.requests)]
@@ -100,6 +123,13 @@ def main():
               f"prefix hits {m['prefix_hits']} "
               f"({m['prefix_hit_tokens']} tokens skipped), "
               f"cow copies {m['cow_copies']}")
+    if m["spec"]:
+        print(f"spec: k={m['spec_k']} draft={m['draft_kind']}, "
+              f"accept_rate {m['accept_rate']:.2f}, "
+              f"tokens/step {m['tokens_per_step']:.2f}, "
+              f"draft share {m['draft_share']:.2f} "
+              f"({m['spec_cycles']} cycles, "
+              f"{m['draft_steps']} draft steps)")
 
 
 if __name__ == "__main__":

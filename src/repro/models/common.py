@@ -315,8 +315,11 @@ def quantize_kv(x: jax.Array):
 
 def update_cache_at(cache: jax.Array, new: jax.Array,
                     pos: jax.Array) -> jax.Array:
-    """Write ``new`` (B, KH, 1, hd) into ``cache`` (B, KH, S, hd) at
-    per-batch positions ``pos`` (B,) — vmapped dynamic_update_slice."""
+    """Write the span ``new`` (B, KH, T, hd) into ``cache`` (B, KH, S, hd)
+    starting at per-batch positions ``pos`` (B,) — vmapped
+    dynamic_update_slice.  T = 1 is the decode hot path; T > 1 writes a
+    speculative verify burst in one op (the caller guarantees
+    ``pos + T <= S`` for live slots)."""
     pos = jnp.broadcast_to(pos, (cache.shape[0],))
     return jax.vmap(
         lambda c, n, p: jax.lax.dynamic_update_slice(c, n, (0, p, 0)))(

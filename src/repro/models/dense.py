@@ -19,7 +19,10 @@ from repro.core.stats import site_stat
 from repro.dist.sharding import shard_hint
 from repro.kernels.ops import (decode_attention, decode_attention_q8,
                                paged_decode_attention,
-                               paged_decode_attention_q8)
+                               paged_decode_attention_q8,
+                               paged_verify_attention,
+                               paged_verify_attention_q8, verify_attention,
+                               verify_attention_q8)
 from .common import (layer_scan,
                      apply_rope, chunked_attention, quantize_kv,
                      dense_init, embed_tokens, last_valid_hidden,
@@ -116,31 +119,51 @@ class DenseLM:
         k = shard_hint(k, "batch", "seq", "kv_heads", None)
         v = shard_hint(v, "batch", "seq", "kv_heads", None)
         if paged is not None:
+            # page_ids/offsets are (B, T): the span t > 1 (speculative
+            # verify) may cross a page boundary, so each position writes
+            # through its own physical page.
             table, page_ids, offsets = paged
             window = cfg.sliding_window or None
             if cfg.kv_cache_bits == 8:
                 k_st, ks_st, v_st, vs_st = cache
                 kq, ks = quantize_kv(k)
                 vq, vs = quantize_kv(v)
-                k_st = update_pages_at(k_st, kq.transpose(0, 2, 1, 3),
-                                       page_ids, offsets)
-                ks_st = update_pages_at(ks_st, ks.transpose(0, 2, 1, 3),
-                                        page_ids, offsets)
-                v_st = update_pages_at(v_st, vq.transpose(0, 2, 1, 3),
-                                       page_ids, offsets)
-                vs_st = update_pages_at(vs_st, vs.transpose(0, 2, 1, 3),
-                                        page_ids, offsets)
-                o = paged_decode_attention_q8(q, k_st, ks_st, v_st, vs_st,
-                                              table, cache_len, window=window)
+                kq, ks = kq.transpose(0, 2, 1, 3), ks.transpose(0, 2, 1, 3)
+                vq, vs = vq.transpose(0, 2, 1, 3), vs.transpose(0, 2, 1, 3)
+                for i in range(t):
+                    k_st = update_pages_at(k_st, kq[:, :, i:i + 1],
+                                           page_ids[:, i], offsets[:, i])
+                    ks_st = update_pages_at(ks_st, ks[:, :, i:i + 1],
+                                            page_ids[:, i], offsets[:, i])
+                    v_st = update_pages_at(v_st, vq[:, :, i:i + 1],
+                                           page_ids[:, i], offsets[:, i])
+                    vs_st = update_pages_at(vs_st, vs[:, :, i:i + 1],
+                                            page_ids[:, i], offsets[:, i])
+                if t == 1:
+                    o = paged_decode_attention_q8(q, k_st, ks_st, v_st,
+                                                  vs_st, table, cache_len,
+                                                  window=window)
+                else:
+                    o = paged_verify_attention_q8(q, k_st, ks_st, v_st,
+                                                  vs_st, table,
+                                                  cache_len - t,
+                                                  window=window)
                 kv = (k_st, ks_st, v_st, vs_st)
             else:
                 k_st, v_st = cache
-                k_st = update_pages_at(k_st, k.transpose(0, 2, 1, 3),
-                                       page_ids, offsets)
-                v_st = update_pages_at(v_st, v.transpose(0, 2, 1, 3),
-                                       page_ids, offsets)
-                o = paged_decode_attention(q, k_st, v_st, table, cache_len,
-                                           window=window)
+                kt = k.transpose(0, 2, 1, 3)
+                vt = v.transpose(0, 2, 1, 3)
+                for i in range(t):
+                    k_st = update_pages_at(k_st, kt[:, :, i:i + 1],
+                                           page_ids[:, i], offsets[:, i])
+                    v_st = update_pages_at(v_st, vt[:, :, i:i + 1],
+                                           page_ids[:, i], offsets[:, i])
+                if t == 1:
+                    o = paged_decode_attention(q, k_st, v_st, table,
+                                               cache_len, window=window)
+                else:
+                    o = paged_verify_attention(q, k_st, v_st, table,
+                                               cache_len - t, window=window)
                 kv = (k_st, v_st)
             o = o.reshape(b, t, cfg.n_heads * hd)
             return qlinear(o, p["wo"]), kv, o
@@ -150,7 +173,7 @@ class DenseLM:
                                   kv_lens=kv_lens)
         elif cfg.kv_cache_bits == 8:
             k_cache, k_sc, v_cache, v_sc = cache
-            pos = cache_len - 1
+            pos = cache_len - t        # span start; t=1 is plain decode
             kq, ks = quantize_kv(k)
             vq, vs = quantize_kv(v)
             k_cache = update_cache_at(k_cache, kq.transpose(0, 2, 1, 3), pos)
@@ -158,17 +181,25 @@ class DenseLM:
             k_sc = update_cache_at(k_sc, ks.transpose(0, 2, 1, 3), pos)
             v_sc = update_cache_at(v_sc, vs.transpose(0, 2, 1, 3), pos)
             window = cfg.sliding_window or None
-            o = decode_attention_q8(q, k_cache, k_sc, v_cache, v_sc,
-                                    cache_len, window=window)
+            if t == 1:
+                o = decode_attention_q8(q, k_cache, k_sc, v_cache, v_sc,
+                                        cache_len, window=window)
+            else:
+                o = verify_attention_q8(q, k_cache, k_sc, v_cache, v_sc,
+                                        cache_len - t, window=window)
             k, v = (k_cache, k_sc), (v_cache, v_sc)
         else:
             k_cache, v_cache = cache  # (B, KH, S, hd)
-            pos = cache_len - 1           # (B,)
+            pos = cache_len - t           # (B,) span start
             k_cache = update_cache_at(k_cache, k.transpose(0, 2, 1, 3), pos)
             v_cache = update_cache_at(v_cache, v.transpose(0, 2, 1, 3), pos)
             window = cfg.sliding_window or None
-            o = decode_attention(q, k_cache, v_cache, cache_len,
-                                 window=window)
+            if t == 1:
+                o = decode_attention(q, k_cache, v_cache, cache_len,
+                                     window=window)
+            else:
+                o = verify_attention(q, k_cache, v_cache, cache_len - t,
+                                     window=window)
             k, v = k_cache, v_cache
         o = o.reshape(b, t, cfg.n_heads * hd)
         return qlinear(o, p["wo"]), (k, v), o
@@ -291,12 +322,19 @@ class DenseLM:
         return logits, {"k": kc, "v": vc, "len": plen}
 
     def decode_step(self, params, cache, token, pos=None):
-        """One decode step.  token: (B, 1) int32.  Returns (logits, cache).
-        cache["len"] is per-batch (B,) so slots may hold different-length
-        sequences (continuous batching)."""
-        b = token.shape[0]
-        new_len = cache["len"] + 1                      # (B,)
-        positions = (new_len - 1)[:, None].astype(jnp.int32)
+        """One decode step.  token: (B, T) int32 with T >= 1 — T = 1 is
+        the plain decode hot loop; T > 1 is the speculative K-token
+        verify forward (DESIGN.md §12): the T fresh K/V entries are
+        written as one span starting at each slot's ``len`` and scored
+        with shifted-causal verify attention, so ``logits[:, i]`` is the
+        target's next-token distribution after consuming ``token[:, :i+1]``.
+        Returns (logits (B, T, V), cache).  cache["len"] is per-batch
+        (B,) so slots may hold different-length sequences (continuous
+        batching); it advances by T."""
+        b, t = token.shape
+        base = cache["len"].astype(jnp.int32)           # (B,)
+        new_len = base + t
+        positions = base[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
         positions = self._maybe_mrope(positions)
         x = embed_tokens(params["embed"], token).astype(self.dtype)
 
@@ -334,21 +372,24 @@ class DenseLM:
 
         store: page-store tree from :meth:`init_paged_cache` (leaves
         (L, P, KH, ps, d) — no ``len``/table leaves, those are
-        host-managed); token: (B, 1) int32; page_table: (B, NP) int32
-        physical ids; lens: (B,) int32 valid entries *before* this step
-        (the fresh K/V is written at position ``lens[b]``, i.e. at
-        offset ``lens[b] % ps`` of page ``page_table[b, lens[b]//ps]``).
+        host-managed); token: (B, T) int32 (T = 1 plain decode, T > 1
+        the speculative verify span, as in :meth:`decode_step`);
+        page_table: (B, NP) int32 physical ids; lens: (B,) int32 valid
+        entries *before* this step (fresh K/V position ``i`` is written
+        at offset ``(lens[b]+i) % ps`` of page
+        ``page_table[b, (lens[b]+i)//ps]`` — the span may cross a page
+        boundary, so ids/offsets are resolved per position).
         Returns (logits, store).  The page table is shared across layers
         — one table per slot addresses every layer's pages.
         """
+        t = token.shape[1]
         lens = jnp.broadcast_to(lens, (token.shape[0],)).astype(jnp.int32)
-        new_len = lens + 1
-        positions = lens[:, None]
-        positions = self._maybe_mrope(positions)
+        new_len = lens + t
+        pos2d = lens[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
+        positions = self._maybe_mrope(pos2d)
         ps = store["k"].shape[3]
-        page_ids = jnp.take_along_axis(page_table, (lens // ps)[:, None],
-                                       axis=1)[:, 0]
-        offsets = lens % ps
+        page_ids = jnp.take_along_axis(page_table, pos2d // ps, axis=1)
+        offsets = pos2d % ps
         paged = (page_table, page_ids, offsets)
         x = embed_tokens(params["embed"], token).astype(self.dtype)
 
@@ -380,6 +421,37 @@ class DenseLM:
         x = rms_norm(x, params["final_norm"], self.cfg.norm_eps)
         logits = logits_from_hidden(x, params["lm_head"], self.cfg.vocab_size)
         return logits, {"k": kc, "v": vc}
+
+    # -- speculative verify (DESIGN.md §12) --------------------------------
+    def verify_step(self, params, cache, tokens):
+        """Score a K+1-token speculative burst in one forward pass.
+
+        ``tokens`` (B, K+1) is the last committed token followed by the
+        draft proposals; each slot's burst starts at its own
+        ``cache["len"]`` (per-slot kv_lens — slots at different
+        acceptance depths share the batch).  Writes the burst's K/V span
+        into the cache and returns (logits (B, K+1, V), cache) with
+        ``len`` advanced by K+1; the engine rolls rejected suffixes back
+        via :func:`~repro.serve.cache_ops.truncate_slot`.  This is
+        :meth:`decode_step`'s T > 1 form, named for the call site."""
+        return self.decode_step(params, cache, tokens)
+
+    def verify_step_paged(self, params, store, tokens, page_table, lens):
+        """Paged form of :meth:`verify_step`: the burst span writes
+        through per-position physical pages (already allocated and
+        exclusively owned by the engine — copy-on-write happens
+        host-side first) and rejected-suffix pages are trimmed
+        refcount-safely by the engine."""
+        return self.decode_step_paged(params, store, tokens, page_table,
+                                      lens)
+
+    def supports_spec(self) -> bool:
+        """Speculative verification relies on this class's span-write
+        decode path; subclasses that override it (hymba's ring buffer,
+        recurrent xlstm, VLM's patched prefill) decline and serve
+        non-speculatively."""
+        return (type(self).prefill is DenseLM.prefill
+                and type(self).decode_step is DenseLM.decode_step)
 
     # -- cache -------------------------------------------------------------
     def init_cache(self, batch: int, max_len: int) -> dict:

@@ -341,8 +341,26 @@ class MoELM(DenseLM):
         h = rms_norm(x, p["mlp_norm"], self.cfg.norm_eps)
         if collect:
             stats["mlp_in"] = site_stat(h)
-        y, aux, moe_stats = moe_ffn(h, p["router"], p["wg_exp"], p["wu_exp"],
-                                    p["wd_exp"], self.cfg, collect)
+        if cache is not None and h.shape[1] > 1:
+            # speculative verify span: route each position separately so
+            # the capacity cutoff (a function of the routed token count)
+            # matches sequential T=1 decode exactly — pooled routing
+            # would let burst tokens compete for expert capacity and
+            # drop different tokens than the non-speculative loop
+            outs, auxes = [], []
+            for i in range(h.shape[1]):
+                y_i, aux_i, _ = moe_ffn(h[:, i:i + 1], p["router"],
+                                        p["wg_exp"], p["wu_exp"],
+                                        p["wd_exp"], self.cfg, False)
+                outs.append(y_i)
+                auxes.append(aux_i)
+            y = jnp.concatenate(outs, axis=1)
+            aux = jnp.mean(jnp.stack(auxes))
+            moe_stats = {}
+        else:
+            y, aux, moe_stats = moe_ffn(h, p["router"], p["wg_exp"],
+                                        p["wu_exp"], p["wd_exp"], self.cfg,
+                                        collect)
         stats.update(moe_stats)
         if self.cfg.n_shared_experts:
             g = qlinear(h, p["wg_sh"])
@@ -407,9 +425,14 @@ class MoELM(DenseLM):
         return logits, {"k": kc, "v": vc, "len": plen}
 
     def decode_step(self, params, cache, token, pos=None):
-        b = token.shape[0]
-        new_len = cache["len"] + 1
-        positions = (new_len - 1)[:, None].astype(jnp.int32)
+        """One decode step; token (B, T) with T > 1 the speculative
+        verify span (same contract as :meth:`DenseLM.decode_step` — the
+        span write and verify attention live in the inherited
+        ``_attn``)."""
+        b, t = token.shape
+        base = cache["len"].astype(jnp.int32)
+        new_len = base + t
+        positions = base[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
         x = embed_tokens(params["embed"], token).astype(self.dtype)
 
         def body(x, xs):
@@ -423,3 +446,10 @@ class MoELM(DenseLM):
         x = rms_norm(x, params["final_norm"], self.cfg.norm_eps)
         logits = logits_from_hidden(x, params["lm_head"], self.cfg.vocab_size)
         return logits, {"k": kc, "v": vc, "len": new_len}
+
+    def supports_spec(self) -> bool:
+        """MoE overrides the dense decode pair but keeps the same cache
+        layout and span-write attention, so speculative verification
+        works; further subclasses that override it again decline."""
+        return (type(self).prefill is MoELM.prefill
+                and type(self).decode_step is MoELM.decode_step)

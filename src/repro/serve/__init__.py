@@ -1,8 +1,11 @@
 """Serving: bucketed continuous-batching engine over FAQ-quantized weights."""
 from .buckets import bucket_for, default_buckets
 from .cache_ops import (copy_page, merge_slots, scatter_prefill_pages,
-                        write_slot)
+                        truncate_slot, write_slot)
+from .draft import ModelDraft, SelfDraft, registry_draft, self_int8_draft
 from .engine import Request, ServeEngine, TraceCounter
 from .pages import PagePool, block_hashes
-from .sampler import sample_tokens
-from .scheduler import Scheduler
+from .sampler import (draw_from_probs, policy_probs, sample_tokens,
+                      spec_accept)
+from .scheduler import RunResult, Scheduler
+from .spec import SpecConfig, SpecRunner

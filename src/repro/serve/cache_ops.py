@@ -74,6 +74,20 @@ def copy_page(store, src, dst):
     return jax.tree_util.tree_map(c, store)
 
 
+def truncate_slot(cache, new_lens):
+    """Roll per-slot cache lengths back to ``new_lens`` (B,) int32.
+
+    The speculative verify forward optimistically writes K+1 fresh KV
+    entries per slot and advances ``len`` by K+1; after the accept step
+    the engine truncates each slot to its accepted depth.  Entries past
+    ``len`` are invisible to the length-masked attention, so the stale
+    rejected-suffix KV needs no scrubbing — the next burst overwrites it
+    in place.  Host-side per-slot lengths stay authoritative; this op
+    just republishes them into the jitted cache tree.
+    """
+    return dict(cache, len=jnp.asarray(new_lens, jnp.int32))
+
+
 def merge_slots(cache, new_cache, admit_mask):
     """Per-slot select between two same-shape caches.
 

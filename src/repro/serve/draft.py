@@ -1,0 +1,141 @@
+"""Draft sources for speculative decoding (DESIGN.md §12).
+
+A *draft* proposes K cheap tokens per engine step; the target model
+verifies them in one batched forward.  Two pluggable sources:
+
+* :class:`SelfDraft` — the FAQ int8 quantization of the *target's own*
+  weights.  The paper's central property (FAQ-calibrated quantized
+  models track the full-precision model's future activations) is
+  exactly what a draft needs for high acceptance, and the draft shares
+  the target's architecture, cache layout, and KV pages: the draft
+  writes its speculative K/V straight into the target cache and the
+  verify pass overwrites those positions with target K/V, so the
+  self-draft costs **zero extra KV memory**.  On this CPU reproduction
+  the int8 reconstruction is materialized dense (``mode="fake"``) so
+  draft steps run as plain fp matmuls — cheaper than the target's
+  packed-int4 dequant path; a TPU deployment would keep the int8 codes
+  in HBM (half the weight traffic of fp16) and run them through the
+  same dequant-GEMM kernel as the serving weights.
+
+* :class:`ModelDraft` — any smaller registry model as an independent
+  draft with its own small dense KV cache.  Acceptance depends entirely
+  on how well the draft tracks the target; correctness never does — the
+  verify/accept rule guarantees the emitted stream is an exact sample
+  from the target policy even for a random draft.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+
+@dataclasses.dataclass
+class SelfDraft:
+    """Self-draft: the target model running int8-FAQ'd target weights.
+
+    ``model`` stays ``None`` — the runner resolves it to the engine's
+    target model, and the draft shares the target's dense cache or
+    paged KV store (speculative writes are overwritten by verify).
+    """
+    params: Any
+    bits: int = 8
+    shares_cache = True
+    model = None
+
+
+@dataclasses.dataclass
+class ModelDraft:
+    """Independent draft model with its own dense KV cache."""
+    model: Any
+    params: Any
+    shares_cache = False
+
+
+def _materialize(qt):
+    """Dense original-domain reconstruction of one QuantizedTensor leaf.
+
+    Param-tree leaves carry stacked leading axes (layers, experts); the
+    2-D dequant vmaps over them.  ``act_scale`` is folded back in
+    (``(x/s) @ deq(codes)  ==  x @ (deq(codes) / s[:, None])``), so the
+    result is the exact weight the serving dequant-matmul realizes.
+    """
+    import jax
+
+    from repro.core.quantizer import QuantizedTensor, dequantize_groupwise
+
+    def deq2(codes, scale, zero, act):
+        sub = QuantizedTensor(codes=codes, scale=scale, zero=zero,
+                              spec=qt.spec, n_in=qt.n_in, packed=qt.packed,
+                              act_scale=None)
+        w = dequantize_groupwise(sub)
+        if act is not None:
+            w = w / act[:, None]
+        return w
+
+    lead = qt.codes.ndim - 2
+    if qt.act_scale is None:
+        fn = lambda c, s, z: deq2(c, s, z, None)
+        for _ in range(lead):
+            fn = jax.vmap(fn)
+        return fn(qt.codes, qt.scale, qt.zero)
+    fn = deq2
+    for _ in range(lead):
+        fn = jax.vmap(fn)
+    return fn(qt.codes, qt.scale, qt.zero, qt.act_scale)
+
+
+def self_int8_draft(model, params, stats=None, *, bits: int = 8,
+                    group_size: int = 64) -> SelfDraft:
+    """Build the FAQ int8 self-draft from the target's weights.
+
+    ``params`` may be the fp weights *or* the packed serving tree —
+    QuantizedTensor leaves are first materialized to the exact weights
+    the serving dequant-matmul realizes, so the draft is the int8
+    quantization of **the model being served** (derived purely from the
+    codes that already exist at serve time): its greedy argmaxes track
+    the target's almost everywhere, which is what acceptance rate pays
+    for.  ``stats`` are the same calibration statistics used to
+    quantize the serving weights (FAQ's future-activation preview);
+    without them the draft falls back to plain RTN int8.  The
+    reconstruction is materialized dense (``mode="fake"``) — numerically
+    it *is* the int8 model; see the module docstring for the storage
+    story.
+    """
+    import jax
+
+    from repro.core import QuantSpec, quantize_model
+    from repro.core.quantizer import QuantizedTensor
+
+    is_qt = lambda x: isinstance(x, QuantizedTensor)
+    params = jax.tree_util.tree_map(
+        lambda x: _materialize(x) if is_qt(x) else x, params, is_leaf=is_qt)
+    method = "faq" if stats is not None else "rtn"
+    qp, _ = quantize_model(params, model.quant_site_map(), stats,
+                           method=method,
+                           spec=QuantSpec(bits=bits, group_size=group_size),
+                           mode="fake")
+    return SelfDraft(params=qp, bits=bits)
+
+
+def registry_draft(arch: str, *, tiny: bool = True, seed: int = 0,
+                   params: Optional[Any] = None) -> ModelDraft:
+    """Build an independent draft from a registry architecture name.
+
+    With ``params=None`` the draft is randomly initialized — useful as
+    plumbing (greedy output is still exactly the target's; acceptance
+    is just poor), real deployments pass trained/distilled weights.
+    """
+    import jax
+
+    from repro.configs import ARCHS
+    from repro.models.registry import build_model
+
+    cfg = ARCHS[arch].tiny() if tiny else ARCHS[arch]
+    model = build_model(cfg)
+    if not getattr(model, "supports_spec", lambda: False)():
+        raise ValueError(
+            f"draft arch {arch!r} ({cfg.family}) lacks the span-write "
+            "decode path speculative drafting needs")
+    if params is None:
+        params = model.init(jax.random.PRNGKey(seed))
+    return ModelDraft(model=model, params=params)

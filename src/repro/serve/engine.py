@@ -35,6 +35,14 @@ remains.
 per-slot page tables and shared-prefix reuse (:mod:`.pages`,
 DESIGN.md §10); the dense path remains the default and the fallback
 for models whose cache layout doesn't support paging.
+
+``spec=SpecConfig(k=..., draft=...)`` turns each decode step into a
+speculative cycle (:mod:`.spec`, DESIGN.md §12): the draft proposes
+``k`` tokens, the target verifies all ``k+1`` positions in one span
+forward, and the jitted accept/resample rule keeps greedy output
+token-for-token identical to non-speculative serving while emitting up
+to ``k+1`` tokens per step.  Models without the span-write decode path
+decline via ``supports_spec()`` and serve non-speculatively.
 """
 from __future__ import annotations
 
@@ -49,9 +57,9 @@ import numpy as np
 
 from .buckets import bucket_for, default_buckets
 from .cache_ops import (copy_page, merge_slots, scatter_prefill_pages,
-                        write_slot)
+                        truncate_slot, write_slot)
 from .pages import PagePool, block_hashes
-from .sampler import sample_tokens
+from .sampler import policy_in_use, sample_tokens
 
 
 @dataclasses.dataclass
@@ -61,6 +69,7 @@ class Request:
     max_new_tokens: int = 32
     temperature: float = 0.0     # 0 => greedy
     top_k: int = 0               # 0 => disabled
+    top_p: float = 0.0           # 0 or >= 1 => disabled (nucleus)
     deadline: Optional[float] = None   # absolute time.time() cutoff
     on_token: Optional[Callable[[int, int], None]] = None
     on_finish: Optional[Callable[[int, np.ndarray], None]] = None
@@ -99,7 +108,7 @@ class ServeEngine:
     def __init__(self, model, params, *, n_slots: int = 4,
                  max_len: int = 512, buckets=None, rng_seed: int = 0,
                  paged: bool = False, page_size: int = 16,
-                 n_pages: Optional[int] = None):
+                 n_pages: Optional[int] = None, spec=None):
         self.model = model
         self.params = params
         self.n_slots = n_slots
@@ -145,14 +154,25 @@ class ServeEngine:
             self._scatter_pages = jax.jit(scatter_prefill_pages)
             self._copy_page = jax.jit(copy_page)
 
+        # speculative decoding (DESIGN.md §12): spec is a SpecConfig with
+        # a draft source; models without the span-write decode path fall
+        # back to plain decode
+        self._spec = None
+        probe_spec = getattr(model, "supports_spec", None)
+        if spec is not None and probe_spec is not None and probe_spec():
+            from .spec import SpecRunner
+            self._spec = SpecRunner(self, spec)
+            self._truncate = jax.jit(truncate_slot)
+
         self._m = dict(tokens_generated=0, decode_steps=0, prefill_batches=0,
                        admitted=0, completed=0, expired=0, truncated=0,
                        prefix_hits=0, prefix_hit_tokens=0, fill_steps=0,
                        serve_time_s=0.0)
+        self._req_stats: dict = {}   # rid -> dict(tokens=..., steps=...)
 
     # -- jitted bodies -------------------------------------------------------
     def _prefill_admit_fn(self, params, tokens, prompt_len, cache,
-                          admit_mask, temps, top_k, key, slot_last):
+                          admit_mask, temps, top_k, top_p, key, slot_last):
         """Batched bucketed prefill + admission + first-token sampling.
 
         tokens (n_slots, bucket) is slot-aligned: row s is the prompt
@@ -161,25 +181,25 @@ class ServeEngine:
         scratch = self.model.init_cache(self.n_slots, self.max_len)
         logits, new = self.model.prefill(params, tokens, scratch, prompt_len)
         merged = merge_slots(cache, new, admit_mask)
-        first = sample_tokens(logits[:, 0], temps, top_k, key)
+        first = sample_tokens(logits[:, 0], temps, top_k, key, top_p)
         slot_last = jnp.where(admit_mask, first, slot_last)
         return slot_last, merged
 
-    def _admit_one_fn(self, params, tokens, cache, slot, temps, top_k, key,
-                      slot_last):
+    def _admit_one_fn(self, params, tokens, cache, slot, temps, top_k,
+                      top_p, key, slot_last):
         """Fallback admission: exact-length batch-1 prefill, written into
         the batched cache by one per-slot dynamic_update_index_in_dim op
         (slot is traced — a single compile serves every slot)."""
         c1 = self.model.init_cache(1, self.max_len)
         logits, c1 = self.model.prefill(params, tokens, c1)
         merged = write_slot(cache, c1, slot)
-        first = sample_tokens(logits[:, 0], temps, top_k, key)
+        first = sample_tokens(logits[:, 0], temps, top_k, key, top_p)
         slot_last = jax.lax.dynamic_update_index_in_dim(
             slot_last, first[0], slot, 0)
         return slot_last, merged
 
     def _decode_fn(self, params, cache, slot_last, active, temps, top_k,
-                   key):
+                   top_p, key):
         """One decode step with inactive slots masked.
 
         Inactive slots still flow through the batched matmuls (shape
@@ -193,12 +213,12 @@ class ServeEngine:
         logits, cache = self.model.decode_step(params, cache,
                                                slot_last[:, None])
         cache = dict(cache, len=jnp.where(active, cache["len"], old_len))
-        nxt = sample_tokens(logits[:, 0], temps, top_k, key)
+        nxt = sample_tokens(logits[:, 0], temps, top_k, key, top_p)
         nxt = jnp.where(active, nxt, slot_last)
         return nxt, cache
 
     def _prefill_paged_fn(self, params, tokens, prompt_len, admit_mask,
-                          temps, top_k, key, slot_last):
+                          temps, top_k, top_p, key, slot_last):
         """Bucketed batched prefill for the paged path: fills a dense
         *scratch* cache sized to the bucket (padded up to a page
         multiple), samples first tokens, and returns the scratch for the
@@ -209,19 +229,19 @@ class ServeEngine:
         s_pages = -(-t // self.page_size) * self.page_size
         scratch = self.model.init_cache(self.n_slots, s_pages)
         logits, new = self.model.prefill(params, tokens, scratch, prompt_len)
-        first = sample_tokens(logits[:, 0], temps, top_k, key)
+        first = sample_tokens(logits[:, 0], temps, top_k, key, top_p)
         slot_last = jnp.where(admit_mask, first, slot_last)
         return slot_last, new
 
     def _decode_paged_fn(self, params, store, page_table, lens, slot_last,
-                         active, temps, top_k, key):
+                         active, temps, top_k, top_p, key):
         """One decode step against the page store.  ``lens`` is the
         host-managed per-slot valid length (already clamped for retired
         slots); retired slots' page-table rows point at the trash page,
         so their masked write can never touch a live page."""
         logits, store = self.model.decode_step_paged(
             params, store, slot_last[:, None], page_table, lens)
-        nxt = sample_tokens(logits[:, 0], temps, top_k, key)
+        nxt = sample_tokens(logits[:, 0], temps, top_k, key, top_p)
         nxt = jnp.where(active, nxt, slot_last)
         return nxt, store
 
@@ -229,6 +249,19 @@ class ServeEngine:
     def _next_key(self):
         self._rng_step += 1
         return jax.random.fold_in(self._key, self._rng_step)
+
+    @staticmethod
+    def _policy_args(temps, top_k, top_p):
+        """Device policy args for the jitted bodies, with top-k/top-p
+        dropped to ``None`` when no slot in the batch uses them — the
+        full-vocab sort/argsort behind those masks would otherwise run
+        every decode step (None vs array is a different jit signature,
+        so each variant compiles once).  The in-use predicates are
+        shared with the speculative cycle (:func:`.sampler.policy_in_use`)."""
+        use_tk, use_tp = policy_in_use(top_k, top_p)
+        tk = jnp.asarray(top_k, jnp.int32) if use_tk else None
+        tp = jnp.asarray(top_p, jnp.float32) if use_tp else None
+        return jnp.asarray(temps, jnp.float32), tk, tp
 
     def _check_prompt(self, req: Request) -> int:
         n = int(np.asarray(req.prompt).shape[0])
@@ -252,16 +285,18 @@ class ServeEngine:
         cache = self.model.init_cache(1, self.max_len)
         tok = jnp.asarray(np.asarray(request.prompt, np.int32))[None]
         logits, cache = self._prefill1(self.params, tok, cache)
-        temps = jnp.asarray([request.temperature], jnp.float32)
-        top_k = jnp.asarray([request.top_k], jnp.int32)
+        temps, top_k, top_p = self._policy_args(
+            [request.temperature], [request.top_k], [request.top_p])
         active = jnp.ones((1,), bool)
-        nxt = self._sample(logits[:, 0], temps, top_k, self._next_key())
+        nxt = self._sample(logits[:, 0], temps, top_k, self._next_key(),
+                           top_p)
         out = [int(nxt[0])]
         n_steps = min(request.max_new_tokens - 1,
                       self.max_len - len(request.prompt))
         for _ in range(n_steps):
             nxt, cache = self._decode(self.params, cache, nxt, active,
-                                      temps, top_k, self._next_key())
+                                      temps, top_k, top_p,
+                                      self._next_key())
             self._m["decode_steps"] += 1
             out.append(int(nxt[0]))
         self._m["tokens_generated"] += len(out)
@@ -287,8 +322,23 @@ class ServeEngine:
     def _emit(self, req: Request, tok: int):
         req.out_tokens.append(tok)
         self._m["tokens_generated"] += 1
+        self._req_stats.setdefault(
+            req.rid, dict(tokens=0, steps=0))["tokens"] += 1
         if req.on_token:
             req.on_token(req.rid, tok)
+
+    def _count_step(self, rid: int):
+        """One engine step (prefill, decode step, or spec cycle) in
+        which request ``rid`` occupied a live slot — the denominator of
+        its ``tokens_per_step``."""
+        self._req_stats.setdefault(
+            rid, dict(tokens=0, steps=0))["steps"] += 1
+
+    def request_summary(self) -> dict:
+        """Per-request ``tokens_per_step`` (tokens emitted per engine
+        step while resident; > 1 only with speculative bursts)."""
+        return {rid: s["tokens"] / max(s["steps"], 1)
+                for rid, s in self._req_stats.items()}
 
     # -- batched continuous path ---------------------------------------------
     def serve(self, requests: List[Request]) -> dict:
@@ -302,6 +352,7 @@ class ServeEngine:
 
         With ``paged=True`` (and a model whose cache layout supports it)
         the same contract is served from the paged KV cache."""
+        self._req_stats = {}         # per-serve scope (no unbounded growth)
         if self.paged:
             return self._serve_paged(requests)
         t0 = time.time()
@@ -317,6 +368,7 @@ class ServeEngine:
         slot_len = np.zeros(n, np.int64)      # host mirror of cache["len"]
         temps = np.zeros(n, np.float32)
         top_k = np.zeros(n, np.int32)
+        top_p = np.zeros(n, np.float32)
         active = np.zeros(n, bool)
 
         def finish(s: int, counter: str = "completed"):
@@ -343,10 +395,15 @@ class ServeEngine:
                 active[s] = True
                 temps[s] = req.temperature
                 top_k[s] = req.top_k
+                top_p[s] = req.top_p
                 slot_len[s] = len(req.prompt)
                 self._m["admitted"] += 1
+                self._req_stats[req.rid] = dict(tokens=0, steps=0)
+                if self._spec is not None:
+                    self._spec.admit_slot(s, req.prompt)
 
         def post_admit(req, s, first_tok):
+            self._count_step(req.rid)
             emit(req, first_tok)
             if len(req.out_tokens) >= req.max_new_tokens:
                 finish(s)
@@ -374,8 +431,8 @@ class ServeEngine:
                         self.params,
                         jnp.asarray(np.asarray(req.prompt, np.int32))[None],
                         cache, jnp.asarray(s, jnp.int32),
-                        jnp.asarray([req.temperature], jnp.float32),
-                        jnp.asarray([req.top_k], jnp.int32),
+                        *self._policy_args([req.temperature], [req.top_k],
+                                           [req.top_p]),
                         self._next_key(), slot_last)
                     self._m["prefill_batches"] += 1
                     post_admit(req, s, int(np.asarray(slot_last)[s]))
@@ -413,8 +470,9 @@ class ServeEngine:
                 admit(group, targets)
                 slot_last, cache = self._prefill_admit(
                     self.params, jnp.asarray(tokens), jnp.asarray(plen),
-                    cache, jnp.asarray(admit_mask), jnp.asarray(temps),
-                    jnp.asarray(top_k), self._next_key(), slot_last)
+                    cache, jnp.asarray(admit_mask),
+                    *self._policy_args(temps, top_k, top_p),
+                    self._next_key(), slot_last)
                 self._m["prefill_batches"] += 1
                 toks = np.asarray(slot_last)
                 for req, s in zip(group, targets):
@@ -422,30 +480,102 @@ class ServeEngine:
 
         fill_slots()
         while active.any():
-            slot_last, cache = self._decode(
-                self.params, cache, slot_last, jnp.asarray(active),
-                jnp.asarray(temps), jnp.asarray(top_k), self._next_key())
-            self._m["decode_steps"] += 1
-            toks = np.asarray(slot_last)
-            now = time.time()
-            for s in range(n):
-                req = slot_req[s]
-                if req is None or not active[s]:
-                    continue
-                slot_len[s] += 1
-                assert slot_len[s] <= self.max_len, \
-                    f"slot {s}: cache len {slot_len[s]} > max_len"
-                emit(req, int(toks[s]))
-                if len(req.out_tokens) >= req.max_new_tokens:
-                    finish(s)
-                elif req.deadline is not None and now > req.deadline:
-                    finish(s, counter="truncated")
-                elif slot_len[s] >= self.max_len:
-                    finish(s, counter="truncated")
+            k_eff = self._spec_k(slot_len, active, slot_req)
+            if k_eff >= 1:
+                # speculative cycle: draft k_eff, verify k_eff+1, roll
+                # back rejected suffixes by republishing host lengths
+                lens_safe = np.where(
+                    active, slot_len,
+                    np.minimum(slot_len, self.max_len - (k_eff + 1)))
+                out, n_acc, cache = self._spec.run_cycle_dense(
+                    cache, jnp.asarray(lens_safe.astype(np.int32)),
+                    slot_last, jnp.asarray(active), temps, top_k, top_p,
+                    self._next_key(), k_eff)
+                self._m["decode_steps"] += 1
+                last_np = np.asarray(slot_last).copy()
+                now = time.time()
+                for s in range(n):
+                    req = slot_req[s]
+                    if req is None or not active[s]:
+                        continue
+                    self._count_step(req.rid)
+                    consumed = 0
+                    for i in range(int(n_acc[s]) + 1):
+                        consumed = i + 1
+                        slot_len[s] += 1
+                        assert slot_len[s] <= self.max_len, \
+                            f"slot {s}: cache len {slot_len[s]} > max_len"
+                        last_np[s] = int(out[s, i])
+                        emit(req, int(out[s, i]))
+                        if len(req.out_tokens) >= req.max_new_tokens:
+                            finish(s)
+                            break
+                        elif req.deadline is not None and now > req.deadline:
+                            finish(s, counter="truncated")
+                            break
+                        elif slot_len[s] >= self.max_len:
+                            finish(s, counter="truncated")
+                            break
+                    # draft proposals that reached the output (position
+                    # n_acc is the correction/bonus, not a proposal)
+                    self._spec.m["emitted_draft_tokens"] += \
+                        min(consumed, int(n_acc[s]))
+                slot_last = jnp.asarray(last_np)
+                cache = self._truncate(
+                    cache, jnp.asarray(slot_len.astype(np.int32)))
+            else:
+                if self._spec is not None:
+                    # keep the independent draft's KV aligned through
+                    # plain fallback steps (self-draft shares the cache)
+                    self._spec.track_step(
+                        slot_last,
+                        np.where(active, slot_len,
+                                 np.minimum(slot_len, self.max_len - 1)))
+                slot_last, cache = self._decode(
+                    self.params, cache, slot_last, jnp.asarray(active),
+                    *self._policy_args(temps, top_k, top_p),
+                    self._next_key())
+                self._m["decode_steps"] += 1
+                toks = np.asarray(slot_last)
+                now = time.time()
+                for s in range(n):
+                    req = slot_req[s]
+                    if req is None or not active[s]:
+                        continue
+                    self._count_step(req.rid)
+                    slot_len[s] += 1
+                    assert slot_len[s] <= self.max_len, \
+                        f"slot {s}: cache len {slot_len[s]} > max_len"
+                    emit(req, int(toks[s]))
+                    if len(req.out_tokens) >= req.max_new_tokens:
+                        finish(s)
+                    elif req.deadline is not None and now > req.deadline:
+                        finish(s, counter="truncated")
+                    elif slot_len[s] >= self.max_len:
+                        finish(s, counter="truncated")
             if queue and any(r is None for r in slot_req):
                 fill_slots()
         self._m["serve_time_s"] += time.time() - t0
         return results
+
+    def _spec_k(self, slot_len, active, slot_req, filling=()) -> int:
+        """Draft depth for this iteration: the configured k shrunk to
+        (a) the tightest active slot's remaining cache room (a cycle
+        writes k+1 fresh positions per slot) and (b) the *largest*
+        remaining token budget across active slots — when every slot is
+        near its ``max_new_tokens`` a full-depth burst would be paid
+        for and thrown away, so the depth tracks what can still be
+        emitted (slots below the max just drop their surplus, which is
+        cheap).  0 means "run a plain decode step" — near-capacity
+        slots and prompt-filling paged slots keep the exact truncation
+        semantics of non-speculative serving."""
+        if self._spec is None or any(filling):
+            return 0
+        room = min(self.max_len - int(slot_len[s])
+                   for s in range(self.n_slots) if active[s])
+        budget = max(slot_req[s].max_new_tokens - len(slot_req[s].out_tokens)
+                     for s in range(self.n_slots) if active[s])
+        return max(0, min(self._spec.cfg.k, room - 1, budget - 1))
 
     # -- paged continuous path -----------------------------------------------
     def _serve_paged(self, requests: List[Request]) -> dict:
@@ -494,6 +624,7 @@ class ServeEngine:
         slot_hashes: List[Optional[list]] = [None] * n
         temps = np.zeros(n, np.float32)
         top_k = np.zeros(n, np.int32)
+        top_p = np.zeros(n, np.float32)
         active = np.zeros(n, bool)
 
         def release(s: int):
@@ -543,7 +674,11 @@ class ServeEngine:
             active[s] = True
             temps[s] = req.temperature
             top_k[s] = req.top_k
+            top_p[s] = req.top_p
             self._m["admitted"] += 1
+            self._req_stats[req.rid] = dict(tokens=0, steps=0)
+            if self._spec is not None:
+                self._spec.admit_slot(s, req.prompt)
 
         def finish_checks(req: Request, s: int, now=None):
             if len(req.out_tokens) >= req.max_new_tokens:
@@ -627,8 +762,9 @@ class ServeEngine:
                     slot_len[s] = len(p)
                 slot_last, scratch = self._prefill_paged(
                     self.params, jnp.asarray(tokens), jnp.asarray(plen),
-                    jnp.asarray(admit_mask), jnp.asarray(temps),
-                    jnp.asarray(top_k), self._next_key(), slot_last)
+                    jnp.asarray(admit_mask),
+                    *self._policy_args(temps, top_k, top_p),
+                    self._next_key(), slot_last)
                 self._m["prefill_batches"] += 1
                 n_scratch_pages = -(-b // ps)
                 all_ids = np.full((len(group), n_scratch_pages),
@@ -646,48 +782,119 @@ class ServeEngine:
                     register_prompt_pages(s)
                 toks = np.asarray(slot_last)
                 for (req, hs), s in zip(group, targets):
+                    self._count_step(req.rid)
                     self._emit(req, int(toks[s]))
                     finish_checks(req, s)
 
         fill_slots()
         while active.any():
-            sl = np.asarray(slot_last).copy()
-            lens = np.minimum(slot_len, self.max_len - 1)  # retired slots
-            for s in range(n):
-                if not active[s]:
-                    continue
-                lens[s] = slot_len[s]
-                ensure_writable(s, int(slot_len[s]))
-                if fill[s] is not None:
-                    sl[s] = fill[s][0]      # teacher-force the prompt
-            slot_last, self._store = self._decode_paged(
-                self.params, self._store, jnp.asarray(table),
-                jnp.asarray(lens.astype(np.int32)), jnp.asarray(sl),
-                jnp.asarray(active), jnp.asarray(temps),
-                jnp.asarray(top_k), self._next_key())
-            self._m["decode_steps"] += 1
-            toks = np.asarray(slot_last)
-            now = time.time()
-            for s in range(n):
-                req = slot_req[s]
-                if req is None or not active[s]:
-                    continue
-                slot_len[s] += 1
-                assert slot_len[s] <= self.max_len, \
-                    f"slot {s}: cache len {slot_len[s]} > max_len"
-                if fill[s] is not None:
-                    self._m["fill_steps"] += 1
-                    fill[s] = fill[s][1:]
-                    if len(fill[s]):
-                        if req.deadline is not None and now > req.deadline:
+            k_eff = self._spec_k(
+                slot_len, active, slot_req,
+                filling=[fill[s] is not None
+                         for s in range(n) if active[s]])
+            if k_eff >= 1:
+                # paged speculative cycle: pre-own the burst's pages
+                # (alloc / copy-on-write), draft+verify in one jitted
+                # call, then trim exclusively-owned rejected-suffix
+                # pages back to the pool
+                lens = np.minimum(slot_len, self.max_len - (k_eff + 1))
+                for s in range(n):
+                    if not active[s]:
+                        continue
+                    lens[s] = slot_len[s]
+                    for pos in range(int(slot_len[s]),
+                                     int(slot_len[s]) + k_eff + 1):
+                        ensure_writable(s, pos)
+                out, n_acc, self._store = self._spec.run_cycle_paged(
+                    self._store, jnp.asarray(table),
+                    jnp.asarray(lens.astype(np.int32)), slot_last,
+                    jnp.asarray(active), temps, top_k, top_p,
+                    self._next_key(), k_eff)
+                self._m["decode_steps"] += 1
+                last_np = np.asarray(slot_last).copy()
+                now = time.time()
+                for s in range(n):
+                    req = slot_req[s]
+                    if req is None or not active[s]:
+                        continue
+                    self._count_step(req.rid)
+                    consumed = 0
+                    for i in range(int(n_acc[s]) + 1):
+                        consumed = i + 1
+                        slot_len[s] += 1
+                        assert slot_len[s] <= self.max_len, \
+                            f"slot {s}: cache len {slot_len[s]} > max_len"
+                        last_np[s] = int(out[s, i])
+                        self._emit(req, int(out[s, i]))
+                        if len(req.out_tokens) >= req.max_new_tokens:
+                            finish(s)
+                            break
+                        elif req.deadline is not None and now > req.deadline:
                             finish(s, counter="truncated")
-                        continue            # still prefilling this slot
-                    # fill done: this step consumed the last prompt
-                    # token, so the sampled token is the first output
-                    fill[s] = None
-                    register_prompt_pages(s)
-                self._emit(req, int(toks[s]))
-                finish_checks(req, s, now)
+                            break
+                        elif slot_len[s] >= self.max_len:
+                            finish(s, counter="truncated")
+                            break
+                    self._spec.m["emitted_draft_tokens"] += \
+                        min(consumed, int(n_acc[s]))
+                    if active[s]:
+                        # rejected-suffix rollback: pages wholly past the
+                        # accepted depth were allocated (or COW'd) for
+                        # this burst and are exclusively owned — shared
+                        # prefix pages all sit below slot_len
+                        for j in range(self.pages_per_slot):
+                            phys = int(table[s, j])
+                            if phys != PagePool.TRASH \
+                                    and j * ps >= slot_len[s]:
+                                assert not pool.is_shared(phys)
+                                pool.decref(phys)
+                                table[s, j] = PagePool.TRASH
+                slot_last = jnp.asarray(last_np)
+            else:
+                sl = np.asarray(slot_last).copy()
+                lens = np.minimum(slot_len, self.max_len - 1)  # retired
+                for s in range(n):
+                    if not active[s]:
+                        continue
+                    lens[s] = slot_len[s]
+                    ensure_writable(s, int(slot_len[s]))
+                    if fill[s] is not None:
+                        sl[s] = fill[s][0]      # teacher-force the prompt
+                if self._spec is not None:
+                    # align the independent draft's KV through fill /
+                    # fallback steps (it sees the same token stream)
+                    self._spec.track_step(jnp.asarray(sl), lens)
+                slot_last, self._store = self._decode_paged(
+                    self.params, self._store, jnp.asarray(table),
+                    jnp.asarray(lens.astype(np.int32)), jnp.asarray(sl),
+                    jnp.asarray(active),
+                    *self._policy_args(temps, top_k, top_p),
+                    self._next_key())
+                self._m["decode_steps"] += 1
+                toks = np.asarray(slot_last)
+                now = time.time()
+                for s in range(n):
+                    req = slot_req[s]
+                    if req is None or not active[s]:
+                        continue
+                    self._count_step(req.rid)
+                    slot_len[s] += 1
+                    assert slot_len[s] <= self.max_len, \
+                        f"slot {s}: cache len {slot_len[s]} > max_len"
+                    if fill[s] is not None:
+                        self._m["fill_steps"] += 1
+                        fill[s] = fill[s][1:]
+                        if len(fill[s]):
+                            if req.deadline is not None \
+                                    and now > req.deadline:
+                                finish(s, counter="truncated")
+                            continue        # still prefilling this slot
+                        # fill done: this step consumed the last prompt
+                        # token, so the sampled token is the first output
+                        fill[s] = None
+                        register_prompt_pages(s)
+                    self._emit(req, int(toks[s]))
+                    finish_checks(req, s, now)
             if queue and any(r is None for r in slot_req):
                 fill_slots()
         self._m["serve_time_s"] += time.time() - t0
@@ -735,6 +942,19 @@ class ServeEngine:
             m["prefix_block_hits"] = self.pool.prefix_block_hits
         m["retrace_count"] = sum(max(0, c.traces - 1) for c in counters)
         m["buckets"] = list(self.buckets)
+        m["spec"] = self._spec is not None
+        if self._spec is not None:
+            m.update(self._spec.metrics())
+            m["accept_rate"] = (m["accepted_tokens"]
+                                / max(m["proposed_tokens"], 1))
+            # share of emitted tokens that the draft proposed (the rest
+            # are prefill first-tokens and verify corrections/bonuses);
+            # uses the emitted count, not acceptances — a burst cut by a
+            # budget or deadline accepts more than it emits
+            m["draft_share"] = (m["emitted_draft_tokens"]
+                                / max(m["tokens_generated"], 1))
+        m["tokens_per_step"] = (m["tokens_generated"]
+                                / max(m["decode_steps"], 1))
         dt = m["serve_time_s"]
         m["tokens_per_s"] = (m["tokens_generated"] / dt) if dt > 0 else 0.0
         return m

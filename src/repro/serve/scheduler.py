@@ -23,6 +23,18 @@ import numpy as np
 from .engine import Request, ServeEngine
 
 
+class RunResult(dict):
+    """``{rid: tokens}`` mapping plus a ``summary`` attribute.
+
+    ``summary`` carries the run-level digest — completion/expiry/
+    truncation counts, throughput, and (when the engine runs
+    speculatively) ``accept_rate``/``tokens_per_step``/``draft_share``
+    plus per-request ``tokens_per_step`` — so callers don't have to
+    reach into engine-level counters.
+    """
+    summary: dict = {}
+
+
 class Scheduler:
     """EDF admission queue over a ServeEngine."""
 
@@ -30,6 +42,7 @@ class Scheduler:
         self.engine = engine
         self._heap: list = []
         self._seq = itertools.count()
+        self.last_summary: dict = {}
 
     def submit(self, request: Request, *,
                deadline: Optional[float] = None,
@@ -55,14 +68,51 @@ class Scheduler:
     def pending(self) -> int:
         return len(self._heap)
 
-    def run(self) -> dict:
+    def run(self) -> RunResult:
         """Drain the queue through the engine in EDF order.
 
-        Returns {rid: np.ndarray of generated tokens}."""
+        Returns a :class:`RunResult`: ``{rid: np.ndarray of generated
+        tokens}`` whose ``summary`` attribute digests the run — overall
+        and per-request ``tokens_per_step`` and, for speculative
+        engines, ``accept_rate``/``draft_share`` — instead of leaving
+        those buried in engine-level counters."""
         reqs = [heapq.heappop(self._heap)[2] for _ in range(len(self._heap))]
-        if not reqs:
-            return {}
-        return self.engine.serve(reqs)
+        m0 = self.engine.metrics()
+        out = RunResult()
+        if reqs:
+            out.update(self.engine.serve(reqs))
+        m = self.engine.metrics()
+        # engine counters are engine-lifetime cumulative; the summary
+        # digests *this* run, so report deltas against the pre-run
+        # snapshot (a reused Scheduler must not re-report earlier runs)
+        d = lambda key: m[key] - m0[key]
+        rids = {r.rid for r in reqs}
+        per_req = {rid: tps
+                   for rid, tps in self.engine.request_summary().items()
+                   if rid in rids}
+        tokens, steps = d("tokens_generated"), d("decode_steps")
+        dt = m["serve_time_s"] - m0["serve_time_s"]
+        out.summary = {
+            "requests": len(reqs),
+            "completed": d("completed"),
+            "expired": d("expired"),
+            "truncated": d("truncated"),
+            "tokens_generated": tokens,
+            "tokens_per_s": (tokens / dt) if dt > 0 else 0.0,
+            "tokens_per_step": tokens / max(steps, 1),
+            "tokens_per_step_by_request": per_req,
+            "spec": m["spec"],
+        }
+        if m["spec"]:
+            out.summary.update(
+                accept_rate=(d("accepted_tokens")
+                             / max(d("proposed_tokens"), 1)),
+                draft_share=(d("emitted_draft_tokens") / max(tokens, 1)),
+                spec_cycles=d("spec_cycles"),
+                spec_k=m["spec_k"],
+                draft_kind=m["draft_kind"])
+        self.last_summary = out.summary
+        return out
 
     def metrics(self) -> dict:
         return self.engine.metrics()

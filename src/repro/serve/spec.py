@@ -1,0 +1,316 @@
+"""Speculative decoding: draft-K, batched verify, accept/rollback.
+
+One speculative *cycle* replaces one decode step of the engine loop:
+
+1. **Draft** — the draft source (:mod:`.draft`) runs K cheap sequential
+   decode steps, proposing ``d_1..d_K`` per slot under each slot's own
+   sampling policy.  The self-draft writes its speculative K/V straight
+   into the target cache/page store (overwritten in step 2); an
+   independent draft uses its own dense cache plus one alignment step
+   so its cache stays complete when the whole burst is accepted.
+2. **Verify** — the target scores all K+1 positions in one span forward
+   (``verify_step`` / ``verify_step_paged``): per-slot kv_lens shift the
+   causal mask, so slots at different acceptance depths stay in one
+   batch, and each position runs the same decode-attention kernel
+   dispatch as the non-speculative loop.
+3. **Accept** — the jitted leftover-probability rejection rule
+   (:func:`.sampler.spec_accept`) emits ``n_accept + 1`` tokens per slot
+   (greedy reduces to exact target argmaxes, so greedy output is
+   token-for-token identical to non-speculative decode).
+4. **Rollback** — the engine truncates per-slot lengths
+   (:func:`.cache_ops.truncate_slot`) and, in paged mode, trims
+   exclusively-owned pages past the accepted depth (refcount-safe: the
+   burst pages were allocated or copied-on-write before the cycle, so
+   shared prefix pages are never touched).
+
+The cycle is one jitted XLA program per (k, cache-kind); the engine
+caches them in :class:`SpecRunner` and picks ``k`` per iteration from
+the tightest slot's remaining cache room.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .buckets import bucket_for
+from .cache_ops import write_slot
+from .sampler import (draw_from_probs, policy_in_use, policy_probs,
+                      spec_accept)
+
+
+@dataclasses.dataclass
+class SpecConfig:
+    """Engine-level speculative decoding configuration.
+
+    ``k`` is the draft depth (tokens proposed per cycle; up to ``k + 1``
+    emitted).  ``draft`` is a draft source instance —
+    :class:`~repro.serve.draft.SelfDraft` or
+    :class:`~repro.serve.draft.ModelDraft`.
+    """
+    k: int = 3
+    draft: Any = None
+
+
+class SpecRunner:
+    """Owns the draft state and the per-k jitted speculative cycles."""
+
+    def __init__(self, engine, cfg: SpecConfig):
+        from .engine import TraceCounter
+        if cfg.draft is None:
+            raise ValueError("SpecConfig.draft must be a draft source "
+                             "(serve.draft.SelfDraft / ModelDraft)")
+        if cfg.k < 1:
+            raise ValueError(f"spec k must be >= 1, got {cfg.k}")
+        self.engine = engine
+        self.cfg = cfg
+        self.draft = cfg.draft
+        self.dmodel = (self.draft.model if self.draft.model is not None
+                       else engine.model)
+        dv = getattr(self.dmodel.cfg, "vocab_size", None)
+        tv = engine.model.cfg.vocab_size
+        if dv != tv:
+            # fail fast: a vocab mismatch would otherwise surface as an
+            # opaque broadcast error deep inside the jitted cycle (and
+            # silently clamp draft token ids before that)
+            raise ValueError(
+                f"draft vocab_size {dv} != target vocab_size {tv}; the "
+                "accept/resample rule compares the two distributions "
+                "elementwise")
+        self.shares = bool(getattr(self.draft, "shares_cache", False))
+        self._trace_counter = TraceCounter
+        self._cycles: dict = {}
+        self.dcache = None
+        if not self.shares:
+            self.dcache = self.dmodel.init_cache(engine.n_slots,
+                                                 engine.max_len)
+            self._dprefill = TraceCounter(jax.jit(self.dmodel.prefill))
+            # distinct function object: jit caches key on the underlying
+            # callable, and this wrapper's draft-cache signatures must
+            # not mingle with other write_slot users' cache entries
+            self._dwrite = jax.jit(
+                lambda cache, single, slot: write_slot(cache, single, slot))
+            self._dtrack = jax.jit(self.dmodel.decode_step)
+            self._dplen = ("prompt_len" in inspect.signature(
+                self.dmodel.prefill).parameters)
+        self.m = dict(spec_cycles=0, draft_steps=0, proposed_tokens=0,
+                      accepted_tokens=0, emitted_draft_tokens=0)
+
+    # -- admission -----------------------------------------------------------
+    def admit_slot(self, slot: int, prompt):
+        """Prefill the independent draft's cache row for a fresh slot.
+
+        The self-draft shares the target cache (the prompt's K/V is the
+        target's own prefill output) — nothing to do.  The independent
+        draft pads to the engine's bucket grid when it supports
+        ``prompt_len``, bounding compiles by the bucket count.
+        """
+        if self.shares:
+            return
+        p = np.asarray(prompt, np.int32)
+        eng = self.engine
+        c1 = self.dmodel.init_cache(1, eng.max_len)
+        if self._dplen:
+            b = bucket_for(eng.buckets, len(p))
+            tokens = np.zeros((1, b), np.int32)
+            tokens[0, :len(p)] = p
+            _, c1 = self._dprefill(self.draft.params, jnp.asarray(tokens),
+                                   c1, jnp.asarray([len(p)], jnp.int32))
+        else:
+            _, c1 = self._dprefill(self.draft.params, jnp.asarray(p[None]),
+                                   c1)
+        self.dcache = self._dwrite(self.dcache, c1,
+                                   jnp.asarray(slot, jnp.int32))
+
+    def track_step(self, last, lens):
+        """Advance the independent draft's KV through one *plain* decode
+        iteration (the engine fell back to non-speculative decode —
+        near-capacity slot, or a paged slot teacher-forcing its prompt
+        tail).  Without this the draft's cache would hold permanent
+        holes at those positions and acceptance would silently collapse
+        for the rest of the request.  The self-draft shares the target
+        cache, so there is nothing to track.
+
+        ``last`` is the batch's input token for this step, ``lens`` the
+        pre-step per-slot lengths (inactive slots already clamped by
+        the engine)."""
+        if self.shares:
+            return
+        dc = dict(self.dcache,
+                  len=jnp.asarray(np.asarray(lens, np.int32)))
+        _, self.dcache = self._dtrack(self.draft.params, dc,
+                                      jnp.asarray(last)[:, None])
+        self.m["draft_steps"] += 1
+
+    # -- jitted cycle bodies --------------------------------------------------
+    def _draft_burst(self, step, carry, last, temps, top_k, top_p, key, k):
+        """K sequential draft decode steps.  ``step(carry, tok, j)``
+        advances the draft one token and returns ``(logits, carry)`` —
+        the dense and paged self/independent variants differ only in
+        that callable, so proposal sampling and RNG keying live in one
+        place.  Returns (draft_tokens (B, K), draft_probs (B, K, V),
+        carry).  ``top_k``/``top_p`` are ``None`` when no slot in the
+        batch uses them (skips the full-vocab sort masks)."""
+        tok = last
+        d_toks, d_qs = [], []
+        for j in range(k):
+            logits, carry = step(carry, tok, j)
+            q = policy_probs(logits[:, 0], temps, top_k, top_p)
+            tok = draw_from_probs(q, jax.random.fold_in(key, j))
+            d_toks.append(tok)
+            d_qs.append(q)
+        return jnp.stack(d_toks, axis=1), jnp.stack(d_qs, axis=1), carry
+
+    def _build_dense(self, k: int, use_topk: bool, use_topp: bool):
+        model, dmodel, shares = self.engine.model, self.dmodel, self.shares
+
+        def body(params, dparams, cache, dcache, lens, last, active, temps,
+                 top_k, top_p, key):
+            top_k = top_k if use_topk else None
+            top_p = top_p if use_topp else None
+            lens = jnp.asarray(lens, jnp.int32)
+            dc = dict(cache if shares else dcache, len=lens)
+            step = lambda c, tok, j: dmodel.decode_step(dparams, c,
+                                                        tok[:, None])
+            d_toks, d_qs, dc = self._draft_burst(step, dc, last, temps,
+                                                 top_k, top_p, key, k)
+            if not shares:
+                # alignment step: if the whole burst is accepted the
+                # draft must also hold d_K's K/V (it only consumed
+                # last..d_{K-1}); the proposal it yields is discarded
+                _, dc = dmodel.decode_step(dparams, dc,
+                                           d_toks[:, -1][:, None])
+            vt = jnp.concatenate([last[:, None], d_toks], axis=1)
+            base = dict(dc if shares else cache, len=lens)
+            vlogits, new_cache = model.verify_step(params, base, vt)
+            out, n_acc = spec_accept(d_toks, d_qs, vlogits, temps, top_k,
+                                     top_p, jax.random.fold_in(key, k + 1))
+            n_acc = jnp.where(active, n_acc, 0)
+            if shares:
+                return out, n_acc, new_cache
+            return out, n_acc, new_cache, dc
+
+        if shares:
+            return lambda params, dparams, cache, lens, last, active, \
+                temps, top_k, top_p, key: body(
+                    params, dparams, cache, None, lens, last, active, temps,
+                    top_k, top_p, key)
+        return body
+
+    def _build_paged(self, k: int, use_topk: bool, use_topp: bool):
+        model, dmodel, shares = self.engine.model, self.dmodel, self.shares
+
+        def body(params, dparams, store, table, dcache, lens, last, active,
+                 temps, top_k, top_p, key):
+            top_k = top_k if use_topk else None
+            top_p = top_p if use_topp else None
+            lens = jnp.asarray(lens, jnp.int32)
+            if shares:
+                # self-draft: speculative K/V goes straight into the
+                # (pre-ensured-writable) target pages; verify overwrites
+                step = lambda st_, tok, j: dmodel.decode_step_paged(
+                    dparams, st_, tok[:, None], table, lens + j)
+                d_toks, d_qs, st = self._draft_burst(step, store, last,
+                                                     temps, top_k, top_p,
+                                                     key, k)
+            else:
+                step = lambda c, tok, j: dmodel.decode_step(dparams, c,
+                                                            tok[:, None])
+                dc = dict(dcache, len=lens)
+                d_toks, d_qs, dc = self._draft_burst(step, dc, last,
+                                                     temps, top_k, top_p,
+                                                     key, k)
+                _, dc = dmodel.decode_step(dparams, dc,
+                                           d_toks[:, -1][:, None])
+                st = store
+            vt = jnp.concatenate([last[:, None], d_toks], axis=1)
+            vlogits, st = model.verify_step_paged(params, st, vt, table,
+                                                  lens)
+            out, n_acc = spec_accept(d_toks, d_qs, vlogits, temps, top_k,
+                                     top_p, jax.random.fold_in(key, k + 1))
+            n_acc = jnp.where(active, n_acc, 0)
+            if shares:
+                return out, n_acc, st
+            return out, n_acc, st, dc
+
+        if shares:
+            return lambda params, dparams, store, table, lens, last, \
+                active, temps, top_k, top_p, key: body(
+                    params, dparams, store, table, None, lens, last, active,
+                    temps, top_k, top_p, key)
+        return body
+
+    def _get_cycle(self, kind: str, k: int, use_topk: bool, use_topp: bool):
+        key = (kind, k, use_topk, use_topp)
+        if key not in self._cycles:
+            build = self._build_dense if kind == "dense" else \
+                self._build_paged
+            self._cycles[key] = self._trace_counter(
+                jax.jit(build(k, use_topk, use_topp)))
+        return self._cycles[key]
+
+    # -- host entry points ----------------------------------------------------
+    def run_cycle_dense(self, cache, lens, last, active, temps, top_k,
+                        top_p, key, k: int):
+        """One dense speculative cycle.  ``temps``/``top_k``/``top_p``
+        are host arrays — the cycle specializes on whether any slot
+        actually uses top-k/top-p (the full-vocab sort masks dominate
+        the accept step's cost otherwise).  Returns host arrays
+        (out (B, k+1), n_acc (B,)) and the updated cache (device)."""
+        fn = self._get_cycle("dense", k, *policy_in_use(top_k, top_p))
+        temps, top_k, top_p = (jnp.asarray(temps), jnp.asarray(top_k),
+                               jnp.asarray(top_p))
+        if self.shares:
+            out, n_acc, cache = fn(self.engine.params, self.draft.params,
+                                   cache, lens, last, active, temps, top_k,
+                                   top_p, key)
+        else:
+            out, n_acc, cache, self.dcache = fn(
+                self.engine.params, self.draft.params, cache, self.dcache,
+                lens, last, active, temps, top_k, top_p, key)
+        n_acc = np.asarray(n_acc)
+        self._account(np.asarray(active), n_acc, k)
+        return np.asarray(out), n_acc, cache
+
+    def run_cycle_paged(self, store, table, lens, last, active, temps,
+                        top_k, top_p, key, k: int):
+        """One paged speculative cycle (same contract, page store)."""
+        fn = self._get_cycle("paged", k, *policy_in_use(top_k, top_p))
+        temps, top_k, top_p = (jnp.asarray(temps), jnp.asarray(top_k),
+                               jnp.asarray(top_p))
+        if self.shares:
+            out, n_acc, store = fn(self.engine.params, self.draft.params,
+                                   store, table, lens, last, active, temps,
+                                   top_k, top_p, key)
+        else:
+            out, n_acc, store, self.dcache = fn(
+                self.engine.params, self.draft.params, store, table,
+                self.dcache, lens, last, active, temps, top_k, top_p, key)
+        n_acc = np.asarray(n_acc)
+        self._account(np.asarray(active), n_acc, k)
+        return np.asarray(out), n_acc, store
+
+    def _account(self, active, n_acc, k: int):
+        """accepted_tokens counts *acceptances* (draft quality, the
+        accept_rate numerator); the engine separately adds the subset
+        that actually reached the output stream to
+        ``emitted_draft_tokens`` (the draft_share numerator) — a burst
+        cut short by a slot's token budget or deadline accepts more
+        than it emits."""
+        n_active = int(active.sum())
+        self.m["spec_cycles"] += 1
+        self.m["draft_steps"] += k + (0 if self.shares else 1)
+        self.m["proposed_tokens"] += k * n_active
+        self.m["accepted_tokens"] += int(n_acc.sum())
+
+    def metrics(self) -> dict:
+        m = dict(self.m)
+        m["spec_traces"] = sum(c.traces for c in self._cycles.values())
+        m["spec_k"] = self.cfg.k
+        m["draft_kind"] = ("self-int%d" % getattr(self.draft, "bits", 8)
+                          if self.shares else "model")
+        return m

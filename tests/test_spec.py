@@ -1,0 +1,511 @@
+"""Speculative decoding subsystem (DESIGN.md §12): draft sources,
+batched verify, accept/resample rule, KV rollback, scheduler surface."""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import QuantSpec, quantize_model, run_calibration
+from repro.models.registry import build_model
+from repro.serve import (Request, Scheduler, ServeEngine, SpecConfig,
+                         policy_probs, registry_draft, sample_tokens,
+                         self_int8_draft, spec_accept, truncate_slot)
+
+
+@pytest.fixture(scope="module")
+def fp_setup():
+    cfg = ARCHS["llama3-8b"].tiny()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+@pytest.fixture(scope="module")
+def kv8_setup():
+    cfg = dataclasses.replace(ARCHS["llama3-8b"].tiny(), kv_cache_bits=8)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def _mixed_requests(cfg, n, seed=0, max_new=(2, 10)):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=int(rng.integers(3, 28))),
+                    max_new_tokens=int(rng.integers(*max_new)))
+            for i in range(n)]
+
+
+def _clone(reqs):
+    return [Request(rid=r.rid, prompt=r.prompt,
+                    max_new_tokens=r.max_new_tokens, deadline=r.deadline)
+            for r in reqs]
+
+
+def _assert_identical(plain_eng, spec_eng, reqs):
+    res_p = plain_eng.serve(_clone(reqs))
+    res_s = spec_eng.serve(_clone(reqs))
+    for r in reqs:
+        np.testing.assert_array_equal(res_p[r.rid], res_s[r.rid])
+    return spec_eng.metrics()
+
+
+# -- greedy identity: the acceptance-criteria matrix -------------------------
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_spec_matches_nonspec_fp16(fp_setup, paged):
+    """Greedy serve(spec=...) is token-for-token identical to
+    non-speculative serve() on the fp16 cache (dense and paged), and the
+    self-int8 draft actually accepts (it tracks its own target)."""
+    cfg, m, params = fp_setup
+    draft = self_int8_draft(m, params)
+    plain = ServeEngine(m, params, n_slots=2, max_len=64, paged=paged,
+                        page_size=8)
+    spec = ServeEngine(m, params, n_slots=2, max_len=64, paged=paged,
+                       page_size=8, spec=SpecConfig(k=3, draft=draft))
+    mm = _assert_identical(plain, spec, _mixed_requests(cfg, 6, seed=0))
+    assert mm["spec"] and mm["spec_cycles"] > 0
+    assert mm["accept_rate"] > 0.5
+    assert mm["tokens_per_step"] > 1.0
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_spec_matches_nonspec_kv8(kv8_setup, paged):
+    """Same identity on the int8-KV cache: the draft's speculative
+    writes quantize through the same per-(token, head) scales and the
+    verify span overwrites them."""
+    cfg, m, params = kv8_setup
+    draft = self_int8_draft(m, params)
+    plain = ServeEngine(m, params, n_slots=2, max_len=48, paged=paged,
+                        page_size=8)
+    spec = ServeEngine(m, params, n_slots=2, max_len=48, paged=paged,
+                       page_size=8, spec=SpecConfig(k=2, draft=draft))
+    _assert_identical(plain, spec, _mixed_requests(cfg, 5, seed=1))
+
+
+def test_spec_matches_generate_int4_packed_target(fp_setup):
+    """The serving configuration that matters: FAQ int4-*packed* target,
+    self-int8 draft re-quantized from the packed codes.  Speculative
+    output equals generate() exactly and the draft tracks the target
+    well (that's the paper's future-activation story paying off)."""
+    cfg, m, params = fp_setup
+    stats = run_calibration(m.forward, params, [
+        {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 32),
+                                      0, cfg.vocab_size)}])
+    qp, _ = quantize_model(params, m.quant_site_map(), stats, method="faq",
+                           spec=QuantSpec(bits=4, group_size=64),
+                           mode="packed")
+    draft = self_int8_draft(m, qp, stats)
+    eng = ServeEngine(m, qp, n_slots=2, max_len=64,
+                      spec=SpecConfig(k=3, draft=draft))
+    reqs = _mixed_requests(cfg, 4, seed=2)
+    res = eng.serve(_clone(reqs))
+    for r in reqs:
+        np.testing.assert_array_equal(res[r.rid], eng.generate(r))
+    mm = eng.metrics()
+    assert mm["accept_rate"] > 0.7          # int8(served) ~ int4 target
+    assert mm["draft_kind"] == "self-int8"
+
+
+def test_spec_identity_survives_hostile_draft(fp_setup):
+    """Correctness never depends on the draft: an *independent*
+    randomly-initialized registry draft proposes garbage (acceptance
+    ~0) yet greedy output stays exactly the target's."""
+    cfg, m, params = fp_setup
+    draft = registry_draft("stablelm-12b", seed=7)
+    plain = ServeEngine(m, params, n_slots=2, max_len=64)
+    spec = ServeEngine(m, params, n_slots=2, max_len=64,
+                       spec=SpecConfig(k=2, draft=draft))
+    mm = _assert_identical(plain, spec, _mixed_requests(cfg, 4, seed=3))
+    assert mm["accept_rate"] < 0.5
+    assert mm["draft_kind"] == "model"
+
+
+def test_spec_moe_single_slot():
+    """MoE verify routes the burst per position, so single-slot
+    speculative decode matches exactly.  (Multi-slot batched MoE decode
+    is composition-dependent — expert capacity contention — with or
+    without speculation, so identity is only well-defined per-slot.)"""
+    cfg = ARCHS["qwen2-moe-a2.7b"].tiny()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    assert m.supports_spec()
+    draft = self_int8_draft(m, params)
+    plain = ServeEngine(m, params, n_slots=1, max_len=64)
+    spec = ServeEngine(m, params, n_slots=1, max_len=64,
+                       spec=SpecConfig(k=3, draft=draft))
+    _assert_identical(plain, spec, _mixed_requests(cfg, 3, seed=4))
+
+
+def test_spec_unsupported_model_falls_back():
+    """Ring-buffer hymba lacks the span-write decode path: the engine
+    declines spec and serves non-speculatively."""
+    cfg = ARCHS["hymba-1.5b"].tiny()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    assert not m.supports_spec()
+    eng = ServeEngine(m, params, n_slots=2, max_len=48,
+                      spec=SpecConfig(k=3, draft=self_int8_draft(m, params)))
+    assert eng._spec is None
+    res = eng.serve([Request(rid=0, prompt=np.arange(6) % cfg.vocab_size,
+                             max_new_tokens=3)])
+    assert res[0].shape == (3,)
+    assert not eng.metrics()["spec"]
+
+
+# -- budget / deadline truncation against speculative bursts -----------------
+
+def test_spec_burst_overshoot_truncated_at_budget(fp_setup):
+    """max_new_tokens that is not a multiple of k+1: the final burst
+    overshoots and the accepted surplus must be dropped — output lengths
+    (and tokens) match non-spec exactly, and the engine's capacity
+    invariants hold."""
+    cfg, m, params = fp_setup
+    draft = self_int8_draft(m, params)
+    plain = ServeEngine(m, params, n_slots=2, max_len=64)
+    spec = ServeEngine(m, params, n_slots=2, max_len=64,
+                       spec=SpecConfig(k=3, draft=draft))
+    # budgets 5 and 6 with k+1 = 4-token bursts: both overshoot mid-burst
+    reqs = [Request(rid=0, prompt=np.arange(9) % cfg.vocab_size,
+                    max_new_tokens=5),
+            Request(rid=1, prompt=np.arange(17) % cfg.vocab_size,
+                    max_new_tokens=6)]
+    res_p = plain.serve(_clone(reqs))
+    res_s = spec.serve(_clone(reqs))
+    for r in reqs:
+        assert len(res_s[r.rid]) == r.max_new_tokens
+        np.testing.assert_array_equal(res_p[r.rid], res_s[r.rid])
+
+
+def test_spec_capacity_truncation_matches_nonspec(fp_setup):
+    """A request hitting max_len mid-burst truncates at exactly the
+    same point as non-speculative serving (the cycle's draft depth
+    shrinks near capacity instead of clamp-corrupting the cache)."""
+    cfg, m, params = fp_setup
+    draft = self_int8_draft(m, params)
+    max_len = 24
+    plain = ServeEngine(m, params, n_slots=2, max_len=max_len,
+                        buckets=(8, 24))
+    spec = ServeEngine(m, params, n_slots=2, max_len=max_len,
+                       buckets=(8, 24), spec=SpecConfig(k=3, draft=draft))
+    prompt = (np.arange(8) % cfg.vocab_size).astype(np.int32)
+    reqs = [Request(rid=0, prompt=prompt, max_new_tokens=100)]
+    res_p = plain.serve(_clone(reqs))
+    res_s = spec.serve(_clone(reqs))
+    np.testing.assert_array_equal(res_p[0], res_s[0])
+    assert res_s[0].shape == (1 + max_len - len(prompt),)
+    assert spec.metrics()["truncated"] == 1
+
+
+def test_edf_deadline_expires_mid_decode_spec_burst(fp_setup, monkeypatch):
+    """EDF-scheduled request whose deadline passes *mid-decode* while a
+    speculative burst overshoots its budget: accepted tokens past the
+    deadline/budget are dropped, the request is truncated (not
+    expired), and the emitted prefix matches the deadline-free run.
+    The engine clock is faked so expiry lands deterministically inside
+    the decode loop."""
+    cfg, m, params = fp_setup
+    from repro.serve import engine as engine_mod
+
+    draft = self_int8_draft(m, params)
+    prompt = (np.arange(7) % cfg.vocab_size).astype(np.int32)
+
+    # deadline-free reference
+    ref_eng = ServeEngine(m, params, n_slots=1, max_len=64,
+                          spec=SpecConfig(k=3, draft=draft))
+    ref = ref_eng.serve([Request(rid=9, prompt=prompt,
+                                 max_new_tokens=40)])[9]
+
+    clock = {"t": 0.0}
+
+    def fake_time():
+        clock["t"] += 1.0           # each engine timestamp advances 1s
+        return clock["t"]
+
+    monkeypatch.setattr(engine_mod.time, "time", fake_time)
+    eng = ServeEngine(m, params, n_slots=1, max_len=64,
+                      spec=SpecConfig(k=3, draft=draft))
+    sched = Scheduler(eng)
+    streamed = []
+    # expires a few engine timestamps in: admission survives, a later
+    # speculative burst crosses it mid-decode
+    sched.submit(Request(rid=0, prompt=prompt, max_new_tokens=40),
+                 deadline=6.5,
+                 on_token=lambda rid, t: streamed.append(t))
+    out = sched.run()
+    assert eng.metrics()["truncated"] == 1
+    assert eng.metrics()["expired"] == 0
+    assert 0 < len(out[0]) < 40
+    np.testing.assert_array_equal(out[0], ref[:len(out[0])])
+    assert streamed == out[0].tolist()
+    assert out.summary["truncated"] == 1
+
+
+# -- scheduler summary surface ------------------------------------------------
+
+def test_scheduler_run_surfaces_spec_summary(fp_setup):
+    cfg, m, params = fp_setup
+    draft = self_int8_draft(m, params)
+    eng = ServeEngine(m, params, n_slots=2, max_len=64,
+                      spec=SpecConfig(k=3, draft=draft))
+    sched = Scheduler(eng)
+    prompt = np.arange(5) % cfg.vocab_size
+    for rid, budget in ((0, 12), (1, 3)):
+        sched.submit(Request(rid=rid, prompt=prompt, max_new_tokens=budget))
+    out = sched.run()
+    s = out.summary
+    assert s["spec"] is True
+    assert s["requests"] == 2 and s["completed"] == 2
+    assert 0.0 <= s["accept_rate"] <= 1.0
+    assert s["draft_kind"] == "self-int8" and s["spec_k"] == 3
+    assert set(s["tokens_per_step_by_request"]) == {0, 1}
+    # the long request rides speculative bursts: > 1 token per step
+    assert s["tokens_per_step_by_request"][0] > 1.0
+    assert s["tokens_per_step"] > 1.0
+    assert s["tokens_generated"] == 15
+
+
+def test_spec_draft_vocab_mismatch_fails_fast(fp_setup):
+    """An independent draft with a different vocab can't feed the
+    elementwise accept rule — rejected at engine construction, not as
+    an opaque broadcast error inside the jitted cycle."""
+    from repro.serve import ModelDraft
+
+    cfg, m, params = fp_setup
+    cfg2 = dataclasses.replace(cfg, vocab_size=cfg.vocab_size // 2)
+    dm = build_model(cfg2)
+    draft = ModelDraft(model=dm, params=dm.init(jax.random.PRNGKey(1)))
+    with pytest.raises(ValueError, match="vocab_size"):
+        ServeEngine(m, params, n_slots=2, max_len=32,
+                    spec=SpecConfig(k=2, draft=draft))
+
+
+def test_draft_share_counts_only_emitted_tokens(fp_setup):
+    """Budget-truncated bursts accept more drafts than they emit:
+    draft_share must count the emitted subset (bounded by 1), while
+    accept_rate keeps measuring raw draft quality."""
+    cfg, m, params = fp_setup
+    draft = self_int8_draft(m, params)
+    eng = ServeEngine(m, params, n_slots=2, max_len=64,
+                      spec=SpecConfig(k=3, draft=draft))
+    # budget 2: one token at prefill + a burst that emits exactly one
+    reqs = [Request(rid=i, prompt=np.arange(5 + i) % cfg.vocab_size,
+                    max_new_tokens=2) for i in range(4)]
+    eng.serve(reqs)
+    mm = eng.metrics()
+    assert 0.0 <= mm["draft_share"] <= 1.0
+    assert mm["emitted_draft_tokens"] <= mm["accepted_tokens"]
+    assert mm["tokens_generated"] == 8
+
+
+def test_scheduler_summary_is_per_run(fp_setup):
+    """A reused Scheduler reports each run's own digest, not the
+    engine-lifetime cumulative counters."""
+    cfg, m, params = fp_setup
+    eng = ServeEngine(m, params, n_slots=2, max_len=64)
+    sched = Scheduler(eng)
+    prompt = np.arange(5) % cfg.vocab_size
+    sched.submit(Request(rid=0, prompt=prompt, max_new_tokens=4))
+    sched.submit(Request(rid=1, prompt=prompt, max_new_tokens=4))
+    first = sched.run().summary
+    sched.submit(Request(rid=2, prompt=prompt, max_new_tokens=3))
+    second = sched.run().summary
+    assert first["requests"] == 2 and first["completed"] == 2
+    assert first["tokens_generated"] == 8
+    assert second["requests"] == 1 and second["completed"] == 1
+    assert second["tokens_generated"] == 3
+    assert set(second["tokens_per_step_by_request"]) == {2}
+
+
+def test_independent_draft_kv_tracks_through_fill_fallback(fp_setup):
+    """Plain-decode fallback iterations (paged prefix-hit slots
+    teacher-forcing their prompt tail) must advance the independent
+    draft's KV too — otherwise later cycles attend permanent holes and
+    acceptance silently collapses.  The draft here *is* the target
+    (same arch, same seed), so acceptance stays ~1 iff tracking works."""
+    cfg, m, params = fp_setup
+    draft = registry_draft("llama3-8b", seed=0)   # identical weights
+    rng = np.random.default_rng(8)
+    sys_prompt = rng.integers(0, cfg.vocab_size, size=16)
+    reqs = [Request(rid=i,
+                    prompt=np.concatenate(
+                        [sys_prompt,
+                         rng.integers(0, cfg.vocab_size, size=4 + 3 * i)]),
+                    max_new_tokens=9)
+            for i in range(3)]
+    plain = ServeEngine(m, params, n_slots=2, max_len=64, paged=True,
+                        page_size=8)
+    spec = ServeEngine(m, params, n_slots=2, max_len=64, paged=True,
+                       page_size=8, spec=SpecConfig(k=3, draft=draft))
+    res_p = plain.serve(_clone(reqs))
+    res_s = spec.serve(_clone(reqs))
+    for r in reqs:
+        np.testing.assert_array_equal(res_p[r.rid], res_s[r.rid])
+    mm = spec.metrics()
+    assert mm["prefix_hits"] >= 1           # the fill path really ran
+    assert mm["accept_rate"] > 0.9
+
+
+# -- sampler units ------------------------------------------------------------
+
+def test_sampler_top_p_restricts_support():
+    key = jax.random.PRNGKey(0)
+    logits = jnp.log(jnp.asarray([[0.5, 0.3, 0.15, 0.05],
+                                  [0.4, 0.3, 0.2, 0.1]], jnp.float32))
+    temps = jnp.ones(2)
+    tk = jnp.zeros(2, jnp.int32)
+    # top_p just over the head mass: only tokens inside the nucleus draw
+    tp = jnp.asarray([0.6, 0.65])
+    for i in range(30):
+        out = sample_tokens(logits, temps, tk,
+                            jax.random.fold_in(key, i), tp)
+        assert int(out[0]) in (0, 1)        # 0.5 + 0.3 covers 0.6
+        assert int(out[1]) in (0, 1)        # 0.4 + 0.3 covers 0.65
+    # top_p <= 0 and >= 1 disable the mask; tiny top_p degenerates to
+    # greedy (the top-1 token always survives)
+    out = sample_tokens(logits, temps, tk, key, jnp.asarray([0.0, 1.0]))
+    assert out.shape == (2,)
+    for i in range(10):
+        out = sample_tokens(logits, temps, tk, jax.random.fold_in(key, i),
+                            jnp.full(2, 1e-6))
+        np.testing.assert_array_equal(np.asarray(out), [0, 0])
+    # greedy rows ignore top_p entirely
+    out = sample_tokens(logits, jnp.zeros(2), tk, key, jnp.full(2, 0.3))
+    np.testing.assert_array_equal(np.asarray(out), [0, 0])
+
+
+def test_policy_probs_greedy_is_onehot_and_matches_sampler():
+    logits = jnp.asarray([[0.1, 3.0, 1.0, -1e30],
+                          [2.0, 0.5, 1.5, -1e30]], jnp.float32)
+    p = policy_probs(logits, jnp.zeros(2))
+    np.testing.assert_array_equal(np.asarray(p),
+                                  [[0, 1, 0, 0], [1, 0, 0, 0]])
+    # sampling rows: a proper distribution over the unmasked support
+    p = policy_probs(logits, jnp.ones(2), jnp.full(2, 2, jnp.int32),
+                     jnp.zeros(2))
+    np.testing.assert_allclose(np.asarray(p.sum(-1)), [1.0, 1.0],
+                               rtol=1e-5)
+    assert float(p[0, 0]) == 0.0 and float(p[0, 3]) == 0.0  # top-k=2
+
+
+def test_spec_accept_greedy_semantics():
+    """Greedy accept: leading draft tokens equal to the target argmax
+    are kept, the first mismatch emits the target argmax, full
+    acceptance emits the bonus argmax."""
+    v = 8
+    temps = jnp.zeros(1)
+    key = jax.random.PRNGKey(0)
+
+    def target(*ids):                       # (1, K+1, V) argmax at ids
+        return jnp.stack([jax.nn.one_hot(i, v) * 5.0 for i in ids])[None]
+
+    onehot = lambda i: jax.nn.one_hot(jnp.asarray([i]), v)
+    # draft proposes [3, 4]; target argmaxes [3, 4, 6] -> all accepted
+    out, n = spec_accept(jnp.asarray([[3, 4]]),
+                         jnp.stack([onehot(3), onehot(4)], 1),
+                         target(3, 4, 6), temps, None, None, key)
+    assert int(n[0]) == 2
+    np.testing.assert_array_equal(np.asarray(out[0]), [3, 4, 6])
+    # draft proposes [3, 4]; target argmaxes [5, ...] -> reject first,
+    # emit target argmax 5
+    out, n = spec_accept(jnp.asarray([[3, 4]]),
+                         jnp.stack([onehot(3), onehot(4)], 1),
+                         target(5, 1, 2), temps, None, None, key)
+    assert int(n[0]) == 0
+    assert int(out[0, 0]) == 5
+
+
+def test_spec_accept_leftover_distribution_statistics():
+    """Sampled rows follow the leftover rule: q puts {0.5, 0.5} on
+    tokens {0, 1}, p puts {0.25, 0.75} on tokens {1, 2}.  A draw of 0
+    always rejects (p(0)=0) and must resample from
+    norm(max(p-q, 0)) = one-hot(2); a draw of 1 accepts with
+    probability p(1)/q(1) = 0.5, else also resamples to 2."""
+    q = jnp.asarray([[0.5, 0.5, 0.0, 0.0]])
+    p_logits = jnp.log(jnp.asarray([[1e-9, 0.25, 0.75, 1e-9]]))[None]
+    temps = jnp.ones(1)
+    seen = set()
+    for i in range(60):
+        key = jax.random.PRNGKey(i)
+        for d in (0, 1):
+            out, n = spec_accept(
+                jnp.asarray([[d]]), q[:, None],
+                jnp.concatenate([p_logits, p_logits], 1),
+                temps, None, None, key)
+            tok = int(out[0, 0])
+            if d == 0:
+                # residual = norm(max(p - q, 0)): token 1's mass is
+                # fully covered by q, so the resample is always 2
+                assert int(n[0]) == 0 and tok == 2
+            else:
+                seen.add((int(n[0]), tok))
+    # d=1: accepted about half the time (keeps 1), else resampled to 2
+    assert (1, 1) in seen and (0, 2) in seen
+    assert all(s in ((1, 1), (0, 2)) for s in seen)
+
+
+def test_truncate_slot_rolls_back_len_only(fp_setup):
+    cfg, m, _ = fp_setup
+    cache = m.init_cache(2, 16)
+    cache = dict(cache, len=jnp.asarray([9, 12], jnp.int32),
+                 k=jnp.ones_like(cache["k"]))
+    out = jax.jit(truncate_slot)(cache, jnp.asarray([7, 12], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(out["len"]), [7, 12])
+    assert bool(jnp.all(out["k"] == 1))     # data untouched, only len
+
+
+# -- paged specifics ----------------------------------------------------------
+
+def test_spec_paged_prefix_sharing_and_rollback(fp_setup):
+    """Shared-prefix paged workload under speculation: prefix-hit slots
+    teacher-force their tail through plain decode (spec pauses while a
+    slot fills), bursts trim rejected-suffix pages refcount-safely, and
+    outputs match the non-speculative paged engine token-for-token."""
+    cfg, m, params = fp_setup
+    draft = self_int8_draft(m, params)
+    rng = np.random.default_rng(5)
+    sys_prompt = rng.integers(0, cfg.vocab_size, size=16)
+    reqs = [Request(rid=i,
+                    prompt=np.concatenate(
+                        [sys_prompt,
+                         rng.integers(0, cfg.vocab_size, size=3 + 5 * i)]),
+                    max_new_tokens=6)
+            for i in range(4)]
+    plain = ServeEngine(m, params, n_slots=2, max_len=64, paged=True,
+                        page_size=8)
+    spec = ServeEngine(m, params, n_slots=2, max_len=64, paged=True,
+                       page_size=8, spec=SpecConfig(k=3, draft=draft))
+    res_p = plain.serve(_clone(reqs))
+    res_s = spec.serve(_clone(reqs))
+    for r in reqs:
+        np.testing.assert_array_equal(res_p[r.rid], res_s[r.rid])
+    mm = spec.metrics()
+    assert mm["prefix_hits"] >= 1           # sharing still engages
+    # every page ref released on retirement (only index-held refs stay)
+    pool = spec.pool
+    for p in range(1, pool.n_pages):
+        assert pool.ref[p] in (0, 1)
+
+
+def test_spec_serve_interpret_smoke(monkeypatch):
+    """Spec serving forced onto the Pallas kernel path (interpret):
+    the verify span unrolls per-position flash-decode kernel calls and
+    must still match non-speculative serving exactly."""
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")
+    cfg = ARCHS["llama3-8b"].tiny()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    draft = self_int8_draft(m, params)
+    plain = ServeEngine(m, params, n_slots=2, max_len=32)
+    spec = ServeEngine(m, params, n_slots=2, max_len=32,
+                       spec=SpecConfig(k=2, draft=draft))
+    reqs = _mixed_requests(cfg, 3, seed=6, max_new=(2, 5))
+    res_p = plain.serve(_clone(reqs))
+    res_s = spec.serve(_clone(reqs))
+    for r in reqs:
+        np.testing.assert_array_equal(res_p[r.rid], res_s[r.rid])
