@@ -163,7 +163,8 @@ def _quantized_setup(full=False):
 CSV_HEADER = ("timestamp,requests,new_tokens,n_slots,max_len,"
               "legacy_tok_s,bucketed_tok_s,speedup,prefill_traces,"
               "paged_tok_s,dense_cache_bytes,paged_peak_bytes,"
-              "spec_tok_s,spec_speedup,accept_rate,tokens_per_step")
+              "spec_tok_s,spec_speedup,accept_rate,tokens_per_step,"
+              "mesh,sharded_tok_s,per_device_cache_bytes")
 
 
 def _append_row(values: dict):
@@ -357,6 +358,120 @@ def bench_spec(emit=print, *, requests=16, new_tokens=32, n_slots=4,
     return tps_n, tps_s, m["accept_rate"], m["tokens_per_step"]
 
 
+# Runs in a subprocess because the virtual device count must be set
+# before jax initializes; workload knobs arrive via BENCH_* env vars.
+_SHARDED_CODE = """
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+import json, time
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.configs import ARCHS
+from repro.core import QuantSpec, quantize_model, run_calibration
+from repro.launch.mesh import make_local_mesh
+from repro.models.registry import build_model
+from repro.serve import Request, ServeEngine
+
+data_ax, model_ax = (int(x) for x in os.environ["BENCH_MESH"].split(","))
+n_req = int(os.environ["BENCH_REQUESTS"])
+new_tokens = int(os.environ["BENCH_NEW_TOKENS"])
+n_slots = int(os.environ["BENCH_N_SLOTS"])
+max_len = int(os.environ["BENCH_MAX_LEN"])
+
+cfg = ARCHS["llama3-8b"].tiny()
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+calib = [{"tokens": jax.random.randint(jax.random.PRNGKey(i), (2, 32), 0,
+                                       cfg.vocab_size)} for i in range(2)]
+stats = run_calibration(model.forward, params, calib)
+qp, _ = quantize_model(params, model.quant_site_map(), stats, method="faq",
+                       spec=QuantSpec(bits=4, group_size=64), mode="packed")
+
+mesh = None if data_ax * model_ax == 1 else make_local_mesh(data_ax, model_ax)
+eng = ServeEngine(model, qp, n_slots=n_slots, max_len=max_len, mesh=mesh)
+
+def reqs(seed):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size,
+                                               size=int(rng.integers(4, 32))),
+                    max_new_tokens=new_tokens) for i in range(n_req)]
+
+eng.serve(reqs(1))                    # warm: compiles out of the timing
+t0 = time.time()
+res = eng.serve(reqs(0))
+dt = time.time() - t0
+tok = sum(len(v) for v in res.values())
+
+# per-device footprint of the placed dense cache: the largest shard any
+# one device holds, summed over leaves (head-sharding should divide the
+# KV leaves by the model-axis size)
+cache = eng._place(model.init_cache(n_slots, max_len), eng._cache_axes)
+per_dev = sum(max(s.data.nbytes for s in leaf.addressable_shards)
+              for leaf in jax.tree_util.tree_leaves(cache))
+total = sum(leaf.nbytes for leaf in jax.tree_util.tree_leaves(cache))
+print(json.dumps({"mesh": [data_ax, model_ax], "tok_s": tok / dt,
+                  "per_device_cache_bytes": int(per_dev),
+                  "total_cache_bytes": int(total),
+                  "outputs": {int(k): v.tolist() for k, v in res.items()}}))
+"""
+
+
+def bench_sharded(emit=print, *, requests=8, new_tokens=8, n_slots=4,
+                  max_len=64, shapes=((1, 1), (1, 2), (1, 4)), record=True):
+    """Tensor-parallel serving at several mesh shapes on 8 virtual CPU
+    devices (DESIGN.md §13): tok/s and the per-device peak dense-cache
+    bytes (head-sharded KV leaves shrink with the model-axis size).
+    Each shape runs in its own subprocess — the device count must be
+    fixed before jax initializes — and greedy outputs are asserted
+    identical across shapes.  Virtual CPU tok/s measures dispatch
+    overhead, not accelerator scaling; the per-device bytes column is
+    the provisioning signal.
+
+    Returns {"DxM": {"tok_s": ..., "per_device_cache_bytes": ...}}.
+    """
+    import json
+    import subprocess
+    import sys
+
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    results = {}
+    for data_ax, model_ax in shapes:
+        env = dict(os.environ, JAX_PLATFORMS="cpu",
+                   XLA_FLAGS="--xla_force_host_platform_device_count=8",
+                   PYTHONPATH=src + os.pathsep + os.environ.get("PYTHONPATH",
+                                                                ""),
+                   BENCH_MESH=f"{data_ax},{model_ax}",
+                   BENCH_REQUESTS=str(requests),
+                   BENCH_NEW_TOKENS=str(new_tokens),
+                   BENCH_N_SLOTS=str(n_slots),
+                   BENCH_MAX_LEN=str(max_len))
+        out = subprocess.run([sys.executable, "-c", _SHARDED_CODE], env=env,
+                             capture_output=True, text=True, timeout=900)
+        if out.returncode != 0:
+            raise RuntimeError(f"sharded bench {data_ax}x{model_ax} failed:"
+                               f"\n{out.stderr[-2000:]}")
+        r = json.loads(out.stdout.splitlines()[-1])
+        key = f"{data_ax}x{model_ax}"
+        emit(f"serve/sharded_{key}_tok_s,,{r['tok_s']:.2f}")
+        emit(f"serve/sharded_{key}_device_cache_bytes,,"
+             f"{r['per_device_cache_bytes']}")
+        first = next(iter(results.values()), None)
+        if first is not None:   # greedy identity across mesh shapes
+            assert r["outputs"] == first["outputs"], f"{key} diverged"
+        results[key] = r
+        if record:
+            _append_row(dict(timestamp=int(time.time()), requests=requests,
+                             new_tokens=new_tokens, n_slots=n_slots,
+                             max_len=max_len, mesh=key,
+                             sharded_tok_s=f"{r['tok_s']:.2f}",
+                             per_device_cache_bytes=r[
+                                 "per_device_cache_bytes"]))
+    return {k: {"tok_s": round(v["tok_s"], 2),
+                "per_device_cache_bytes": v["per_device_cache_bytes"],
+                "total_cache_bytes": v["total_cache_bytes"]}
+            for k, v in results.items()}
+
+
 def _write_json(summary: dict):
     """BENCH trajectory snapshot at the repo root (like
     BENCH_decode.json): tok/s and peak cache bytes per serving mode."""
@@ -385,6 +500,7 @@ def _bench_all(emit, *, requests=16, new_tokens=16, n_slots=4, max_len=128,
                                            new_tokens=spec_new_tokens,
                                            n_slots=n_slots, max_len=max_len,
                                            k=spec_k, record=record)
+    sharded = bench_sharded(emit, record=record)
     summary = {
         "timestamp": int(time.time()),
         "workload": {"requests": requests, "new_tokens": new_tokens,
@@ -399,6 +515,7 @@ def _bench_all(emit, *, requests=16, new_tokens=16, n_slots=4, max_len=128,
                  "new_tokens": spec_new_tokens,
                  "draft": "self-int8", "accept_rate": round(acc, 3),
                  "tokens_per_step": round(tpstep, 2)},
+        "sharded": sharded,
     }
     if write_json:
         _write_json(summary)
@@ -442,6 +559,9 @@ def main():
           f"{sp['nonspec_tok_s']:.1f} non-spec "
           f"({sp['speedup_vs_nonspec']:.2f}x, accept {sp['accept_rate']:.2f},"
           f" {sp['tokens_per_step']:.2f} tok/step)")
+    for mesh, r in s["sharded"].items():
+        print(f"sharded {mesh}: {r['tok_s']:.1f} tok/s, "
+              f"{r['per_device_cache_bytes']/1e6:.2f} MB cache/device")
 
 
 if __name__ == "__main__":

@@ -24,6 +24,7 @@ virtual CPU devices, or a single CPU without edits.
 from __future__ import annotations
 
 import contextlib
+import logging
 import threading
 from typing import Optional, Sequence
 
@@ -31,6 +32,8 @@ import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from . import _tree
+
+logger = logging.getLogger(__name__)
 
 # ---------------------------------------------------------------------------
 # Rule tables
@@ -48,6 +51,7 @@ DEFAULT_RULES = {
     "ff":       "model",
     "vocab":    "model",
     "expert":   "model",
+    "experts":  "model",     # stacked expert dim in MoE param trees
     "fsdp":     ("pod", "data"),
     # QuantizedTensor children (non-None here = packed-domain constraint
     # in kernels/ops.py stays OFF; see SERVE_DECODE_RULES)
@@ -109,6 +113,29 @@ def active_rule(name: str):
     return active_rules().get(name)
 
 
+@contextlib.contextmanager
+def row_parallel():
+    """Mark a region whose quantized matmuls are *row-parallel* (weight
+    sharded on the input dim, e.g. attention ``wo`` / MLP ``w_down``).
+
+    Under :data:`SERVE_DECODE_RULES` the ``qin: None`` rule arms the
+    packed-domain transfer constraint in :func:`repro.kernels.ops
+    .quant_matmul`, which forces a *column* layout ``P(None, "model")``
+    on every 2-D codes tensor.  For row-parallel sites that layout
+    contradicts the placement chosen from ``param_axes()`` and would
+    insert a per-layer weight reshard.  Re-binding ``qin`` to ``model``
+    inside this context disarms the branch (the rule is no longer None)
+    and matches the actual row layout.  No-op without an active mesh or
+    when ``qin`` is already bound.
+    """
+    mesh = active_mesh()
+    if mesh is None or active_rule("qin") is not None:
+        yield
+        return
+    with axis_rules(mesh, dict(active_rules(), qin="model")):
+        yield
+
+
 # ---------------------------------------------------------------------------
 # Logical axes -> PartitionSpec
 # ---------------------------------------------------------------------------
@@ -117,6 +144,26 @@ def _mesh_axis_sizes(mesh) -> dict:
     # jax.sharding.Mesh.shape is an OrderedDict {axis: size}; tests use a
     # duck-typed stand-in with a plain dict.
     return dict(mesh.shape)
+
+
+# Divisibility fallbacks already warned about, keyed on
+# (axes, shape, dim, dropped mesh axes) — silent replication during serve
+# should show up in logs exactly once per distinct site.
+_WARNED_DROPS: set = set()
+
+
+def _warn_dropped(axes, shape, dim, name, cand, total):
+    if shape[dim] == 1:
+        return  # replicating a singleton dim loses nothing
+    key = (tuple(axes), tuple(shape), dim, cand)
+    if key in _WARNED_DROPS:
+        return
+    _WARNED_DROPS.add(key)
+    logger.warning(
+        "logical_to_spec: replicating dim %d (logical %r, size %d) of "
+        "shape %s — mesh axes %s have total size %d which does not divide "
+        "it; tensor stays correct but this site is NOT sharded",
+        dim, name, shape[dim], tuple(shape), cand, total)
 
 
 def logical_to_spec(axes: Sequence[Optional[str]], *, shape: Sequence[int],
@@ -149,6 +196,7 @@ def logical_to_spec(axes: Sequence[Optional[str]], *, shape: Sequence[int],
         for a in cand:
             total *= sizes[a]
         if shape[dim] % total != 0:
+            _warn_dropped(axes, shape, dim, name, cand, total)
             entries.append(None)
             continue
         used.update(cand)
@@ -197,3 +245,26 @@ def tree_shardings(mesh, specs, axes_tree, rules: Optional[dict] = None):
                                                    mesh=mesh, rules=rules))
 
     return jax.tree_util.tree_map_with_path(one, specs)
+
+
+def tree_hint(tree, axes_tree):
+    """:func:`shard_hint` over a whole pytree (inside jit): constrain every
+    leaf to the spec its ``axes_tree`` annotation resolves to under the
+    active mesh/rules.  Identity when no mesh is active.  Used to pin
+    cache pytrees to a stable layout across decode steps."""
+    mesh = active_mesh()
+    if mesh is None or not isinstance(mesh, jax.sharding.Mesh):
+        return tree
+
+    def one(path, leaf):
+        ax = _axes_at(axes_tree, path)
+        if ax is None:
+            spec = P()
+        else:
+            ax = list(ax)[:len(leaf.shape)]
+            ax += [None] * (len(leaf.shape) - len(ax))
+            spec = logical_to_spec(ax, shape=leaf.shape, mesh=mesh)
+        return jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map_with_path(one, tree)

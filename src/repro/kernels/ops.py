@@ -7,13 +7,17 @@ point.  ``REPRO_KERNEL_MODE`` overrides: "ref" | "interpret" | "tpu".
 """
 from __future__ import annotations
 
+import functools
 import os
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core.quantizer import QuantizedTensor
-from repro.dist.sharding import active_rule, shard_hint
+from repro.dist.sharding import (active_mesh, active_rule, logical_to_spec,
+                                 shard_hint)
 from . import ref as ref_ops
 from .flash_decode import (flash_decode_paged_pallas,
                            flash_decode_paged_q8_pallas,
@@ -110,12 +114,35 @@ def quant_matmul_experts(x: jax.Array, qt: QuantizedTensor) -> jax.Array:
 # Ref mode transposes into the jnp oracles (bit-identical to the
 # pre-kernel call sites); otherwise the split-KV flash-decode Pallas
 # kernels run (interpret off-TPU).
+#
+# When a real mesh with a non-trivial "model" axis is active and both
+# head counts divide it, the whole family runs under a head-axis
+# ``shard_map``: each device owns H/m query heads and KH/m KV heads, so
+# split-KV attention and the in-kernel page gather stay device-local and
+# the decode step needs no KV-cache collectives at all (attention is
+# exactly parallel over heads — per-head softmax, no cross-head math).
+# Otherwise (no mesh, model=1, or non-dividing head counts) the local
+# body runs directly and GSPMD handles whatever layout it was given.
 # ---------------------------------------------------------------------------
 
-def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
-                     cache_len: jax.Array, *, window=None) -> jax.Array:
-    """Single-position attention against a (possibly longer) cache."""
-    mode = _mode()
+def _tp_mesh(n_q_heads: int, n_kv_heads: int):
+    """The active mesh iff head-axis shard_map is applicable, else None."""
+    mesh = active_mesh()
+    if not isinstance(mesh, jax.sharding.Mesh):
+        return None
+    m = dict(mesh.shape).get("model", 1)
+    if m <= 1 or n_q_heads % m or n_kv_heads % m:
+        return None
+    return mesh
+
+
+def _batch_entry(n: int, mesh):
+    """PartitionSpec entry for a batch dim of size ``n`` (None / "data" /
+    ("pod","data") ... depending on the mesh and divisibility)."""
+    return logical_to_spec(("batch",), shape=(n,), mesh=mesh)[0]
+
+
+def _decode_attention_local(q, k_cache, v_cache, cache_len, *, window, mode):
     if mode == "ref":
         return ref_ops.decode_attention_ref(
             q, k_cache.transpose(0, 2, 1, 3), v_cache.transpose(0, 2, 1, 3),
@@ -124,10 +151,8 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                                window=window, interpret=(mode != "tpu"))
 
 
-def decode_attention_q8(q, k_codes, k_scale, v_codes, v_scale, cache_len, *,
-                        window=None):
-    """int8-KV decode attention; scales stay folded in the consumer."""
-    mode = _mode()
+def _decode_attention_q8_local(q, k_codes, k_scale, v_codes, v_scale,
+                               cache_len, *, window, mode):
     if mode == "ref":
         return ref_ops.decode_attention_q8_ref(
             q, k_codes.transpose(0, 2, 1, 3), k_scale.transpose(0, 2, 1, 3),
@@ -138,10 +163,8 @@ def decode_attention_q8(q, k_codes, k_scale, v_codes, v_scale, cache_len, *,
                                   interpret=(mode != "tpu"))
 
 
-def paged_decode_attention(q, k_store, v_store, page_table, cache_len, *,
-                           window=None):
-    """Decode attention against the shared page store via the table."""
-    mode = _mode()
+def _paged_decode_attention_local(q, k_store, v_store, page_table, cache_len,
+                                  *, window, mode):
     if mode == "ref":
         return ref_ops.paged_decode_attention_ref(
             q, k_store, v_store, page_table, cache_len, window=window)
@@ -150,10 +173,8 @@ def paged_decode_attention(q, k_store, v_store, page_table, cache_len, *,
                                      interpret=(mode != "tpu"))
 
 
-def paged_decode_attention_q8(q, k_codes, k_scale, v_codes, v_scale,
-                              page_table, cache_len, *, window=None):
-    """Paged int8-KV decode attention (scales paged alongside codes)."""
-    mode = _mode()
+def _paged_decode_attention_q8_local(q, k_codes, k_scale, v_codes, v_scale,
+                                     page_table, cache_len, *, window, mode):
     if mode == "ref":
         return ref_ops.paged_decode_attention_q8_ref(
             q, k_codes, k_scale, v_codes, v_scale, page_table, cache_len,
@@ -162,6 +183,76 @@ def paged_decode_attention_q8(q, k_codes, k_scale, v_codes, v_scale,
                                         v_scale, page_table, cache_len,
                                         window=window,
                                         interpret=(mode != "tpu"))
+
+
+def _dense_shard_map(body, mesh, q, n_kv: int):
+    """Head-axis shard_map wrapper for dense-cache entries: q and the
+    output shard heads (dim 2), every (B, KH, S, hd)-shaped cache operand
+    shards KV heads (dim 1), lengths shard batch."""
+    b = _batch_entry(q.shape[0], mesh)
+    qspec = P(b, None, "model", None)
+    kvspec = P(b, "model", None, None)
+    n_caches = n_kv  # cache-layout operands between q and cache_len
+    in_specs = (qspec,) + (kvspec,) * n_caches + (P(b),)
+    return shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=qspec,
+                     check_rep=False)
+
+
+def _paged_shard_map(body, mesh, q, n_stores: int):
+    """Head-axis shard_map wrapper for paged entries: page stores
+    (P, KH, ps, hd) shard KV heads (dim 1) with the page dim replicated;
+    page tables replicate across "model" (each device gathers its own
+    head slice through the same table)."""
+    b = _batch_entry(q.shape[0], mesh)
+    qspec = P(b, None, "model", None)
+    store = P(None, "model", None, None)
+    in_specs = (qspec,) + (store,) * n_stores + (P(b, None), P(b))
+    return shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=qspec,
+                     check_rep=False)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array, *, window=None) -> jax.Array:
+    """Single-position attention against a (possibly longer) cache."""
+    body = functools.partial(_decode_attention_local, window=window,
+                             mode=_mode())
+    mesh = _tp_mesh(q.shape[2], k_cache.shape[1])
+    if mesh is not None:
+        body = _dense_shard_map(body, mesh, q, 2)
+    return body(q, k_cache, v_cache, cache_len)
+
+
+def decode_attention_q8(q, k_codes, k_scale, v_codes, v_scale, cache_len, *,
+                        window=None):
+    """int8-KV decode attention; scales stay folded in the consumer."""
+    body = functools.partial(_decode_attention_q8_local, window=window,
+                             mode=_mode())
+    mesh = _tp_mesh(q.shape[2], k_codes.shape[1])
+    if mesh is not None:
+        body = _dense_shard_map(body, mesh, q, 4)
+    return body(q, k_codes, k_scale, v_codes, v_scale, cache_len)
+
+
+def paged_decode_attention(q, k_store, v_store, page_table, cache_len, *,
+                           window=None):
+    """Decode attention against the shared page store via the table."""
+    body = functools.partial(_paged_decode_attention_local, window=window,
+                             mode=_mode())
+    mesh = _tp_mesh(q.shape[2], k_store.shape[1])
+    if mesh is not None:
+        body = _paged_shard_map(body, mesh, q, 2)
+    return body(q, k_store, v_store, page_table, cache_len)
+
+
+def paged_decode_attention_q8(q, k_codes, k_scale, v_codes, v_scale,
+                              page_table, cache_len, *, window=None):
+    """Paged int8-KV decode attention (scales paged alongside codes)."""
+    body = functools.partial(_paged_decode_attention_q8_local, window=window,
+                             mode=_mode())
+    mesh = _tp_mesh(q.shape[2], k_codes.shape[1])
+    if mesh is not None:
+        body = _paged_shard_map(body, mesh, q, 4)
+    return body(q, k_codes, k_scale, v_codes, v_scale, page_table, cache_len)
 
 
 # ---------------------------------------------------------------------------
@@ -178,57 +269,101 @@ def paged_decode_attention_q8(q, k_codes, k_scale, v_codes, v_scale,
 # the engine's jitted cycle.
 # ---------------------------------------------------------------------------
 
+def _verify_attention_local(q, k_cache, v_cache, base_len, *, window, mode):
+    if mode == "ref":
+        return ref_ops.verify_attention_ref(
+            q, k_cache.transpose(0, 2, 1, 3), v_cache.transpose(0, 2, 1, 3),
+            base_len, window=window)
+    outs = [_decode_attention_local(q[:, i:i + 1], k_cache, v_cache,
+                                    base_len + i + 1, window=window,
+                                    mode=mode)
+            for i in range(q.shape[1])]
+    return jnp.concatenate(outs, axis=1)
+
+
+def _verify_attention_q8_local(q, k_codes, k_scale, v_codes, v_scale,
+                               base_len, *, window, mode):
+    if mode == "ref":
+        return ref_ops.verify_attention_q8_ref(
+            q, k_codes.transpose(0, 2, 1, 3), k_scale.transpose(0, 2, 1, 3),
+            v_codes.transpose(0, 2, 1, 3), v_scale.transpose(0, 2, 1, 3),
+            base_len, window=window)
+    outs = [_decode_attention_q8_local(q[:, i:i + 1], k_codes, k_scale,
+                                       v_codes, v_scale, base_len + i + 1,
+                                       window=window, mode=mode)
+            for i in range(q.shape[1])]
+    return jnp.concatenate(outs, axis=1)
+
+
+def _paged_verify_attention_local(q, k_store, v_store, page_table, base_len,
+                                  *, window, mode):
+    if mode == "ref":
+        return ref_ops.paged_verify_attention_ref(
+            q, k_store, v_store, page_table, base_len, window=window)
+    outs = [_paged_decode_attention_local(q[:, i:i + 1], k_store, v_store,
+                                          page_table, base_len + i + 1,
+                                          window=window, mode=mode)
+            for i in range(q.shape[1])]
+    return jnp.concatenate(outs, axis=1)
+
+
+def _paged_verify_attention_q8_local(q, k_codes, k_scale, v_codes, v_scale,
+                                     page_table, base_len, *, window, mode):
+    if mode == "ref":
+        return ref_ops.paged_verify_attention_q8_ref(
+            q, k_codes, k_scale, v_codes, v_scale, page_table, base_len,
+            window=window)
+    outs = [_paged_decode_attention_q8_local(q[:, i:i + 1], k_codes, k_scale,
+                                             v_codes, v_scale, page_table,
+                                             base_len + i + 1, window=window,
+                                             mode=mode)
+            for i in range(q.shape[1])]
+    return jnp.concatenate(outs, axis=1)
+
+
 def verify_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      base_len: jax.Array, *, window=None) -> jax.Array:
     """Multi-position decode attention: q (B, T, H, hd), dense caches in
     native (B, KH, S, hd) layout, base_len (B,) valid entries *before*
     the burst (the T fresh K/V entries are already written)."""
-    if _mode() == "ref":
-        return ref_ops.verify_attention_ref(
-            q, k_cache.transpose(0, 2, 1, 3), v_cache.transpose(0, 2, 1, 3),
-            base_len, window=window)
-    outs = [decode_attention(q[:, i:i + 1], k_cache, v_cache,
-                             base_len + i + 1, window=window)
-            for i in range(q.shape[1])]
-    return jnp.concatenate(outs, axis=1)
+    body = functools.partial(_verify_attention_local, window=window,
+                             mode=_mode())
+    mesh = _tp_mesh(q.shape[2], k_cache.shape[1])
+    if mesh is not None:
+        # one shard_map around the whole burst — kernel modes unroll the
+        # per-position loop *inside* it, never nesting shard_maps
+        body = _dense_shard_map(body, mesh, q, 2)
+    return body(q, k_cache, v_cache, base_len)
 
 
 def verify_attention_q8(q, k_codes, k_scale, v_codes, v_scale, base_len, *,
                         window=None):
     """int8-KV variant of :func:`verify_attention`."""
-    if _mode() == "ref":
-        return ref_ops.verify_attention_q8_ref(
-            q, k_codes.transpose(0, 2, 1, 3), k_scale.transpose(0, 2, 1, 3),
-            v_codes.transpose(0, 2, 1, 3), v_scale.transpose(0, 2, 1, 3),
-            base_len, window=window)
-    outs = [decode_attention_q8(q[:, i:i + 1], k_codes, k_scale, v_codes,
-                                v_scale, base_len + i + 1, window=window)
-            for i in range(q.shape[1])]
-    return jnp.concatenate(outs, axis=1)
+    body = functools.partial(_verify_attention_q8_local, window=window,
+                             mode=_mode())
+    mesh = _tp_mesh(q.shape[2], k_codes.shape[1])
+    if mesh is not None:
+        body = _dense_shard_map(body, mesh, q, 4)
+    return body(q, k_codes, k_scale, v_codes, v_scale, base_len)
 
 
 def paged_verify_attention(q, k_store, v_store, page_table, base_len, *,
                            window=None):
     """:func:`verify_attention` against the shared page store."""
-    if _mode() == "ref":
-        return ref_ops.paged_verify_attention_ref(
-            q, k_store, v_store, page_table, base_len, window=window)
-    outs = [paged_decode_attention(q[:, i:i + 1], k_store, v_store,
-                                   page_table, base_len + i + 1,
-                                   window=window)
-            for i in range(q.shape[1])]
-    return jnp.concatenate(outs, axis=1)
+    body = functools.partial(_paged_verify_attention_local, window=window,
+                             mode=_mode())
+    mesh = _tp_mesh(q.shape[2], k_store.shape[1])
+    if mesh is not None:
+        body = _paged_shard_map(body, mesh, q, 2)
+    return body(q, k_store, v_store, page_table, base_len)
 
 
 def paged_verify_attention_q8(q, k_codes, k_scale, v_codes, v_scale,
                               page_table, base_len, *, window=None):
     """Paged int8-KV variant of :func:`verify_attention`."""
-    if _mode() == "ref":
-        return ref_ops.paged_verify_attention_q8_ref(
-            q, k_codes, k_scale, v_codes, v_scale, page_table, base_len,
-            window=window)
-    outs = [paged_decode_attention_q8(q[:, i:i + 1], k_codes, k_scale,
-                                      v_codes, v_scale, page_table,
-                                      base_len + i + 1, window=window)
-            for i in range(q.shape[1])]
-    return jnp.concatenate(outs, axis=1)
+    body = functools.partial(_paged_verify_attention_q8_local, window=window,
+                             mode=_mode())
+    mesh = _tp_mesh(q.shape[2], k_codes.shape[1])
+    if mesh is not None:
+        body = _paged_shard_map(body, mesh, q, 4)
+    return body(q, k_codes, k_scale, v_codes, v_scale, page_table, base_len)

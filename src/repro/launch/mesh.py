@@ -9,17 +9,30 @@ from __future__ import annotations
 import jax
 
 
+def _take_devices(shape, what: str):
+    n = 1
+    for s in shape:
+        n *= int(s)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise ValueError(
+            f"{what}: mesh shape {tuple(shape)} requires {n} devices but "
+            f"only {len(devices)} are available "
+            f"({devices[0].platform if devices else 'no'} backend). "
+            f"For CPU testing set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n} before "
+            f"the first jax import.")
+    return devices[:n]
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    import numpy as np
-    n = int(np.prod(shape))
-    devices = jax.devices()[:n]
+    devices = _take_devices(shape, "make_production_mesh")
     return jax.make_mesh(shape, axes, devices=devices)
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
-    """Small mesh over however many devices are actually present
-    (CPU tests of the sharded code paths)."""
-    devices = jax.devices()[:data * model]
+    """Small mesh over local devices (CPU tests of the sharded paths)."""
+    devices = _take_devices((data, model), "make_local_mesh")
     return jax.make_mesh((data, model), ("data", "model"), devices=devices)

@@ -3,6 +3,12 @@ FAQ-quantize to packed int4, and serve synthetic requests.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --tiny \
         --requests 4
+
+Tensor-parallel serving (DESIGN.md §13): ``--mesh DATA,MODEL`` builds a
+local device mesh and hands it to the engine — weights, KV caches, and
+the flash-decode dispatch all shard along the model axis.  For CPU
+smoke tests set ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+before launch so enough virtual devices exist.
 """
 from __future__ import annotations
 
@@ -17,10 +23,27 @@ from repro.configs import ARCHS
 from repro.core import QuantSpec, quantize_model, run_calibration
 from repro.data.synthetic import DataConfig, SyntheticLM, calibration_batches
 from repro.dist import checkpoint as ckpt
+from repro.launch.mesh import make_local_mesh
 from repro.models.registry import build_model
 from repro.serve.draft import registry_draft, self_int8_draft
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.spec import SpecConfig
+
+
+def parse_mesh(arg):
+    """'DATA,MODEL' -> (data, model), with clear errors for bad input."""
+    if arg is None:
+        return None
+    try:
+        data, model = (int(x) for x in arg.split(","))
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"--mesh expects 'DATA,MODEL' (two comma-separated ints), "
+            f"got {arg!r}")
+    if data < 1 or model < 1:
+        raise argparse.ArgumentTypeError(
+            f"--mesh sizes must be >= 1, got {arg!r}")
+    return data, model
 
 
 def main():
@@ -59,7 +82,19 @@ def main():
                          "int8 self-draft sharing the target's KV) or a "
                          "registry config name for an independent draft "
                          "model")
+    ap.add_argument("--mesh", type=parse_mesh, default=None,
+                    metavar="DATA,MODEL",
+                    help="serve tensor-parallel on a (data, model) device "
+                         "mesh, e.g. --mesh 1,4 (requires data*model "
+                         "devices; DESIGN.md §13)")
     args = ap.parse_args()
+
+    mesh = None
+    if args.mesh is not None:
+        mesh = make_local_mesh(*args.mesh)
+        print(f"mesh: data={args.mesh[0]} model={args.mesh[1]} over "
+              f"{len(mesh.devices.flat)} {mesh.devices.flat[0].platform} "
+              f"devices")
 
     cfg = ARCHS[args.arch].tiny() if args.tiny else ARCHS[args.arch]
     model = build_model(cfg)
@@ -93,7 +128,7 @@ def main():
                       n_slots=min(args.n_slots, args.requests),
                       max_len=args.max_len, paged=args.paged,
                       page_size=args.page_size, n_pages=args.n_pages,
-                      spec=spec_cfg)
+                      spec=spec_cfg, mesh=mesh)
     if args.paged and not eng.paged:
         print("note: model cache layout does not support paging; "
               "serving from the dense cache")

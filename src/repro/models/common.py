@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quantizer import QuantizedTensor
-from repro.dist.sharding import shard_hint
+from repro.dist.sharding import row_parallel, shard_hint
 
 
 # ---------------------------------------------------------------------------
@@ -260,7 +260,8 @@ def swiglu(x: jax.Array, w_gate, w_up, w_down) -> jax.Array:
     u = qlinear(x, w_up)
     h = jax.nn.silu(g) * u
     h = shard_hint(h, "batch", "seq", "ff")
-    return qlinear(h, w_down)
+    with row_parallel():
+        return qlinear(h, w_down)
 
 
 # ---------------------------------------------------------------------------

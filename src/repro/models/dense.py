@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.stats import site_stat
-from repro.dist.sharding import shard_hint
+from repro.dist.sharding import row_parallel, shard_hint
 from repro.kernels.ops import (decode_attention, decode_attention_q8,
                                paged_decode_attention,
                                paged_decode_attention_q8,
@@ -166,7 +166,9 @@ class DenseLM:
                                                cache_len - t, window=window)
                 kv = (k_st, v_st)
             o = o.reshape(b, t, cfg.n_heads * hd)
-            return qlinear(o, p["wo"]), kv, o
+            with row_parallel():
+                out = qlinear(o, p["wo"])
+            return out, kv, o
         if cache is None:
             window = cfg.sliding_window or None
             o = chunked_attention(q, k, v, causal=True, window=window,
@@ -202,7 +204,9 @@ class DenseLM:
                                      window=window)
             k, v = k_cache, v_cache
         o = o.reshape(b, t, cfg.n_heads * hd)
-        return qlinear(o, p["wo"]), (k, v), o
+        with row_parallel():
+            out = qlinear(o, p["wo"])
+        return out, (k, v), o
 
     def _block(self, p, x, positions, collect, *, cache=None, cache_len=None,
                kv_lens=None, paged=None):
@@ -225,7 +229,8 @@ class DenseLM:
         hidden = shard_hint(hidden, "batch", "seq", "ff")
         if collect:
             stats["mlp_down"] = site_stat(hidden)
-        x = x + qlinear(hidden, p["w_down"])
+        with row_parallel():
+            x = x + qlinear(hidden, p["w_down"])
         x = shard_hint(x, "batch", "seq", "embed")
         return x, kv, stats
 
@@ -337,6 +342,7 @@ class DenseLM:
         positions = base[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
         positions = self._maybe_mrope(positions)
         x = embed_tokens(params["embed"], token).astype(self.dtype)
+        x = shard_hint(x, "batch", "seq", "embed")
 
         if self.cfg.kv_cache_bits == 8:
             def body8(x, xs):
@@ -392,6 +398,7 @@ class DenseLM:
         offsets = pos2d % ps
         paged = (page_table, page_ids, offsets)
         x = embed_tokens(params["embed"], token).astype(self.dtype)
+        x = shard_hint(x, "batch", "seq", "embed")
 
         if self.cfg.kv_cache_bits == 8:
             def body8(x, xs):
@@ -500,6 +507,16 @@ class DenseLM:
             return {"k": ax, "k_scale": ax, "v": ax, "v_scale": ax,
                     "len": None}
         return {"k": ax, "v": ax, "len": None}
+
+    def paged_cache_axes(self) -> dict:
+        """Logical axes for :meth:`init_paged_cache` leaves
+        (L, P, KH, ps, hd): pages replicated (any slot's table may point
+        anywhere), KV heads sharded on the model axis — the same head
+        split the dense cache and the attention shard_map use."""
+        ax = (None, None, "kv_heads", None, None)
+        if self.cfg.kv_cache_bits == 8:
+            return {"k": ax, "k_scale": ax, "v": ax, "v_scale": ax}
+        return {"k": ax, "v": ax}
 
     # -- helpers -----------------------------------------------------------
     def _maybe_mrope(self, positions):

@@ -30,7 +30,7 @@ from jax.experimental.shard_map import shard_map
 
 from repro.configs.base import ModelConfig
 from repro.core.stats import site_stat
-from repro.dist.sharding import active_mesh, shard_hint
+from repro.dist.sharding import active_mesh, row_parallel, shard_hint
 from .common import (layer_scan,
                      apply_rope, chunked_attention,
                      dense_init, embed_tokens, last_valid_hidden,
@@ -369,7 +369,8 @@ class MoELM(DenseLM):
             hidden = shard_hint(hidden, "batch", "seq", "ff")
             if collect:
                 stats["shared_down"] = site_stat(hidden)
-            y = y + qlinear(hidden, p["wd_sh"])
+            with row_parallel():
+                y = y + qlinear(hidden, p["wd_sh"])
         x = x + y
         x = shard_hint(x, "batch", "seq", "embed")
         return x, kv, stats, aux
@@ -434,6 +435,7 @@ class MoELM(DenseLM):
         new_len = base + t
         positions = base[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
         x = embed_tokens(params["embed"], token).astype(self.dtype)
+        x = shard_hint(x, "batch", "seq", "embed")
 
         def body(x, xs):
             p, kc, vc = xs

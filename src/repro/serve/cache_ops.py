@@ -11,6 +11,13 @@ They replace the old engine's ``_splice_cache``: a host-side
 one scatter per leaf from Python.  Here the whole tree update is a
 single jitted XLA program with the slot index traced, so admission costs
 one dispatch and never recompiles.
+
+Sharded serving (DESIGN.md §13): under a mesh the engine traces these
+ops with both sides of every copy laid out identically — dense caches
+and page stores are sharded on the KV-head axis, scratch prefill caches
+carry the same head split, and slot/page indices are replicated — so
+every update below is a device-local dynamic-slice on each shard and
+introduces no collectives.
 """
 from __future__ import annotations
 

@@ -29,8 +29,21 @@ import dataclasses
 from typing import Any, Optional
 
 
+class _Placeable:
+    """Sharded-serving hook shared by all draft sources: a tensor-parallel
+    engine re-places the draft's weights on its mesh with the *same*
+    logical-axis annotations as the resolved draft model, so draft burst
+    steps run under the identical TP layout (and collective pattern) as
+    the target's decode step."""
+
+    def place(self, place_fn, dmodel):
+        axes = (dmodel.param_axes()
+                if hasattr(dmodel, "param_axes") else None)
+        self.params = place_fn(self.params, axes)
+
+
 @dataclasses.dataclass
-class SelfDraft:
+class SelfDraft(_Placeable):
     """Self-draft: the target model running int8-FAQ'd target weights.
 
     ``model`` stays ``None`` — the runner resolves it to the engine's
@@ -44,7 +57,7 @@ class SelfDraft:
 
 
 @dataclasses.dataclass
-class ModelDraft:
+class ModelDraft(_Placeable):
     """Independent draft model with its own dense KV cache."""
     model: Any
     params: Any

@@ -55,6 +55,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dist.sharding import (SERVE_DECODE_RULES, SERVE_PREFILL_RULES,
+                                 axis_rules, shard_hint, tree_hint,
+                                 tree_shardings)
 from .buckets import bucket_for, default_buckets
 from .cache_ops import (copy_page, merge_slots, scatter_prefill_pages,
                         truncate_slot, write_slot)
@@ -108,9 +111,20 @@ class ServeEngine:
     def __init__(self, model, params, *, n_slots: int = 4,
                  max_len: int = 512, buckets=None, rng_seed: int = 0,
                  paged: bool = False, page_size: int = 16,
-                 n_pages: Optional[int] = None, spec=None):
+                 n_pages: Optional[int] = None, spec=None, mesh=None):
         self.model = model
-        self.params = params
+        self.mesh = mesh
+        # serve-time sharding (DESIGN.md §13): with a mesh, weights are
+        # laid out tensor-parallel once at admission-to-engine time —
+        # QuantizedTensor codes *and* scales split on the same logical
+        # axes — and every jitted entry point traces under its regime's
+        # rule table (prefill vs decode).  mesh=None is the single-device
+        # fast path: every placement/hint helper below degrades to
+        # identity and the engine behaves exactly as before.
+        self._cache_axes = (model.cache_axes()
+                            if hasattr(model, "cache_axes") else None)
+        self.params = self._place(params, model.param_axes()
+                                  if hasattr(model, "param_axes") else None)
         self.n_slots = n_slots
         self.max_len = max_len
         self.cfg = model.cfg
@@ -130,12 +144,19 @@ class ServeEngine:
         self._key = jax.random.PRNGKey(rng_seed)
         self._rng_step = 0
 
-        # jitted entry points (TraceCounter feeds metrics()["*_traces"])
-        self._prefill1 = TraceCounter(jax.jit(model.prefill))
-        self._prefill_admit = TraceCounter(jax.jit(self._prefill_admit_fn))
-        self._admit_one = TraceCounter(jax.jit(self._admit_one_fn))
-        self._decode = TraceCounter(jax.jit(self._decode_fn))
-        self._sample = jax.jit(sample_tokens)
+        # jitted entry points (TraceCounter feeds metrics()["*_traces"]).
+        # Each is pinned to one rule regime: the axis_rules context is
+        # (re-)entered around every call so the trace — whenever it
+        # happens — always sees the same table.
+        self._prefill1 = TraceCounter(
+            self._jit(model.prefill, SERVE_PREFILL_RULES))
+        self._prefill_admit = TraceCounter(
+            self._jit(self._prefill_admit_fn, SERVE_PREFILL_RULES))
+        self._admit_one = TraceCounter(
+            self._jit(self._admit_one_fn, SERVE_PREFILL_RULES))
+        self._decode = TraceCounter(
+            self._jit(self._decode_fn, SERVE_DECODE_RULES))
+        self._sample = self._jit(sample_tokens, SERVE_DECODE_RULES)
 
         if self.paged:
             self.page_size = page_size
@@ -146,13 +167,21 @@ class ServeEngine:
                             else 1 + n_slots * self.pages_per_slot)
             self.pool = PagePool(self.n_pages, page_size)
             # persistent across serve() calls so the prefix index keeps
-            # paying off between bursts
-            self._store = model.init_paged_cache(self.n_pages, page_size)
+            # paying off between bursts; with a mesh the page stores are
+            # sharded on the head axis (page tables stay replicated)
+            self._store_axes = (model.paged_cache_axes()
+                                if hasattr(model, "paged_cache_axes")
+                                else None)
+            self._store = self._place(
+                model.init_paged_cache(self.n_pages, page_size),
+                self._store_axes)
             self._prefill_paged = TraceCounter(
-                jax.jit(self._prefill_paged_fn))
-            self._decode_paged = TraceCounter(jax.jit(self._decode_paged_fn))
-            self._scatter_pages = jax.jit(scatter_prefill_pages)
-            self._copy_page = jax.jit(copy_page)
+                self._jit(self._prefill_paged_fn, SERVE_PREFILL_RULES))
+            self._decode_paged = TraceCounter(
+                self._jit(self._decode_paged_fn, SERVE_DECODE_RULES))
+            self._scatter_pages = self._jit(scatter_prefill_pages,
+                                            SERVE_DECODE_RULES)
+            self._copy_page = self._jit(copy_page, SERVE_DECODE_RULES)
 
         # speculative decoding (DESIGN.md §12): spec is a SpecConfig with
         # a draft source; models without the span-write decode path fall
@@ -162,13 +191,59 @@ class ServeEngine:
         if spec is not None and probe_spec is not None and probe_spec():
             from .spec import SpecRunner
             self._spec = SpecRunner(self, spec)
-            self._truncate = jax.jit(truncate_slot)
+            self._truncate = self._jit(truncate_slot, SERVE_DECODE_RULES)
 
         self._m = dict(tokens_generated=0, decode_steps=0, prefill_batches=0,
                        admitted=0, completed=0, expired=0, truncated=0,
                        prefix_hits=0, prefix_hit_tokens=0, fill_steps=0,
                        serve_time_s=0.0)
         self._req_stats: dict = {}   # rid -> dict(tokens=..., steps=...)
+
+    # -- mesh plumbing -------------------------------------------------------
+    def _jit(self, fn, rules):
+        """jit ``fn``; with a mesh, every call (so also the trace) runs
+        under ``axis_rules(mesh, rules)``.  The raw jitted callable stays
+        reachable as ``.jitted`` (lowering/compile introspection)."""
+        jf = jax.jit(fn)
+        if self.mesh is None:
+            return jf
+
+        def wrapped(*args):
+            with axis_rules(self.mesh, rules):
+                return jf(*args)
+
+        wrapped.jitted = jf
+        return wrapped
+
+    def _place(self, tree, axes_tree):
+        """Place a param/cache tree onto the mesh per its logical-axis
+        annotations (identity without a mesh or annotations)."""
+        if self.mesh is None or axes_tree is None or tree is None:
+            return tree
+        return jax.device_put(
+            tree, tree_shardings(self.mesh, tree, axes_tree,
+                                 rules=SERVE_DECODE_RULES))
+
+    def _hint_cache(self, cache):
+        """Pin a dense cache tree to its canonical layout inside a jitted
+        body — keeps the steady-state decode layout stable step to step."""
+        if self.mesh is None or self._cache_axes is None:
+            return cache
+        return tree_hint(cache, self._cache_axes)
+
+    def _hint_store(self, store):
+        if self.mesh is None or self._store_axes is None:
+            return store
+        return tree_hint(store, self._store_axes)
+
+    @staticmethod
+    def _gathered(step_logits):
+        """Replicate one step's (B, V) logits before sampling.  The
+        projection leaves them vocab-sharded (logits_from_hidden's hint);
+        this second constraint is the decode step's single all-gather —
+        argmax/sampling then runs replicated with no further collectives.
+        Identity without an active mesh."""
+        return shard_hint(step_logits, "batch", None)
 
     # -- jitted bodies -------------------------------------------------------
     def _prefill_admit_fn(self, params, tokens, prompt_len, cache,
@@ -180,8 +255,9 @@ class ServeEngine:
         """
         scratch = self.model.init_cache(self.n_slots, self.max_len)
         logits, new = self.model.prefill(params, tokens, scratch, prompt_len)
-        merged = merge_slots(cache, new, admit_mask)
-        first = sample_tokens(logits[:, 0], temps, top_k, key, top_p)
+        merged = self._hint_cache(merge_slots(cache, new, admit_mask))
+        first = sample_tokens(self._gathered(logits[:, 0]), temps, top_k,
+                              key, top_p)
         slot_last = jnp.where(admit_mask, first, slot_last)
         return slot_last, merged
 
@@ -192,8 +268,9 @@ class ServeEngine:
         (slot is traced — a single compile serves every slot)."""
         c1 = self.model.init_cache(1, self.max_len)
         logits, c1 = self.model.prefill(params, tokens, c1)
-        merged = write_slot(cache, c1, slot)
-        first = sample_tokens(logits[:, 0], temps, top_k, key, top_p)
+        merged = self._hint_cache(write_slot(cache, c1, slot))
+        first = sample_tokens(self._gathered(logits[:, 0]), temps, top_k,
+                              key, top_p)
         slot_last = jax.lax.dynamic_update_index_in_dim(
             slot_last, first[0], slot, 0)
         return slot_last, merged
@@ -213,7 +290,9 @@ class ServeEngine:
         logits, cache = self.model.decode_step(params, cache,
                                                slot_last[:, None])
         cache = dict(cache, len=jnp.where(active, cache["len"], old_len))
-        nxt = sample_tokens(logits[:, 0], temps, top_k, key, top_p)
+        cache = self._hint_cache(cache)
+        nxt = sample_tokens(self._gathered(logits[:, 0]), temps, top_k,
+                            key, top_p)
         nxt = jnp.where(active, nxt, slot_last)
         return nxt, cache
 
@@ -229,7 +308,9 @@ class ServeEngine:
         s_pages = -(-t // self.page_size) * self.page_size
         scratch = self.model.init_cache(self.n_slots, s_pages)
         logits, new = self.model.prefill(params, tokens, scratch, prompt_len)
-        first = sample_tokens(logits[:, 0], temps, top_k, key, top_p)
+        new = self._hint_cache(new)
+        first = sample_tokens(self._gathered(logits[:, 0]), temps, top_k,
+                              key, top_p)
         slot_last = jnp.where(admit_mask, first, slot_last)
         return slot_last, new
 
@@ -241,7 +322,9 @@ class ServeEngine:
         so their masked write can never touch a live page."""
         logits, store = self.model.decode_step_paged(
             params, store, slot_last[:, None], page_table, lens)
-        nxt = sample_tokens(logits[:, 0], temps, top_k, key, top_p)
+        store = self._hint_store(store)
+        nxt = sample_tokens(self._gathered(logits[:, 0]), temps, top_k,
+                            key, top_p)
         nxt = jnp.where(active, nxt, slot_last)
         return nxt, store
 
@@ -282,7 +365,8 @@ class ServeEngine:
         if request.max_new_tokens <= 0:
             return _empty()
         t0 = time.time()
-        cache = self.model.init_cache(1, self.max_len)
+        cache = self._place(self.model.init_cache(1, self.max_len),
+                            self._cache_axes)
         tok = jnp.asarray(np.asarray(request.prompt, np.int32))[None]
         logits, cache = self._prefill1(self.params, tok, cache)
         temps, top_k, top_p = self._policy_args(
@@ -362,7 +446,8 @@ class ServeEngine:
         results: dict = {}
 
         n = self.n_slots
-        cache = self.model.init_cache(n, self.max_len)
+        cache = self._place(self.model.init_cache(n, self.max_len),
+                            self._cache_axes)
         slot_req: List[Optional[Request]] = [None] * n
         slot_last = jnp.zeros((n,), jnp.int32)
         slot_len = np.zeros(n, np.int64)      # host mirror of cache["len"]
@@ -916,6 +1001,7 @@ class ServeEngine:
                                       + self._prefill1.traces)
         m["decode_traces"] = self._decode.traces
         m["paged"] = self.paged
+        m["mesh"] = dict(self.mesh.shape) if self.mesh is not None else None
         if self.paged:
             counters += [self._prefill_paged, self._decode_paged]
             m["prefill_calls"] += self._prefill_paged.calls

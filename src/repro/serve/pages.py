@@ -12,7 +12,12 @@ leading pages to the *same* physical blocks.
 Everything in this module is host-side bookkeeping (plain Python / NumPy
 over int page ids); the device-side page store and the jitted
 gather/scatter ops live in ``models/common.py`` and
-``serve/cache_ops.py``.
+``serve/cache_ops.py``.  Under a sharded engine (DESIGN.md §13) the
+page *stores* are sharded on the KV-head axis while page *tables* stay
+replicated — every device holds the same id -> page mapping and gathers
+its own head slice, so the allocator/refcount/prefix logic here is
+identical for single-device and tensor-parallel serving (page ids are
+global, never per-device).
 
 Invariants (DESIGN.md §10):
 

@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dist.sharding import SERVE_DECODE_RULES, SERVE_PREFILL_RULES
 from .buckets import bucket_for
 from .cache_ops import write_slot
 from .sampler import (draw_from_probs, policy_in_use, policy_probs,
@@ -84,17 +85,27 @@ class SpecRunner:
         self.shares = bool(getattr(self.draft, "shares_cache", False))
         self._trace_counter = TraceCounter
         self._cycles: dict = {}
+        # sharded engine: the draft's weights live on the same mesh, TP
+        # split along the draft model's own logical axes (engine._place
+        # / engine._jit are identity when mesh is None)
+        if engine.mesh is not None and hasattr(self.draft, "place"):
+            self.draft.place(engine._place, self.dmodel)
         self.dcache = None
         if not self.shares:
-            self.dcache = self.dmodel.init_cache(engine.n_slots,
-                                                 engine.max_len)
-            self._dprefill = TraceCounter(jax.jit(self.dmodel.prefill))
+            self.dcache = engine._place(
+                self.dmodel.init_cache(engine.n_slots, engine.max_len),
+                self.dmodel.cache_axes()
+                if hasattr(self.dmodel, "cache_axes") else None)
+            self._dprefill = TraceCounter(
+                engine._jit(self.dmodel.prefill, SERVE_PREFILL_RULES))
             # distinct function object: jit caches key on the underlying
             # callable, and this wrapper's draft-cache signatures must
             # not mingle with other write_slot users' cache entries
-            self._dwrite = jax.jit(
-                lambda cache, single, slot: write_slot(cache, single, slot))
-            self._dtrack = jax.jit(self.dmodel.decode_step)
+            self._dwrite = engine._jit(
+                lambda cache, single, slot: write_slot(cache, single, slot),
+                SERVE_DECODE_RULES)
+            self._dtrack = engine._jit(self.dmodel.decode_step,
+                                       SERVE_DECODE_RULES)
             self._dplen = ("prompt_len" in inspect.signature(
                 self.dmodel.prefill).parameters)
         self.m = dict(spec_cycles=0, draft_steps=0, proposed_tokens=0,
@@ -250,7 +261,8 @@ class SpecRunner:
             build = self._build_dense if kind == "dense" else \
                 self._build_paged
             self._cycles[key] = self._trace_counter(
-                jax.jit(build(k, use_topk, use_topp)))
+                self.engine._jit(build(k, use_topk, use_topp),
+                                 SERVE_DECODE_RULES))
         return self._cycles[key]
 
     # -- host entry points ----------------------------------------------------

@@ -1,6 +1,14 @@
 """Elastic-restart integration: train, checkpoint, 'lose a host', resume
 with a different host count — loss continues from where it left off and
-the data pipeline hands out exactly the right indices."""
+the data pipeline hands out exactly the right indices.  Also covers
+restart of a *sharded serve* (DESIGN.md §13): replan the mesh after host
+loss and resume in-flight requests without output divergence."""
+import os
+import subprocess
+import sys
+
+import pytest
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -90,3 +98,86 @@ def test_distributed_quantization_partition_union():
                     jax.tree_util.tree_leaves(ref)):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32), atol=1e-6)
+
+
+@pytest.mark.slow
+def test_sharded_serve_elastic_restart():
+    """Host loss mid-serve: a (4,2)-mesh engine loses two hosts after 4
+    decoded tokens; ``plan_mesh`` replans to (2,2), ``resume_batch_
+    indices`` splits the in-flight slots across the survivors (disjoint
+    and complete), and each survivor resumes its requests with prompt =
+    original prompt + tokens already emitted.  Greedy determinism plus
+    mesh-shape identity make the stitched outputs exactly equal the
+    uninterrupted single-device serve.  Subprocess: needs 8 virtual
+    devices before jax initializes."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    code = """
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.configs import ARCHS
+from repro.core import QuantSpec, quantize_model, run_calibration
+from repro.data.synthetic import DataConfig, SyntheticLM, calibration_batches
+from repro.dist.elastic import plan_mesh, resume_batch_indices
+from repro.launch.mesh import make_local_mesh
+from repro.models.registry import build_model
+from repro.serve.engine import Request, ServeEngine
+
+cfg = ARCHS["llama3-8b"].tiny()
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size))
+calib = calibration_batches(data, 4, 32)
+stats = run_calibration(model.forward, params,
+                        [{k: jnp.asarray(v) for k, v in b.items()}
+                         for b in calib])
+qp, _ = quantize_model(params, model.quant_site_map(), stats, method="faq",
+                       spec=QuantSpec(bits=4, group_size=64), mode="packed")
+
+N_REQ, TOTAL, PRE = 4, 10, 4
+prompts = [data.sequence(500 + i, 8 + i) for i in range(N_REQ)]
+
+def serve(idx, prompt_of, budget, **kw):
+    eng = ServeEngine(model, qp, n_slots=len(idx), max_len=64, **kw)
+    return eng.serve([Request(rid=i, prompt=prompt_of(i),
+                              max_new_tokens=budget) for i in idx])
+
+# uninterrupted single-device reference
+ref = serve(range(N_REQ), lambda i: prompts[i], TOTAL)
+
+# phase 1: 4 hosts x 2 chips, dies after PRE tokens per request
+partial = serve(range(N_REQ), lambda i: prompts[i], PRE,
+                mesh=make_local_mesh(4, 2))
+
+# two hosts lost: replan 8 -> 4 chips at fixed model=2
+plan = plan_mesh(4, model=2, old_data=4)
+assert plan.data == 2 and plan.used_chips == 4, plan
+mesh1 = make_local_mesh(plan.data, plan.model)
+
+# survivors split the in-flight slots: disjoint and complete
+per_host = N_REQ // plan.data
+hosts = [resume_batch_indices(0, per_host, h, plan.data)
+         for h in range(plan.data)]
+assert sorted(i for hs in hosts for i in hs) == list(range(N_REQ)), hosts
+
+# phase 2: each survivor resumes its share with the emitted prefix
+final = {}
+for idx in hosts:
+    res = serve(idx, lambda i: np.concatenate(
+        [np.asarray(prompts[i], np.int32), partial[i]]), TOTAL - PRE,
+        mesh=mesh1)
+    for i in idx:
+        final[i] = np.concatenate([partial[i], res[i]])
+
+for i in range(N_REQ):
+    assert final[i].tolist() == ref[i].tolist(), i
+print("RESTART-OK")
+"""
+    env = dict(os.environ, PYTHONPATH=os.path.join(repo, "src"),
+               JAX_PLATFORMS="cpu",
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "RESTART-OK" in out.stdout
