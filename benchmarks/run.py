@@ -14,7 +14,8 @@ def emit(name, us_per_call, derived):
 
 
 def main() -> None:
-    from . import kernel_bench, roofline, serve_bench, table4_hparams, tables
+    from . import (kernel_bench, roofline, serve_bench, table4_hparams,
+                   tables, traffic_bench)
 
     print("name,us_per_call,derived")
     tables.table1(emit)
@@ -24,6 +25,7 @@ def main() -> None:
     kernel_bench.run(emit)
     roofline.run(emit)
     serve_bench.run(emit)
+    traffic_bench.run(emit)
 
 
 if __name__ == "__main__":

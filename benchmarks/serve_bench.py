@@ -164,7 +164,25 @@ CSV_HEADER = ("timestamp,requests,new_tokens,n_slots,max_len,"
               "legacy_tok_s,bucketed_tok_s,speedup,prefill_traces,"
               "paged_tok_s,dense_cache_bytes,paged_peak_bytes,"
               "spec_tok_s,spec_speedup,accept_rate,tokens_per_step,"
-              "mesh,sharded_tok_s,per_device_cache_bytes")
+              "mesh,sharded_tok_s,per_device_cache_bytes,"
+              "traffic_process,traffic_rate,ttft_p50_ms,ttft_p95_ms,"
+              "ttft_p99_ms,queue_delay_p95_ms,per_token_p50_ms")
+
+# Steady-state measurement policy shared by every row (recorded in
+# BENCH_serve.json so rows stay comparable across PRs): each engine
+# first serves one same-distribution warmup workload (seed 1), putting
+# XLA compiles and allocator warmup outside the timed region.  The
+# legacy engine still retraces novel prompt lengths *inside* the timed
+# run — per-length retrace is its steady-state behavior, not a
+# cold-start artifact — while the bucketed grid is fully compiled.
+WARMUP_POLICY = {
+    "policy": "warmed-steady-state",
+    "detail": "each engine serves one same-distribution workload "
+              "(seed=1) before timing; compiles excluded from timed "
+              "rows, counters reported as timed-run deltas",
+    "warm_seed": 1,
+    "timed_seed": 0,
+}
 
 
 def _append_row(values: dict):
@@ -192,18 +210,26 @@ def _append_row(values: dict):
 
 def bench(emit=print, *, requests=16, new_tokens=16, n_slots=4, max_len=128,
           record=True):
-    """Returns (legacy tok/s, bucketed tok/s, speedup)."""
+    """Returns (legacy tok/s, bucketed tok/s, speedup).
+
+    Both rows are measured warmed (``WARMUP_POLICY``): the legacy
+    engine's timed run still pays per-novel-length retraces, because
+    that IS its steady state; the bucketed grid is fully compiled."""
     from repro.serve import ServeEngine
 
     cfg, model, qp = _quantized_setup()
+    warm = _requests(cfg, 2 * n_slots, new_tokens, seed=1)
 
     legacy = LegacyEngine(model, qp, n_slots=n_slots, max_len=max_len)
+    legacy.serve([_fresh_request(r) for r in warm])
     t0 = time.time()
     res_l = legacy.serve(_requests(cfg, requests, new_tokens))
     dt_l = time.time() - t0
     tok_l = sum(len(v) for v in res_l.values())
 
     eng = ServeEngine(model, qp, n_slots=n_slots, max_len=max_len)
+    eng.serve([_fresh_request(r) for r in warm])
+    m0 = eng.metrics()
     t0 = time.time()
     res_b = eng.serve(_requests(cfg, requests, new_tokens))
     dt_b = time.time() - t0
@@ -219,7 +245,7 @@ def bench(emit=print, *, requests=16, new_tokens=16, n_slots=4, max_len=128,
     emit(f"serve/bucketed_tok_s,,{tps_b:.2f}")
     emit(f"serve/speedup,,{speedup:.2f}")
     emit(f"serve/prefill_traces,,{m['prefill_traces']}")
-    emit(f"serve/decode_steps,,{m['decode_steps']}")
+    emit(f"serve/decode_steps,,{m['decode_steps'] - m0['decode_steps']}")
 
     if record:
         _append_row(dict(timestamp=int(time.time()), requests=requests,
@@ -250,8 +276,10 @@ def bench_paged(emit=print, *, requests=16, new_tokens=16, n_slots=4,
     from repro.serve import ServeEngine
 
     cfg, model, qp = _quantized_setup()
+    warm = _shared_prefix_requests(cfg, 2 * n_slots, new_tokens, seed=1)
 
     dense = ServeEngine(model, qp, n_slots=n_slots, max_len=max_len)
+    dense.serve([_fresh_request(r) for r in warm])
     t0 = time.time()
     res_d = dense.serve(_shared_prefix_requests(cfg, requests, new_tokens))
     dt_d = time.time() - t0
@@ -263,6 +291,12 @@ def bench_paged(emit=print, *, requests=16, new_tokens=16, n_slots=4,
 
     paged = ServeEngine(model, qp, n_slots=n_slots, max_len=max_len,
                         paged=True, page_size=page_size)
+    # the warm workload uses a *different* system prompt (seed 1), so
+    # the timed run's prefix hits are all earned inside the timed run;
+    # the warm prefix stays in the index — exactly what a long-lived
+    # server's pinned-page peak looks like
+    paged.serve([_fresh_request(r) for r in warm])
+    m0 = paged.metrics()
     t0 = time.time()
     res_p = paged.serve(_shared_prefix_requests(cfg, requests, new_tokens))
     dt_p = time.time() - t0
@@ -279,8 +313,9 @@ def bench_paged(emit=print, *, requests=16, new_tokens=16, n_slots=4,
     emit(f"serve/dense_cache_bytes,,{dense_bytes}")
     emit(f"serve/paged_peak_bytes,,{paged_bytes}")
     emit(f"serve/paged_alloc_bytes,,{m['alloc_cache_bytes']}")
-    emit(f"serve/prefix_hits,,{m['prefix_hits']}")
-    emit(f"serve/prefix_hit_tokens,,{m['prefix_hit_tokens']}")
+    emit(f"serve/prefix_hits,,{m['prefix_hits'] - m0['prefix_hits']}")
+    emit(f"serve/prefix_hit_tokens,,"
+         f"{m['prefix_hit_tokens'] - m0['prefix_hit_tokens']}")
 
     if record:
         _append_row(dict(timestamp=int(time.time()), requests=requests,
@@ -324,6 +359,7 @@ def bench_spec(emit=print, *, requests=16, new_tokens=32, n_slots=4,
     warm = _requests(cfg, 2 * n_slots, new_tokens, seed=1)
     plain.serve([_fresh_request(r) for r in warm])
     eng.serve([_fresh_request(r) for r in warm])
+    m0 = eng.metrics()
 
     t0 = time.time()
     res_n = plain.serve(_requests(cfg, requests, new_tokens))
@@ -340,11 +376,16 @@ def bench_spec(emit=print, *, requests=16, new_tokens=32, n_slots=4,
 
     tps_n, tps_s = tok_n / dt_n, tok_s / dt_s
     m = eng.metrics()
+    # timed-run deltas: engine counters are lifetime-cumulative and the
+    # warm workload must not dilute the measured acceptance
+    d = lambda key: m[key] - m0[key]
+    accept = d("accepted_tokens") / max(d("proposed_tokens"), 1)
+    tpstep = d("tokens_generated") / max(d("decode_steps"), 1)
     emit(f"serve/nonspec_tok_s,,{tps_n:.2f}")
     emit(f"serve/spec_tok_s,,{tps_s:.2f}")
     emit(f"serve/spec_speedup,,{tps_s / tps_n:.2f}")
-    emit(f"serve/accept_rate,,{m['accept_rate']:.3f}")
-    emit(f"serve/tokens_per_step,,{m['tokens_per_step']:.2f}")
+    emit(f"serve/accept_rate,,{accept:.3f}")
+    emit(f"serve/tokens_per_step,,{tpstep:.2f}")
     emit(f"serve/draft_share,,{m['draft_share']:.3f}")
 
     if record:
@@ -353,9 +394,9 @@ def bench_spec(emit=print, *, requests=16, new_tokens=32, n_slots=4,
                          max_len=max_len, bucketed_tok_s=f"{tps_n:.2f}",
                          spec_tok_s=f"{tps_s:.2f}",
                          spec_speedup=f"{tps_s / tps_n:.2f}",
-                         accept_rate=f"{m['accept_rate']:.3f}",
-                         tokens_per_step=f"{m['tokens_per_step']:.2f}"))
-    return tps_n, tps_s, m["accept_rate"], m["tokens_per_step"]
+                         accept_rate=f"{accept:.3f}",
+                         tokens_per_step=f"{tpstep:.2f}"))
+    return tps_n, tps_s, accept, tpstep
 
 
 # Runs in a subprocess because the virtual device count must be set
@@ -474,11 +515,22 @@ def bench_sharded(emit=print, *, requests=8, new_tokens=8, n_slots=4,
 
 def _write_json(summary: dict):
     """BENCH trajectory snapshot at the repo root (like
-    BENCH_decode.json): tok/s and peak cache bytes per serving mode."""
+    BENCH_decode.json): tok/s and peak cache bytes per serving mode.
+    Merge-updates top-level sections so the closed-loop benches and
+    ``benchmarks.traffic_bench`` (the ``traffic`` section) can refresh
+    the file independently without clobbering each other."""
     path = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
     import json
+    data = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            data = {}
+    data.update(summary)
     with open(path, "w") as f:
-        json.dump(summary, f, indent=2, sort_keys=True)
+        json.dump(data, f, indent=2, sort_keys=True)
         f.write("\n")
 
 
@@ -501,21 +553,32 @@ def _bench_all(emit, *, requests=16, new_tokens=16, n_slots=4, max_len=128,
                                            n_slots=n_slots, max_len=max_len,
                                            k=spec_k, record=record)
     sharded = bench_sharded(emit, record=record)
+    base = {"requests": requests, "new_tokens": new_tokens,
+            "n_slots": n_slots, "max_len": max_len}
     summary = {
         "timestamp": int(time.time()),
-        "workload": {"requests": requests, "new_tokens": new_tokens,
-                     "n_slots": n_slots, "max_len": max_len},
-        "legacy": {"tok_s": round(tps_l, 2)},
+        "workload": dict(base),
+        "warmup": dict(WARMUP_POLICY),
+        "legacy": {"tok_s": round(tps_l, 2),
+                   "workload": dict(base, prompt_lens="uniform[4,48)")},
         "dense": {"tok_s": round(tps_b, 2), "peak_cache_bytes": int(db),
-                  "speedup_vs_legacy": round(speedup, 2)},
-        "paged": {"tok_s": round(tps_p, 2), "peak_cache_bytes": int(pb)},
+                  "speedup_vs_legacy": round(speedup, 2),
+                  "workload": dict(base, prompt_lens="uniform[4,48)")},
+        "paged": {"tok_s": round(tps_p, 2), "peak_cache_bytes": int(pb),
+                  "workload": dict(base, prompt_lens="32+uniform[4,40)",
+                                   shared_prefix_len=32)},
         "spec": {"tok_s": round(tps_s, 2), "peak_cache_bytes": int(db),
                  "speedup_vs_nonspec": round(tps_s / tps_n, 2),
                  "nonspec_tok_s": round(tps_n, 2), "k": spec_k,
                  "new_tokens": spec_new_tokens,
                  "draft": "self-int8", "accept_rate": round(acc, 3),
-                 "tokens_per_step": round(tpstep, 2)},
-        "sharded": sharded,
+                 "tokens_per_step": round(tpstep, 2),
+                 "workload": dict(base, new_tokens=spec_new_tokens,
+                                  prompt_lens="uniform[4,48)")},
+        "sharded": dict(sharded,
+                        workload={"requests": 8, "new_tokens": 8,
+                                  "n_slots": 4, "max_len": 64,
+                                  "prompt_lens": "uniform[4,32)"}),
     }
     if write_json:
         _write_json(summary)
@@ -560,6 +623,8 @@ def main():
           f"({sp['speedup_vs_nonspec']:.2f}x, accept {sp['accept_rate']:.2f},"
           f" {sp['tokens_per_step']:.2f} tok/step)")
     for mesh, r in s["sharded"].items():
+        if mesh == "workload":
+            continue
         print(f"sharded {mesh}: {r['tok_s']:.1f} tok/s, "
               f"{r['per_device_cache_bytes']/1e6:.2f} MB cache/device")
 

@@ -1,0 +1,244 @@
+"""Open-loop traffic benchmark: latency percentiles under Poisson and
+bursty arrivals, plus the chunked-prefill head-of-line scenario.
+
+The closed-loop benches (``benchmarks.serve_bench``) measure
+throughput; this one measures what a client feels.  A seeded
+:class:`repro.serve.TrafficConfig` trace drives the engine open-loop
+through :meth:`repro.serve.Scheduler.run_traffic` — arrivals follow the
+trace clock and do not wait for the engine — and per-request timestamp
+records are digested into p50/p95/p99 TTFT, queue delay, and per-token
+decode latency.  Results merge into the ``traffic`` section of
+``BENCH_serve.json`` (the closed-loop sections stay untouched) and
+append rows to ``reports/serve_bench.csv``.
+
+The head-of-line scenario measures what chunked prefill buys: waves of
+one near-max-length prompt trailed by short prompts.  Monolithic
+prefill makes each wave's shorts wait out the full long prefill before
+they can be admitted; chunked admission (``prefill_chunk="auto"``)
+bounds any single prefill call by the chunk bucket, so the shorts'
+p95 TTFT drops.  Both numbers are recorded.
+
+    PYTHONPATH=src python -m benchmarks.traffic_bench --requests 100
+    PYTHONPATH=src python -m benchmarks.traffic_bench --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import time
+
+import numpy as np
+
+from benchmarks.serve_bench import (WARMUP_POLICY, _append_row,
+                                    _quantized_setup, _write_json)
+
+
+def _warm(eng, cfg, new_tokens):
+    """Compile every prefill bucket and the decode/fill path before any
+    timed traffic (same warmed-steady-state policy as serve_bench)."""
+    from repro.serve import Request
+    rng = np.random.default_rng(1)
+    reqs = []
+    for i, b in enumerate(eng.buckets):
+        n = min(b, eng.max_len - new_tokens - 1)
+        reqs.append(Request(rid=-(i + 1),
+                            prompt=rng.integers(1, cfg.vocab_size, n)
+                            .astype(np.int32),
+                            max_new_tokens=new_tokens))
+    eng.serve(reqs)
+
+
+def bench_traffic(emit=print, *, requests=100, rate=16.0, n_slots=4,
+                  max_len=128, new_tokens=8, seed=0, record=True):
+    """Percentile report under Poisson and bursty arrivals on a fresh
+    warmed engine per process.  Returns ``{process: report}`` where each
+    report carries its generating workload next to the percentiles."""
+    from repro.serve import Scheduler, ServeEngine, TrafficConfig, make_trace
+
+    cfg, model, qp = _quantized_setup()
+    out = {}
+    for process in ("poisson", "bursty"):
+        eng = ServeEngine(model, qp, n_slots=n_slots, max_len=max_len)
+        _warm(eng, cfg, new_tokens)
+        tcfg = TrafficConfig(n_requests=requests, process=process,
+                             rate=rate, max_new_tokens=new_tokens,
+                             prompt_len_max=min(48, max_len - new_tokens - 1),
+                             vocab_size=cfg.vocab_size, seed=seed)
+        res = Scheduler(eng).run_traffic(make_trace(tcfg))
+        rep = res.traffic
+        out[process] = dict(rep, workload=tcfg.workload(),
+                            prefill_chunk=eng.prefill_chunk or 0)
+        emit(f"serve/traffic_{process}_ttft_p50_ms,,"
+             f"{rep['ttft_ms']['p50']:.2f}")
+        emit(f"serve/traffic_{process}_ttft_p95_ms,,"
+             f"{rep['ttft_ms']['p95']:.2f}")
+        emit(f"serve/traffic_{process}_ttft_p99_ms,,"
+             f"{rep['ttft_ms']['p99']:.2f}")
+        emit(f"serve/traffic_{process}_queue_p95_ms,,"
+             f"{rep['queue_delay_ms']['p95']:.2f}")
+        emit(f"serve/traffic_{process}_tok_s,,{rep['tokens_per_s']:.2f}")
+        if record:
+            _append_row(dict(
+                timestamp=int(time.time()), requests=requests,
+                new_tokens=new_tokens, n_slots=n_slots, max_len=max_len,
+                traffic_process=process, traffic_rate=rate,
+                ttft_p50_ms=f"{rep['ttft_ms']['p50']:.2f}",
+                ttft_p95_ms=f"{rep['ttft_ms']['p95']:.2f}",
+                ttft_p99_ms=f"{rep['ttft_ms']['p99']:.2f}",
+                queue_delay_p95_ms=f"{rep['queue_delay_ms']['p95']:.2f}",
+                per_token_p50_ms=f"{rep['per_token_ms']['p50']:.2f}"))
+    return out
+
+
+def _wave_trace(cfg, *, waves, long_len, short_len, shorts_per_wave,
+                wave_gap, new_tokens, seed=0):
+    """Head-of-line workload: each wave is one long prompt followed
+    1 ms later by ``shorts_per_wave`` short prompts.  Returns the trace
+    plus the rids of the short requests (the TTFT population)."""
+    from repro.serve import Request
+    rng = np.random.default_rng(seed)
+    trace, shorts, rid = [], [], 0
+    for w in range(waves):
+        t = w * wave_gap
+        trace.append((t, Request(
+            rid=rid, prompt=rng.integers(1, cfg.vocab_size, long_len)
+            .astype(np.int32), max_new_tokens=new_tokens)))
+        rid += 1
+        for _ in range(shorts_per_wave):
+            trace.append((t + 1e-3, Request(
+                rid=rid, prompt=rng.integers(1, cfg.vocab_size, short_len)
+                .astype(np.int32), max_new_tokens=new_tokens)))
+            shorts.append(rid)
+            rid += 1
+    return trace, shorts
+
+
+def bench_chunked_ttft(emit=print, *, waves=10, shorts_per_wave=2,
+                       n_slots=4, max_len=128, new_tokens=8,
+                       wave_gap=0.6, record=True):
+    """p95 TTFT of short requests stuck behind a near-max-length prompt,
+    monolithic prefill vs chunked (``prefill_chunk="auto"``).  Same
+    trace, same seed, same warmed engine config — the only variable is
+    the chunk.  Returns both reports plus the p95 improvement."""
+    from repro.serve import Scheduler, ServeEngine, summarize
+
+    cfg, model, qp = _quantized_setup()
+    long_len = max_len - new_tokens - 1
+    out = {}
+    for label, chunk in (("monolithic", 0), ("chunked", "auto")):
+        eng = ServeEngine(model, qp, n_slots=n_slots, max_len=max_len,
+                          prefill_chunk=chunk)
+        _warm(eng, cfg, new_tokens)
+        trace, shorts = _wave_trace(
+            cfg, waves=waves, long_len=long_len, short_len=8,
+            shorts_per_wave=shorts_per_wave, wave_gap=wave_gap,
+            new_tokens=new_tokens)
+        res = Scheduler(eng).run_traffic(trace)
+        assert res.traffic["completed"] == res.traffic["submitted"]
+        rep = summarize({rid: res.records[rid] for rid in shorts})
+        out[label] = {
+            "short_ttft_ms": rep["ttft_ms"],
+            "prefill_chunk": eng.prefill_chunk or 0,
+            "workload": {"waves": waves, "long_len": long_len,
+                         "short_len": 8,
+                         "shorts_per_wave": shorts_per_wave,
+                         "wave_gap_s": wave_gap, "n_slots": n_slots,
+                         "max_len": max_len, "new_tokens": new_tokens},
+        }
+        emit(f"serve/traffic_{label}_short_ttft_p95_ms,,"
+             f"{rep['ttft_ms']['p95']:.2f}")
+    gain = (out["monolithic"]["short_ttft_ms"]["p95"]
+            - out["chunked"]["short_ttft_ms"]["p95"])
+    out["p95_improvement_ms"] = round(gain, 3)
+    emit(f"serve/traffic_chunked_ttft_p95_gain_ms,,{gain:.2f}")
+    return out
+
+
+def _sanity(report: dict):
+    """The smoke contract: percentiles ordered and finite, every
+    submitted request completed."""
+    assert report["completed"] == report["submitted"], report
+    for key in ("ttft_ms", "queue_delay_ms", "per_token_ms"):
+        dist = report[key]
+        vals = [dist["p50"], dist["p95"], dist["p99"], dist["mean"]]
+        assert all(math.isfinite(v) for v in vals), (key, dist)
+        assert dist["p50"] <= dist["p95"] <= dist["p99"], (key, dist)
+
+
+def _bench_all(emit, *, requests=100, rate=16.0, n_slots=4, max_len=128,
+               new_tokens=8, waves=10, record=True, write_json=True):
+    traffic = bench_traffic(emit, requests=requests, rate=rate,
+                            n_slots=n_slots, max_len=max_len,
+                            new_tokens=new_tokens, record=record)
+    for rep in traffic.values():
+        _sanity(rep)
+    hol = bench_chunked_ttft(emit, waves=waves, n_slots=n_slots,
+                             max_len=max_len, new_tokens=new_tokens,
+                             record=record)
+    summary = {"traffic": {
+        "timestamp": int(time.time()),
+        "warmup": dict(WARMUP_POLICY),
+        "poisson": traffic["poisson"],
+        "bursty": traffic["bursty"],
+        "chunked_prefill_hol": hol,
+    }}
+    if write_json:
+        _write_json(summary)
+    return summary
+
+
+def run(emit):
+    """Entry point for benchmarks.run."""
+    _bench_all(emit)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=100)
+    ap.add_argument("--rate", type=float, default=16.0)
+    ap.add_argument("--n-slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--waves", type=int, default=10,
+                    help="head-of-line scenario wave count")
+    ap.add_argument("--no-record", action="store_true",
+                    help="skip the CSV trajectory and BENCH_serve.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: seeded traffic, sanity-assert the "
+                         "percentile report, write nothing")
+    args = ap.parse_args()
+    if args.smoke:
+        traffic = bench_traffic(print, requests=args.requests,
+                                rate=args.rate, n_slots=args.n_slots,
+                                max_len=args.max_len,
+                                new_tokens=args.new_tokens, record=False)
+        for process, rep in traffic.items():
+            _sanity(rep)
+            print(f"{process}: {rep['submitted']} submitted, "
+                  f"{rep['completed']} completed, ttft p50/p95/p99 = "
+                  f"{rep['ttft_ms']['p50']:.1f}/{rep['ttft_ms']['p95']:.1f}/"
+                  f"{rep['ttft_ms']['p99']:.1f} ms")
+        print("traffic smoke OK")
+        return
+    s = _bench_all(print, requests=args.requests, rate=args.rate,
+                   n_slots=args.n_slots, max_len=args.max_len,
+                   new_tokens=args.new_tokens, waves=args.waves,
+                   record=not args.no_record,
+                   write_json=not args.no_record)["traffic"]
+    for process in ("poisson", "bursty"):
+        rep = s[process]
+        print(f"{process}@{rep['workload']['rate']}/s: "
+              f"ttft p50 {rep['ttft_ms']['p50']:.1f} ms / "
+              f"p95 {rep['ttft_ms']['p95']:.1f} ms / "
+              f"p99 {rep['ttft_ms']['p99']:.1f} ms | "
+              f"queue p95 {rep['queue_delay_ms']['p95']:.1f} ms | "
+              f"{rep['tokens_per_s']:.1f} tok/s")
+    hol = s["chunked_prefill_hol"]
+    print(f"head-of-line short p95 TTFT: monolithic "
+          f"{hol['monolithic']['short_ttft_ms']['p95']:.1f} ms -> chunked "
+          f"{hol['chunked']['short_ttft_ms']['p95']:.1f} ms "
+          f"({hol['p95_improvement_ms']:+.1f} ms)")
+
+
+if __name__ == "__main__":
+    main()

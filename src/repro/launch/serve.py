@@ -30,6 +30,20 @@ from repro.serve.engine import Request, ServeEngine
 from repro.serve.spec import SpecConfig
 
 
+def parse_chunk(arg):
+    """'auto' | int tokens | 0/'none' to disable chunked prefill."""
+    if arg == "auto":
+        return "auto"
+    try:
+        n = int(arg)
+    except ValueError:
+        if arg.lower() in ("none", "off"):
+            return None
+        raise argparse.ArgumentTypeError(
+            f"--prefill-chunk expects 'auto', an int, or 0/none, got {arg!r}")
+    return n if n > 0 else None
+
+
 def parse_mesh(arg):
     """'DATA,MODEL' -> (data, model), with clear errors for bad input."""
     if arg is None:
@@ -74,6 +88,14 @@ def main():
     ap.add_argument("--n-pages", type=int, default=None,
                     help="page-pool capacity; default sizes it so every "
                          "slot can hold a full max_len sequence")
+    ap.add_argument("--prefill-chunk", type=parse_chunk, default="auto",
+                    metavar="auto|N|0",
+                    help="chunked prefill: split long admissions into "
+                         "bucket-sized chunks so one long prompt can't "
+                         "stall other slots' first tokens (DESIGN.md "
+                         "§14); 'auto' picks the second-largest bucket, "
+                         "an int rounds up to the bucket grid, 0 "
+                         "restores monolithic prefill")
     ap.add_argument("--spec-k", type=int, default=0,
                     help="speculative decoding draft depth (tokens "
                          "proposed per cycle; 0 disables — DESIGN.md §12)")
@@ -128,6 +150,7 @@ def main():
                       n_slots=min(args.n_slots, args.requests),
                       max_len=args.max_len, paged=args.paged,
                       page_size=args.page_size, n_pages=args.n_pages,
+                      prefill_chunk=args.prefill_chunk,
                       spec=spec_cfg, mesh=mesh)
     if args.paged and not eng.paged:
         print("note: model cache layout does not support paging; "
@@ -148,7 +171,9 @@ def main():
     print(f"{tok} tokens in {dt:.1f}s ({tok/dt:.1f} tok/s, "
           f"{args.method} int{args.bits} packed)")
     print(f"prefill: {m['prefill_batches']} batches / "
-          f"{m['prefill_traces']} traces (buckets {m['buckets']}), "
+          f"{m['prefill_traces']} traces (buckets {m['buckets']}, "
+          f"chunk {m['prefill_chunk'] or 'off'}, "
+          f"{m['chunked_admissions']} chunked), "
           f"decode: {m['decode_steps']} steps, "
           f"retraces: {m['retrace_count']}")
     if m["paged"]:

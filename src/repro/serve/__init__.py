@@ -4,7 +4,9 @@ from .cache_ops import (copy_page, merge_slots, scatter_prefill_pages,
                         truncate_slot, write_slot)
 from .draft import ModelDraft, SelfDraft, registry_draft, self_int8_draft
 from .engine import Request, ServeEngine, TraceCounter
+from .loadgen import ArrivalFeed, TrafficConfig, make_trace, summarize
 from .pages import PagePool, block_hashes
+from .slots import SlotTable
 from .sampler import (draw_from_probs, policy_probs, sample_tokens,
                       spec_accept)
 from .scheduler import RunResult, Scheduler

@@ -1,0 +1,216 @@
+"""Admission strategies over the shared slot table.
+
+One pipeline, three strategies, tried in order per free-slot pass:
+
+* :class:`PrefixHitAdmission` (paged only) — the head request's leading
+  prompt blocks are already in the prefix index: map the shared pages,
+  skip their prefill entirely, stream the uncached tail through the
+  decode step via the slot's ``fill`` list.
+* :class:`BucketedAdmission` — group FIFO-ordered waiting requests that
+  share the head request's length bucket and prefill them in one
+  slot-aligned batch.  With chunked prefill enabled, a long prompt is
+  admitted as its first ``prefill_chunk`` tokens (one bucket-sized
+  batched prefill) and the remainder teacher-forces through subsequent
+  decode steps exactly like a prefix-hit tail — so a long admission
+  never stalls the decode batch for more than one chunk.  On the paged
+  path, queued requests whose first block duplicates a group member's
+  are deferred one pass so they hit the index instead of prefilling the
+  same prefix twice.
+* :class:`SingleAdmission` — exact-length batch-1 fallback for models
+  whose ``prefill`` takes no ``prompt_len`` (ring-buffer hymba,
+  recurrent xlstm); chunking requires ``prompt_len`` and is disabled.
+
+Strategies mutate only the :class:`.slots.SlotTable` and the stepper
+(via its admission entry points); emission, accounting, and finish
+checks stay in the engine.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .buckets import bucket_for
+from .pages import block_hashes
+
+
+class _Strategy:
+    def __init__(self, engine):
+        self.engine = engine
+
+    def admit(self, run, free) -> bool:
+        """Try to admit from ``run.queue`` head into ``free`` slots.
+        Returns True if this strategy made progress (so the pipeline
+        re-checks free slots before the next pass)."""
+        raise NotImplementedError
+
+
+class PrefixHitAdmission(_Strategy):
+    def admit(self, run, free) -> bool:
+        eng = self.engine
+        st, stp = run.st, eng._stepper
+        head = run.queue[0]
+        hashes = run.hashes_of(head)
+        if not stp.pool.lookup_blocks(hashes):
+            return False
+        # prefix hit: map the shared pages, skip their prefill, stream
+        # the tail through decode
+        run.queue.pop(0)
+        s = free[0]
+        matched = stp.pool.match(hashes)
+        npr = len(head.prompt)
+        # always leave >= 1 token to process so the first sampled token
+        # has logits; a fully-cached prompt re-feeds its last token (the
+        # write into the shared final page is what triggers
+        # copy-on-write)
+        cached = min(len(matched) * stp.page_size, npr - 1)
+        for j, phys in enumerate(matched):
+            stp.table[s, j] = phys
+        eng._admit_bind(run, head, s)
+        st.hashes[s] = hashes
+        st.slot_len[s] = cached
+        st.fill[s] = np.asarray(head.prompt, np.int32)[cached:]
+        eng._m["prefix_hits"] += 1
+        eng._m["prefix_hit_tokens"] += cached
+        return True
+
+
+class BucketedAdmission(_Strategy):
+    def admit(self, run, free) -> bool:
+        eng = self.engine
+        st, stp = run.st, eng._stepper
+        queue = run.queue
+        paged = stp.kind == "paged"
+        chunk = eng.prefill_chunk
+
+        def admit_len(r) -> int:
+            n = len(r.prompt)
+            return min(n, chunk) if chunk else n
+
+        head = queue[0]
+        b = bucket_for(eng.buckets, admit_len(head))
+        group, seen_block0 = [], set()
+        i = 0
+        while i < len(queue) and len(group) < len(free):
+            r = queue[i]
+            if eng._handle_immediate(r, run.results):
+                queue.pop(i)
+                continue
+            hs = run.hashes_of(r) if paged else None
+            if paged and r is not head and hs and (
+                    stp.pool.lookup_blocks(hs) or hs[0] in seen_block0):
+                i += 1
+                continue
+            if bucket_for(eng.buckets, admit_len(r)) == b:
+                group.append((queue.pop(i), hs))
+                if paged and hs:
+                    seen_block0.add(hs[0])
+                continue
+            i += 1
+        if not group:
+            return True      # drained immediates; pipeline re-checks
+        tokens = np.zeros((st.n, b), np.int32)
+        plen = np.ones(st.n, np.int32)
+        admit_mask = np.zeros(st.n, bool)
+        targets = free[:len(group)]
+        placed = []
+        for (req, hs), s in zip(group, targets):
+            p = np.asarray(req.prompt, np.int32)
+            al = admit_len(req)
+            tokens[s, :al] = p[:al]
+            plen[s] = al
+            admit_mask[s] = True
+            eng._admit_bind(run, req, s)
+            st.hashes[s] = hs
+            st.slot_len[s] = al
+            if al < len(p):
+                # chunked admission: the rest of the prompt
+                # teacher-forces through decode; no token emits until
+                # the fill drains (the sampled first token below is a
+                # mid-prompt continuation, discarded)
+                st.fill[s] = p[al:]
+                eng._m["chunked_admissions"] += 1
+            placed.append((req, s))
+        stp.admit_group(st, tokens, plen, admit_mask, placed)
+        eng._m["prefill_batches"] += 1
+        toks = np.asarray(st.slot_last)
+        for req, s in placed:
+            if st.fill[s] is not None:
+                continue
+            eng._post_admit(run, req, s, int(toks[s]))
+        return True
+
+
+class SingleAdmission(_Strategy):
+    def admit(self, run, free) -> bool:
+        eng = self.engine
+        st = run.st
+        req = None
+        while run.queue:
+            cand = run.queue.pop(0)
+            if not eng._handle_immediate(cand, run.results):
+                req = cand
+                break
+        if req is None:
+            return True
+        s = free[0]
+        eng._admit_bind(run, req, s)
+        st.slot_len[s] = len(req.prompt)
+        eng._stepper.admit_single(st, req, s)
+        eng._m["prefill_batches"] += 1
+        eng._post_admit(run, req, s, int(np.asarray(st.slot_last)[s]))
+        return True
+
+
+class AdmissionPipeline:
+    """Orders the strategies for the engine's cache kind and drains the
+    queue into free slots until neither slots nor admissible requests
+    remain."""
+
+    def __init__(self, engine):
+        self.engine = engine
+        stp = engine._stepper
+        if stp.kind == "paged":
+            self.strategies = [PrefixHitAdmission(engine),
+                               BucketedAdmission(engine)]
+        elif engine._supports_plen:
+            self.strategies = [BucketedAdmission(engine)]
+        else:
+            self.strategies = [SingleAdmission(engine)]
+
+    def fill_slots(self, run):
+        eng = self.engine
+        while True:
+            free = run.st.free()
+            if not free or not run.queue:
+                return
+            while run.queue and eng._handle_immediate(run.queue[0],
+                                                      run.results):
+                run.queue.pop(0)
+            if not run.queue:
+                continue
+            for strat in self.strategies:
+                if strat.admit(run, free):
+                    break
+            else:
+                return
+
+
+class ServeRun:
+    """Per-``serve()`` scope: the FIFO queue, the results dict, the
+    slot table, and the prompt-hash memo (hashes are deterministic per
+    request — computed once, not once per fill pass)."""
+
+    def __init__(self, engine, requests):
+        from .slots import SlotTable
+        self.queue = list(requests)
+        self.results: dict = {}
+        self.st = SlotTable(engine.n_slots)
+        self._engine = engine
+        self._hash_cache: dict = {}
+
+    def hashes_of(self, req) -> list:
+        ent = self._hash_cache.get(id(req))
+        if ent is None or ent[0] is not req:
+            ent = (req, block_hashes(req.prompt,
+                                     self._engine._stepper.page_size))
+            self._hash_cache[id(req)] = ent
+        return ent[1]

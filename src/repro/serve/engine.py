@@ -1,55 +1,53 @@
 """Bucketed continuous-batching engine over FAQ-quantized weights.
 
-Slot-based continuous batching with three hot-path properties:
+Slot-based continuous batching: bucketed batched prefill (admission
+compiles at most once per length bucket), a jitted on-device batched
+sampler fused with the decode step (one int32 transferred per slot per
+step), and inactive-slot masking inside the jitted decode wrapper so a
+draining batch can never advance a dead slot's cache length past
+``max_len``.
 
-* **Bucketed batched prefill** — waiting requests are padded to a small
-  fixed grid of length buckets (:mod:`.buckets`) and prefilled together
-  in one slot-aligned batch with per-row ``prompt_len``; admission
-  compiles at most once per bucket instead of once per distinct prompt
-  length, and the prefilled rows land in the live decode cache through a
-  single jitted merge (:func:`.cache_ops.merge_slots`).
-* **On-device sampling** — a jitted batched sampler
-  (:func:`.sampler.sample_tokens`, greedy/temperature/top-k keyed by
-  per-slot temperature) runs fused with the decode step, so each step
-  transfers one int32 per slot instead of a vocab-size logits row.
-* **Inactive-slot masking** — finished/empty slots are frozen inside the
-  jitted decode wrapper (``len`` restored, sampled token suppressed), so
-  a draining batch can never advance a dead slot's cache length past
-  ``max_len`` and corrupt its last cache position.
+The engine itself is a thin orchestrator over three composable parts
+(DESIGN.md §14): the :class:`.slots.SlotTable` (host-side slot state),
+an :class:`.admission.AdmissionPipeline` (bucketed / paged prefix-hit /
+single-request admission strategies), and a :mod:`.stepper` (the jitted
+prefill/decode/spec cores per cache kind).  Dense and paged serving run
+the *same* ``serve()`` loop — the cache kind only changes which stepper
+is plugged in.
+
+**Chunked prefill** (``prefill_chunk``, default ``"auto"``): a prompt
+longer than the chunk is admitted as its first chunk through one
+bucket-sized batched prefill; the remainder teacher-forces through the
+batched decode step, one token per step, interleaved with every other
+slot's decoding — a long admission can never stall the decode batch for
+more than one chunk.  ``"auto"`` picks the second-largest bucket;
+``0``/``None`` restores monolithic prefill.  Greedy outputs are
+token-for-token identical either way (teacher-forced decode writes the
+same KV as prefill at the same positions).
 
 The weights are the *packed* QuantizedTensor representation — every
-matmul runs through the dequant-matmul kernel path (``qlinear``
-dispatch), i.e. the paper's deployment format is the first-class serving
-path, not a simulation.  Orchestration stays in Python (jitted
-prefill/decode inner loops) — on TPU the jitted steps dominate and
-Python overhead hides under the device queue.
-
+matmul runs through the dequant-matmul kernel path, i.e. the paper's
+deployment format is the first-class serving path, not a simulation.
 Models whose ``prefill`` does not accept ``prompt_len`` (hymba's ring
 buffer, recurrent xlstm) fall back to per-request exact-length prefill
-admitted through the jitted per-slot :func:`.cache_ops.write_slot` op —
-correctness fixes apply there too, only the compile-per-length cost
-remains.
+through :func:`.cache_ops.write_slot` — only the compile-per-length
+cost remains.  ``paged=True`` swaps in the page-pool stepper with
+shared-prefix reuse (:mod:`.pages`, DESIGN.md §10); ``spec=SpecConfig``
+turns decode steps into speculative draft+verify cycles (:mod:`.spec`,
+DESIGN.md §12) with greedy output unchanged.
 
-``paged=True`` switches the persistent cache from one dense
-``(n_slots, max_len)`` block to a pool of fixed-size pages with
-per-slot page tables and shared-prefix reuse (:mod:`.pages`,
-DESIGN.md §10); the dense path remains the default and the fallback
-for models whose cache layout doesn't support paging.
-
-``spec=SpecConfig(k=..., draft=...)`` turns each decode step into a
-speculative cycle (:mod:`.spec`, DESIGN.md §12): the draft proposes
-``k`` tokens, the target verifies all ``k+1`` positions in one span
-forward, and the jitted accept/resample rule keeps greedy output
-token-for-token identical to non-speculative serving while emitting up
-to ``k+1`` tokens per step.  Models without the span-write decode path
-decline via ``supports_spec()`` and serve non-speculatively.
+``clock=`` injects the deadline clock (default ``time.time``) — one
+seam for EDF-expiry tests and the open-loop traffic harness
+(:mod:`.loadgen`) instead of per-test monkeypatching.  ``serve()`` also
+accepts a ``feed`` (an :class:`.loadgen.ArrivalFeed` or anything with
+``poll``/``pending``/``next_time``): requests are then admitted as
+their arrival times pass instead of all up front.
 """
 from __future__ import annotations
 
-import dataclasses
 import inspect
 import time
-from typing import Callable, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -58,62 +56,29 @@ import numpy as np
 from repro.dist.sharding import (SERVE_DECODE_RULES, SERVE_PREFILL_RULES,
                                  axis_rules, shard_hint, tree_hint,
                                  tree_shardings)
+from .admission import AdmissionPipeline, ServeRun
 from .buckets import bucket_for, default_buckets
-from .cache_ops import (copy_page, merge_slots, scatter_prefill_pages,
-                        truncate_slot, write_slot)
-from .pages import PagePool, block_hashes
+from .cache_ops import truncate_slot
 from .sampler import policy_in_use, sample_tokens
+from .slots import Request, SlotTable, TraceCounter, empty_tokens
+from .stepper import DenseStepper, PagedStepper
 
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray           # (T,) int32
-    max_new_tokens: int = 32
-    temperature: float = 0.0     # 0 => greedy
-    top_k: int = 0               # 0 => disabled
-    top_p: float = 0.0           # 0 or >= 1 => disabled (nucleus)
-    deadline: Optional[float] = None   # absolute time.time() cutoff
-    on_token: Optional[Callable[[int, int], None]] = None
-    on_finish: Optional[Callable[[int, np.ndarray], None]] = None
-    out_tokens: Optional[list] = None
-
-
-class TraceCounter:
-    """Wraps a jitted callable; counts calls and distinct input
-    shape/dtype signatures (== XLA traces for a jit with no static
-    args).  The serving tests assert prefill traces <= bucket count."""
-
-    def __init__(self, fn):
-        self.fn = fn
-        self.calls = 0
-        self._sigs = set()
-
-    def __call__(self, *args):
-        self.calls += 1
-        sig = tuple(
-            (leaf.shape, str(leaf.dtype))
-            for leaf in jax.tree_util.tree_leaves(args)
-            if hasattr(leaf, "shape"))
-        self._sigs.add(sig)
-        return self.fn(*args)
-
-    @property
-    def traces(self) -> int:
-        return len(self._sigs)
+__all__ = ["Request", "ServeEngine", "TraceCounter"]
 
 
 def _empty() -> np.ndarray:
-    return np.zeros((0,), np.int32)
+    return empty_tokens()
 
 
 class ServeEngine:
     def __init__(self, model, params, *, n_slots: int = 4,
                  max_len: int = 512, buckets=None, rng_seed: int = 0,
                  paged: bool = False, page_size: int = 16,
-                 n_pages: Optional[int] = None, spec=None, mesh=None):
+                 n_pages: Optional[int] = None, spec=None, mesh=None,
+                 prefill_chunk="auto", clock=None):
         self.model = model
         self.mesh = mesh
+        self.clock = clock if clock is not None else time.time
         # serve-time sharding (DESIGN.md §13): with a mesh, weights are
         # laid out tensor-parallel once at admission-to-engine time —
         # QuantizedTensor codes *and* scales split on the same logical
@@ -144,44 +109,26 @@ class ServeEngine:
         self._key = jax.random.PRNGKey(rng_seed)
         self._rng_step = 0
 
-        # jitted entry points (TraceCounter feeds metrics()["*_traces"]).
-        # Each is pinned to one rule regime: the axis_rules context is
-        # (re-)entered around every call so the trace — whenever it
-        # happens — always sees the same table.
-        self._prefill1 = TraceCounter(
-            self._jit(model.prefill, SERVE_PREFILL_RULES))
-        self._prefill_admit = TraceCounter(
-            self._jit(self._prefill_admit_fn, SERVE_PREFILL_RULES))
-        self._admit_one = TraceCounter(
-            self._jit(self._admit_one_fn, SERVE_PREFILL_RULES))
-        self._decode = TraceCounter(
-            self._jit(self._decode_fn, SERVE_DECODE_RULES))
-        self._sample = self._jit(sample_tokens, SERVE_DECODE_RULES)
+        # chunked prefill: "auto" = second-largest bucket (disabled when
+        # the grid has one bucket — nothing to chunk to); 0/None =
+        # monolithic; an explicit chunk rounds *up* to the bucket grid so
+        # chunking never adds a compile beyond the existing buckets.
+        # Requires prompt_len prefill (the fallback path admits exact
+        # lengths and cannot teacher-force through the batched step).
+        if not self._supports_plen or not prefill_chunk:
+            self.prefill_chunk = None
+        elif prefill_chunk == "auto":
+            self.prefill_chunk = (self.buckets[-2]
+                                  if len(self.buckets) > 1 else None)
+        else:
+            self.prefill_chunk = bucket_for(self.buckets,
+                                            int(prefill_chunk))
 
-        if self.paged:
-            self.page_size = page_size
-            self.pages_per_slot = -(-max_len // page_size)
-            # default capacity guarantees admission can never deadlock:
-            # every slot can hold a full max_len sequence (+1 trash page)
-            self.n_pages = (int(n_pages) if n_pages
-                            else 1 + n_slots * self.pages_per_slot)
-            self.pool = PagePool(self.n_pages, page_size)
-            # persistent across serve() calls so the prefix index keeps
-            # paying off between bursts; with a mesh the page stores are
-            # sharded on the head axis (page tables stay replicated)
-            self._store_axes = (model.paged_cache_axes()
-                                if hasattr(model, "paged_cache_axes")
-                                else None)
-            self._store = self._place(
-                model.init_paged_cache(self.n_pages, page_size),
-                self._store_axes)
-            self._prefill_paged = TraceCounter(
-                self._jit(self._prefill_paged_fn, SERVE_PREFILL_RULES))
-            self._decode_paged = TraceCounter(
-                self._jit(self._decode_paged_fn, SERVE_DECODE_RULES))
-            self._scatter_pages = self._jit(scatter_prefill_pages,
-                                            SERVE_DECODE_RULES)
-            self._copy_page = self._jit(copy_page, SERVE_DECODE_RULES)
+        # the stepper owns the jitted entry points and device cache
+        # state; TraceCounter-wrapped so metrics() reports "*_traces"
+        self._stepper = (PagedStepper(self, page_size, n_pages)
+                         if self.paged else DenseStepper(self))
+        self._sample = self._jit(sample_tokens, SERVE_DECODE_RULES)
 
         # speculative decoding (DESIGN.md §12): spec is a SpecConfig with
         # a draft source; models without the span-write decode path fall
@@ -193,11 +140,62 @@ class ServeEngine:
             self._spec = SpecRunner(self, spec)
             self._truncate = self._jit(truncate_slot, SERVE_DECODE_RULES)
 
+        self._admission = AdmissionPipeline(self)
         self._m = dict(tokens_generated=0, decode_steps=0, prefill_batches=0,
                        admitted=0, completed=0, expired=0, truncated=0,
                        prefix_hits=0, prefix_hit_tokens=0, fill_steps=0,
-                       serve_time_s=0.0)
+                       chunked_admissions=0, serve_time_s=0.0)
         self._req_stats: dict = {}   # rid -> dict(tokens=..., steps=...)
+
+    # -- stepper state (back-compat attribute surface) -----------------------
+    @property
+    def _prefill1(self):
+        return self._stepper._prefill1
+
+    @property
+    def _prefill_admit(self):
+        return self._stepper._prefill_admit
+
+    @property
+    def _admit_one(self):
+        return self._stepper._admit_one
+
+    @property
+    def _decode(self):
+        return self._stepper._decode
+
+    def _paged_stepper(self) -> PagedStepper:
+        if not self.paged:
+            raise AttributeError("dense engine has no paged state")
+        return self._stepper
+
+    @property
+    def pool(self):
+        return self._paged_stepper().pool
+
+    @property
+    def _store(self):
+        return self._paged_stepper().store
+
+    @property
+    def page_size(self):
+        return self._paged_stepper().page_size
+
+    @property
+    def pages_per_slot(self):
+        return self._paged_stepper().pages_per_slot
+
+    @property
+    def n_pages(self):
+        return self._paged_stepper().n_pages
+
+    @property
+    def _prefill_paged(self):
+        return self._paged_stepper()._prefill_paged
+
+    @property
+    def _decode_paged(self):
+        return self._paged_stepper()._decode_paged
 
     # -- mesh plumbing -------------------------------------------------------
     def _jit(self, fn, rules):
@@ -231,11 +229,6 @@ class ServeEngine:
             return cache
         return tree_hint(cache, self._cache_axes)
 
-    def _hint_store(self, store):
-        if self.mesh is None or self._store_axes is None:
-            return store
-        return tree_hint(store, self._store_axes)
-
     @staticmethod
     def _gathered(step_logits):
         """Replicate one step's (B, V) logits before sampling.  The
@@ -244,89 +237,6 @@ class ServeEngine:
         argmax/sampling then runs replicated with no further collectives.
         Identity without an active mesh."""
         return shard_hint(step_logits, "batch", None)
-
-    # -- jitted bodies -------------------------------------------------------
-    def _prefill_admit_fn(self, params, tokens, prompt_len, cache,
-                          admit_mask, temps, top_k, top_p, key, slot_last):
-        """Batched bucketed prefill + admission + first-token sampling.
-
-        tokens (n_slots, bucket) is slot-aligned: row s is the prompt
-        admitted into slot s (rows with admit_mask False are dummies).
-        """
-        scratch = self.model.init_cache(self.n_slots, self.max_len)
-        logits, new = self.model.prefill(params, tokens, scratch, prompt_len)
-        merged = self._hint_cache(merge_slots(cache, new, admit_mask))
-        first = sample_tokens(self._gathered(logits[:, 0]), temps, top_k,
-                              key, top_p)
-        slot_last = jnp.where(admit_mask, first, slot_last)
-        return slot_last, merged
-
-    def _admit_one_fn(self, params, tokens, cache, slot, temps, top_k,
-                      top_p, key, slot_last):
-        """Fallback admission: exact-length batch-1 prefill, written into
-        the batched cache by one per-slot dynamic_update_index_in_dim op
-        (slot is traced — a single compile serves every slot)."""
-        c1 = self.model.init_cache(1, self.max_len)
-        logits, c1 = self.model.prefill(params, tokens, c1)
-        merged = self._hint_cache(write_slot(cache, c1, slot))
-        first = sample_tokens(self._gathered(logits[:, 0]), temps, top_k,
-                              key, top_p)
-        slot_last = jax.lax.dynamic_update_index_in_dim(
-            slot_last, first[0], slot, 0)
-        return slot_last, merged
-
-    def _decode_fn(self, params, cache, slot_last, active, temps, top_k,
-                   top_p, key):
-        """One decode step with inactive slots masked.
-
-        Inactive slots still flow through the batched matmuls (shape
-        stability) but their ``len`` is restored afterwards and their
-        in-bounds scratch write lands at a position attention masks out —
-        a dead slot's cache length can never pass ``max_len``."""
-        old_len = cache["len"]
-        safe_len = jnp.where(active, old_len,
-                             jnp.minimum(old_len, self.max_len - 1))
-        cache = dict(cache, len=safe_len)
-        logits, cache = self.model.decode_step(params, cache,
-                                               slot_last[:, None])
-        cache = dict(cache, len=jnp.where(active, cache["len"], old_len))
-        cache = self._hint_cache(cache)
-        nxt = sample_tokens(self._gathered(logits[:, 0]), temps, top_k,
-                            key, top_p)
-        nxt = jnp.where(active, nxt, slot_last)
-        return nxt, cache
-
-    def _prefill_paged_fn(self, params, tokens, prompt_len, admit_mask,
-                          temps, top_k, top_p, key, slot_last):
-        """Bucketed batched prefill for the paged path: fills a dense
-        *scratch* cache sized to the bucket (padded up to a page
-        multiple), samples first tokens, and returns the scratch for the
-        host to scatter into freshly allocated pages.  Unlike the dense
-        path there is no merge — the persistent cache is the page store.
-        """
-        t = tokens.shape[1]
-        s_pages = -(-t // self.page_size) * self.page_size
-        scratch = self.model.init_cache(self.n_slots, s_pages)
-        logits, new = self.model.prefill(params, tokens, scratch, prompt_len)
-        new = self._hint_cache(new)
-        first = sample_tokens(self._gathered(logits[:, 0]), temps, top_k,
-                              key, top_p)
-        slot_last = jnp.where(admit_mask, first, slot_last)
-        return slot_last, new
-
-    def _decode_paged_fn(self, params, store, page_table, lens, slot_last,
-                         active, temps, top_k, top_p, key):
-        """One decode step against the page store.  ``lens`` is the
-        host-managed per-slot valid length (already clamped for retired
-        slots); retired slots' page-table rows point at the trash page,
-        so their masked write can never touch a live page."""
-        logits, store = self.model.decode_step_paged(
-            params, store, slot_last[:, None], page_table, lens)
-        store = self._hint_store(store)
-        nxt = sample_tokens(self._gathered(logits[:, 0]), temps, top_k,
-                            key, top_p)
-        nxt = jnp.where(active, nxt, slot_last)
-        return nxt, store
 
     # -- helpers -------------------------------------------------------------
     def _next_key(self):
@@ -364,7 +274,7 @@ class ServeEngine:
         self._check_prompt(request)
         if request.max_new_tokens <= 0:
             return _empty()
-        t0 = time.time()
+        t0 = self.clock()
         cache = self._place(self.model.init_cache(1, self.max_len),
                             self._cache_axes)
         tok = jnp.asarray(np.asarray(request.prompt, np.int32))[None]
@@ -384,12 +294,13 @@ class ServeEngine:
             self._m["decode_steps"] += 1
             out.append(int(nxt[0]))
         self._m["tokens_generated"] += len(out)
-        self._m["serve_time_s"] += time.time() - t0
+        self._m["serve_time_s"] += self.clock() - t0
         return np.asarray(out, np.int32)
 
+    # -- per-request accounting ----------------------------------------------
     def _handle_immediate(self, req: Request, results: dict) -> bool:
         """True if the request completes without ever taking a slot."""
-        if req.deadline is not None and time.time() > req.deadline:
+        if req.deadline is not None and self.clock() > req.deadline:
             results[req.rid] = _empty()
             self._m["expired"] += 1
             if req.on_finish:
@@ -424,9 +335,47 @@ class ServeEngine:
         return {rid: s["tokens"] / max(s["steps"], 1)
                 for rid, s in self._req_stats.items()}
 
-    # -- batched continuous path ---------------------------------------------
-    def serve(self, requests: List[Request]) -> dict:
-        """Run all requests to completion with slot-based batching.
+    def _admit_bind(self, run: ServeRun, req: Request, s: int):
+        """Bind + engine-level admission accounting (shared by every
+        admission strategy)."""
+        run.st.bind(req, s)
+        self._m["admitted"] += 1
+        self._req_stats[req.rid] = dict(tokens=0, steps=0)
+        if self._spec is not None:
+            self._spec.admit_slot(s, req.prompt)
+        if req.on_admit:
+            req.on_admit(req.rid)
+
+    def _post_admit(self, run: ServeRun, req: Request, s: int, tok: int):
+        """First-token emission for a fully-prefilled admission (chunked
+        admissions emit nothing until their fill drains)."""
+        self._count_step(req.rid)
+        self._emit(req, tok)
+        self._finish_checks(run, req, s, None)
+
+    def _finish(self, run: ServeRun, s: int, counter: str = "completed"):
+        st = run.st
+        req = st.req[s]
+        out = np.asarray(req.out_tokens, np.int32)
+        run.results[req.rid] = out
+        self._m[counter] += 1
+        st.clear(s)
+        self._stepper.retire(st, s)
+        if req.on_finish:
+            req.on_finish(req.rid, out)
+
+    def _finish_checks(self, run: ServeRun, req: Request, s: int, now):
+        if len(req.out_tokens) >= req.max_new_tokens:
+            self._finish(run, s)
+        elif now is not None and req.deadline is not None \
+                and now > req.deadline:
+            self._finish(run, s, counter="truncated")
+        elif run.st.slot_len[s] >= self.max_len:
+            self._finish(run, s, counter="truncated")
+
+    # -- unified continuous-batching loop ------------------------------------
+    def serve(self, requests: List[Request] = (), *, feed=None) -> dict:
+        """Run requests to completion with slot-based batching.
 
         Returns {rid: np.ndarray of generated tokens}.  Requests with
         ``max_new_tokens=0`` complete immediately with an empty sequence;
@@ -434,214 +383,121 @@ class ServeEngine:
         with an empty sequence; a running request whose deadline passes
         mid-decode is truncated at the tokens produced so far.
 
-        With ``paged=True`` (and a model whose cache layout supports it)
-        the same contract is served from the paged KV cache."""
+        One loop serves both cache kinds: the dense block and the paged
+        pool differ only in the stepper plugged into the engine.  With
+        ``feed`` (open-loop traffic), arrivals whose time has passed are
+        polled into the queue every iteration and the loop idles —
+        without busy-spinning the decode step — until the feed drains.
+        """
         self._req_stats = {}         # per-serve scope (no unbounded growth)
-        if self.paged:
-            return self._serve_paged(requests)
-        t0 = time.time()
+        t0 = self.clock()
         for r in requests:
             self._check_prompt(r)
-        queue = list(requests)
-        results: dict = {}
+        run = ServeRun(self, requests)
+        st = run.st
+        self._stepper.begin()
 
-        n = self.n_slots
-        cache = self._place(self.model.init_cache(n, self.max_len),
-                            self._cache_axes)
-        slot_req: List[Optional[Request]] = [None] * n
-        slot_last = jnp.zeros((n,), jnp.int32)
-        slot_len = np.zeros(n, np.int64)      # host mirror of cache["len"]
-        temps = np.zeros(n, np.float32)
-        top_k = np.zeros(n, np.int32)
-        top_p = np.zeros(n, np.float32)
-        active = np.zeros(n, bool)
-
-        def finish(s: int, counter: str = "completed"):
-            req = slot_req[s]
-            out = np.asarray(req.out_tokens, np.int32)
-            results[req.rid] = out
-            self._m[counter] += 1
-            slot_req[s] = None
-            active[s] = False
-            if req.on_finish:
-                req.on_finish(req.rid, out)
-
-        def handle_immediate(req: Request) -> bool:
-            return self._handle_immediate(req, results)
-
-        def emit(req: Request, tok: int):
-            self._emit(req, tok)
-
-        def admit(group, free):
-            nonlocal slot_last, cache
-            for req, s in zip(group, free):
-                req.out_tokens = []
-                slot_req[s] = req
-                active[s] = True
-                temps[s] = req.temperature
-                top_k[s] = req.top_k
-                top_p[s] = req.top_p
-                slot_len[s] = len(req.prompt)
-                self._m["admitted"] += 1
-                self._req_stats[req.rid] = dict(tokens=0, steps=0)
-                if self._spec is not None:
-                    self._spec.admit_slot(s, req.prompt)
-
-        def post_admit(req, s, first_tok):
-            self._count_step(req.rid)
-            emit(req, first_tok)
-            if len(req.out_tokens) >= req.max_new_tokens:
-                finish(s)
-            elif slot_len[s] >= self.max_len:
-                finish(s, counter="truncated")  # cache already full
-
-        def fill_slots():
-            nonlocal slot_last, cache
-            while True:
-                free = [s for s in range(n) if slot_req[s] is None]
-                if not free or not queue:
-                    return
-                if not self._supports_plen:
-                    req = None
-                    while queue:
-                        cand = queue.pop(0)
-                        if not handle_immediate(cand):
-                            req = cand
-                            break
-                    if req is None:
-                        continue
-                    s = free[0]
-                    admit([req], [s])
-                    slot_last, cache = self._admit_one(
-                        self.params,
-                        jnp.asarray(np.asarray(req.prompt, np.int32))[None],
-                        cache, jnp.asarray(s, jnp.int32),
-                        *self._policy_args([req.temperature], [req.top_k],
-                                           [req.top_p]),
-                        self._next_key(), slot_last)
-                    self._m["prefill_batches"] += 1
-                    post_admit(req, s, int(np.asarray(slot_last)[s]))
+        while True:
+            if feed is not None:
+                for r in feed.poll(self.clock()):
+                    self._check_prompt(r)
+                    run.queue.append(r)
+            if run.queue and st.free():
+                self._admission.fill_slots(run)
+            if not st.any_active():
+                if feed is not None and feed.pending():
+                    self._idle_wait(feed)
                     continue
-
-                # bucketed batched admission: group FIFO-ordered waiting
-                # requests that share the head request's bucket
-                while queue and handle_immediate(queue[0]):
-                    queue.pop(0)
-                if not queue:
-                    continue
-                b = bucket_for(self.buckets, len(queue[0].prompt))
-                group = []
-                i = 0
-                while i < len(queue) and len(group) < len(free):
-                    r = queue[i]
-                    if handle_immediate(r):
-                        queue.pop(i)
-                        continue
-                    if bucket_for(self.buckets, len(r.prompt)) == b:
-                        group.append(queue.pop(i))
-                        continue
-                    i += 1
-                if not group:
-                    continue
-                tokens = np.zeros((n, b), np.int32)
-                plen = np.ones(n, np.int32)
-                admit_mask = np.zeros(n, bool)
-                targets = free[:len(group)]
-                for req, s in zip(group, targets):
-                    p = np.asarray(req.prompt, np.int32)
-                    tokens[s, :len(p)] = p
-                    plen[s] = len(p)
-                    admit_mask[s] = True
-                admit(group, targets)
-                slot_last, cache = self._prefill_admit(
-                    self.params, jnp.asarray(tokens), jnp.asarray(plen),
-                    cache, jnp.asarray(admit_mask),
-                    *self._policy_args(temps, top_k, top_p),
-                    self._next_key(), slot_last)
-                self._m["prefill_batches"] += 1
-                toks = np.asarray(slot_last)
-                for req, s in zip(group, targets):
-                    post_admit(req, s, int(toks[s]))
-
-        fill_slots()
-        while active.any():
-            k_eff = self._spec_k(slot_len, active, slot_req)
+                if run.queue:
+                    continue    # immediates drained; re-admit
+                break
+            k_eff = self._spec_k(st.slot_len, st.active, st.req,
+                                 filling=st.filling())
             if k_eff >= 1:
-                # speculative cycle: draft k_eff, verify k_eff+1, roll
-                # back rejected suffixes by republishing host lengths
-                lens_safe = np.where(
-                    active, slot_len,
-                    np.minimum(slot_len, self.max_len - (k_eff + 1)))
-                out, n_acc, cache = self._spec.run_cycle_dense(
-                    cache, jnp.asarray(lens_safe.astype(np.int32)),
-                    slot_last, jnp.asarray(active), temps, top_k, top_p,
-                    self._next_key(), k_eff)
-                self._m["decode_steps"] += 1
-                last_np = np.asarray(slot_last).copy()
-                now = time.time()
-                for s in range(n):
-                    req = slot_req[s]
-                    if req is None or not active[s]:
-                        continue
-                    self._count_step(req.rid)
-                    consumed = 0
-                    for i in range(int(n_acc[s]) + 1):
-                        consumed = i + 1
-                        slot_len[s] += 1
-                        assert slot_len[s] <= self.max_len, \
-                            f"slot {s}: cache len {slot_len[s]} > max_len"
-                        last_np[s] = int(out[s, i])
-                        emit(req, int(out[s, i]))
-                        if len(req.out_tokens) >= req.max_new_tokens:
-                            finish(s)
-                            break
-                        elif req.deadline is not None and now > req.deadline:
-                            finish(s, counter="truncated")
-                            break
-                        elif slot_len[s] >= self.max_len:
-                            finish(s, counter="truncated")
-                            break
-                    # draft proposals that reached the output (position
-                    # n_acc is the correction/bonus, not a proposal)
-                    self._spec.m["emitted_draft_tokens"] += \
-                        min(consumed, int(n_acc[s]))
-                slot_last = jnp.asarray(last_np)
-                cache = self._truncate(
-                    cache, jnp.asarray(slot_len.astype(np.int32)))
+                self._spec_step(run, k_eff)
             else:
-                if self._spec is not None:
-                    # keep the independent draft's KV aligned through
-                    # plain fallback steps (self-draft shares the cache)
-                    self._spec.track_step(
-                        slot_last,
-                        np.where(active, slot_len,
-                                 np.minimum(slot_len, self.max_len - 1)))
-                slot_last, cache = self._decode(
-                    self.params, cache, slot_last, jnp.asarray(active),
-                    *self._policy_args(temps, top_k, top_p),
-                    self._next_key())
-                self._m["decode_steps"] += 1
-                toks = np.asarray(slot_last)
-                now = time.time()
-                for s in range(n):
-                    req = slot_req[s]
-                    if req is None or not active[s]:
-                        continue
-                    self._count_step(req.rid)
-                    slot_len[s] += 1
-                    assert slot_len[s] <= self.max_len, \
-                        f"slot {s}: cache len {slot_len[s]} > max_len"
-                    emit(req, int(toks[s]))
-                    if len(req.out_tokens) >= req.max_new_tokens:
-                        finish(s)
-                    elif req.deadline is not None and now > req.deadline:
-                        finish(s, counter="truncated")
-                    elif slot_len[s] >= self.max_len:
-                        finish(s, counter="truncated")
-            if queue and any(r is None for r in slot_req):
-                fill_slots()
-        self._m["serve_time_s"] += time.time() - t0
-        return results
+                self._plain_step(run)
+        self._m["serve_time_s"] += self.clock() - t0
+        return run.results
+
+    def _idle_wait(self, feed):
+        """No active slots but arrivals still pending: sleep (real time,
+        capped small so fake clocks can't wedge the loop) until the next
+        scheduled arrival."""
+        nxt = feed.next_time()
+        if nxt is None:
+            time.sleep(2e-4)
+            return
+        time.sleep(min(max(nxt - self.clock(), 0.0), 5e-3))
+
+    def _plain_step(self, run: ServeRun):
+        """One masked decode step + shared post-step bookkeeping
+        (teacher-forced fill consumption, emission, finish checks)."""
+        st = run.st
+        self._stepper.plain_step(st)
+        self._m["decode_steps"] += 1
+        toks = np.asarray(st.slot_last)
+        now = self.clock()
+        for s in range(self.n_slots):
+            req = st.req[s]
+            if req is None or not st.active[s]:
+                continue
+            self._count_step(req.rid)
+            st.slot_len[s] += 1
+            assert st.slot_len[s] <= self.max_len, \
+                f"slot {s}: cache len {st.slot_len[s]} > max_len"
+            if st.fill[s] is not None:
+                self._m["fill_steps"] += 1
+                st.fill[s] = st.fill[s][1:]
+                if len(st.fill[s]):
+                    if req.deadline is not None and now > req.deadline:
+                        self._finish(run, s, counter="truncated")
+                    continue        # still prefilling this slot
+                # fill done: this step consumed the last prompt token,
+                # so the sampled token is the first output
+                st.fill[s] = None
+                self._stepper.fill_done(st, s)
+            self._emit(req, int(toks[s]))
+            self._finish_checks(run, req, s, now)
+
+    def _spec_step(self, run: ServeRun, k_eff: int):
+        """One speculative draft+verify burst + shared emission loop;
+        rejected suffixes roll back through the stepper hooks."""
+        st = run.st
+        out, n_acc = self._stepper.spec_cycle(st, k_eff)
+        self._m["decode_steps"] += 1
+        last_np = np.asarray(st.slot_last).copy()
+        now = self.clock()
+        for s in range(self.n_slots):
+            req = st.req[s]
+            if req is None or not st.active[s]:
+                continue
+            self._count_step(req.rid)
+            consumed = 0
+            for i in range(int(n_acc[s]) + 1):
+                consumed = i + 1
+                st.slot_len[s] += 1
+                assert st.slot_len[s] <= self.max_len, \
+                    f"slot {s}: cache len {st.slot_len[s]} > max_len"
+                last_np[s] = int(out[s, i])
+                self._emit(req, int(out[s, i]))
+                if len(req.out_tokens) >= req.max_new_tokens:
+                    self._finish(run, s)
+                    break
+                elif req.deadline is not None and now > req.deadline:
+                    self._finish(run, s, counter="truncated")
+                    break
+                elif st.slot_len[s] >= self.max_len:
+                    self._finish(run, s, counter="truncated")
+                    break
+            # draft proposals that reached the output (position n_acc is
+            # the correction/bonus, not a proposal)
+            self._spec.m["emitted_draft_tokens"] += \
+                min(consumed, int(n_acc[s]))
+            if st.active[s]:
+                self._stepper.post_spec_slot(st, s)
+        st.slot_last = jnp.asarray(last_np)
+        self._stepper.spec_rollback(st)
 
     def _spec_k(self, slot_len, active, slot_req, filling=()) -> int:
         """Draft depth for this iteration: the configured k shrunk to
@@ -652,8 +508,8 @@ class ServeEngine:
         for and thrown away, so the depth tracks what can still be
         emitted (slots below the max just drop their surplus, which is
         cheap).  0 means "run a plain decode step" — near-capacity
-        slots and prompt-filling paged slots keep the exact truncation
-        semantics of non-speculative serving."""
+        slots and prompt-filling slots (chunked or prefix-hit) keep the
+        exact truncation semantics of non-speculative serving."""
         if self._spec is None or any(filling):
             return 0
         room = min(self.max_len - int(slot_len[s])
@@ -661,329 +517,6 @@ class ServeEngine:
         budget = max(slot_req[s].max_new_tokens - len(slot_req[s].out_tokens)
                      for s in range(self.n_slots) if active[s])
         return max(0, min(self._spec.cfg.k, room - 1, budget - 1))
-
-    # -- paged continuous path -----------------------------------------------
-    def _serve_paged(self, requests: List[Request]) -> dict:
-        """Continuous batching over the paged KV cache (DESIGN.md §10).
-
-        Same external contract as the dense ``serve()`` — results are
-        token-for-token identical — but the persistent cache is a pool
-        of fixed-size pages:
-
-        * admission consults the prefix index; fully-cached leading
-          blocks map to shared physical pages (refcounted) and their
-          prefill is skipped entirely,
-        * the uncached prompt remainder streams through the jitted
-          decode step (teacher-forced chunk-1 chunked prefill) while
-          other slots keep decoding in the same batch,
-        * prompts with no cached prefix go through the bucketed batched
-          prefill into a bucket-sized scratch, scattered into freshly
-          allocated pages, and their full blocks are published to the
-          prefix index,
-        * any write into a shared page is preceded by a host-side
-          copy-on-write, and retiring a slot releases its page refs
-          (index-held pages survive for cross-request reuse).
-        """
-        t0 = time.time()
-        for r in requests:
-            self._check_prompt(r)
-        queue = list(requests)
-        results: dict = {}
-
-        n, ps = self.n_slots, self.page_size
-        pool = self.pool
-        # prompt hashes are deterministic per request — compute once, not
-        # once per fill_slots pass (admission runs in the decode loop)
-        hash_cache: dict = {}
-
-        def hashes_of(req: Request) -> list:
-            key = id(req)
-            if key not in hash_cache:
-                hash_cache[key] = block_hashes(req.prompt, ps)
-            return hash_cache[key]
-        table = np.full((n, self.pages_per_slot), PagePool.TRASH, np.int32)
-        slot_req: List[Optional[Request]] = [None] * n
-        slot_last = jnp.zeros((n,), jnp.int32)
-        slot_len = np.zeros(n, np.int64)
-        fill: List[Optional[np.ndarray]] = [None] * n  # prompt tail to feed
-        slot_hashes: List[Optional[list]] = [None] * n
-        temps = np.zeros(n, np.float32)
-        top_k = np.zeros(n, np.int32)
-        top_p = np.zeros(n, np.float32)
-        active = np.zeros(n, bool)
-
-        def release(s: int):
-            for j in range(self.pages_per_slot):
-                if table[s, j] != PagePool.TRASH:
-                    pool.decref(int(table[s, j]))
-                    table[s, j] = PagePool.TRASH
-
-        def finish(s: int, counter: str = "completed"):
-            req = slot_req[s]
-            out = np.asarray(req.out_tokens, np.int32)
-            results[req.rid] = out
-            self._m[counter] += 1
-            slot_req[s] = None
-            active[s] = False
-            fill[s] = None
-            slot_hashes[s] = None
-            release(s)
-            if req.on_finish:
-                req.on_finish(req.rid, out)
-
-        def ensure_writable(s: int, pos: int):
-            """Make the page holding position ``pos`` safe for slot
-            ``s`` to write: allocate if unmapped, copy-on-write if
-            shared with another slot or the prefix index."""
-            lp = pos // ps
-            phys = int(table[s, lp])
-            if phys == PagePool.TRASH:
-                table[s, lp] = pool.alloc()
-            elif pool.is_shared(phys):
-                fresh = pool.alloc()
-                self._store = self._copy_page(self._store, phys, fresh)
-                pool.decref(phys)
-                table[s, lp] = fresh
-                pool.cow_copies += 1
-
-        def register_prompt_pages(s: int):
-            """Publish the slot's full prompt blocks for future reuse
-            (the index takes its own ref; partial tail blocks and
-            generated-token pages are never shared)."""
-            for j in range(len(slot_req[s].prompt) // ps):
-                pool.register(slot_hashes[s][j], int(table[s, j]))
-
-        def admit(req: Request, s: int):
-            req.out_tokens = []
-            slot_req[s] = req
-            active[s] = True
-            temps[s] = req.temperature
-            top_k[s] = req.top_k
-            top_p[s] = req.top_p
-            self._m["admitted"] += 1
-            self._req_stats[req.rid] = dict(tokens=0, steps=0)
-            if self._spec is not None:
-                self._spec.admit_slot(s, req.prompt)
-
-        def finish_checks(req: Request, s: int, now=None):
-            if len(req.out_tokens) >= req.max_new_tokens:
-                finish(s)
-            elif now is not None and req.deadline is not None \
-                    and now > req.deadline:
-                finish(s, counter="truncated")
-            elif slot_len[s] >= self.max_len:
-                finish(s, counter="truncated")
-
-        def fill_slots():
-            nonlocal slot_last
-            while True:
-                free = [s for s in range(n) if slot_req[s] is None]
-                if not free or not queue:
-                    return
-                while queue and self._handle_immediate(queue[0], results):
-                    queue.pop(0)
-                if not queue:
-                    continue
-                head = queue[0]
-                head_hashes = hashes_of(head)
-                if pool.lookup_blocks(head_hashes):
-                    # prefix hit: map the shared pages, skip their
-                    # prefill, stream the tail through decode
-                    queue.pop(0)
-                    s = free[0]
-                    matched = pool.match(head_hashes)
-                    npr = len(head.prompt)
-                    # always leave >= 1 token to process so the first
-                    # sampled token has logits; a fully-cached prompt
-                    # re-feeds its last token (the write into the shared
-                    # final page is what triggers copy-on-write)
-                    cached = min(len(matched) * ps, npr - 1)
-                    for j, phys in enumerate(matched):
-                        table[s, j] = phys
-                    admit(head, s)
-                    slot_hashes[s] = head_hashes
-                    slot_len[s] = cached
-                    fill[s] = np.asarray(head.prompt, np.int32)[cached:]
-                    self._m["prefix_hits"] += 1
-                    self._m["prefix_hit_tokens"] += cached
-                    continue
-
-                # no cached prefix: bucketed batched prefill.  Defer
-                # queued requests whose first block duplicates a group
-                # member's — next pass they hit the index instead of
-                # prefilling the same prefix twice.
-                b = bucket_for(self.buckets, len(head.prompt))
-                group, seen_block0 = [], set()
-                i = 0
-                while i < len(queue) and len(group) < len(free):
-                    r = queue[i]
-                    if self._handle_immediate(r, results):
-                        queue.pop(i)
-                        continue
-                    hs = hashes_of(r)
-                    if r is not head and hs and (
-                            pool.lookup_blocks(hs) or hs[0] in seen_block0):
-                        i += 1
-                        continue
-                    if bucket_for(self.buckets, len(r.prompt)) == b:
-                        group.append((queue.pop(i), hs))
-                        if hs:
-                            seen_block0.add(hs[0])
-                        continue
-                    i += 1
-                if not group:
-                    continue
-                tokens = np.zeros((n, b), np.int32)
-                plen = np.ones(n, np.int32)
-                admit_mask = np.zeros(n, bool)
-                targets = free[:len(group)]
-                for (req, hs), s in zip(group, targets):
-                    p = np.asarray(req.prompt, np.int32)
-                    tokens[s, :len(p)] = p
-                    plen[s] = len(p)
-                    admit_mask[s] = True
-                    admit(req, s)
-                    slot_hashes[s] = hs
-                    slot_len[s] = len(p)
-                slot_last, scratch = self._prefill_paged(
-                    self.params, jnp.asarray(tokens), jnp.asarray(plen),
-                    jnp.asarray(admit_mask),
-                    *self._policy_args(temps, top_k, top_p),
-                    self._next_key(), slot_last)
-                self._m["prefill_batches"] += 1
-                n_scratch_pages = -(-b // ps)
-                all_ids = np.full((len(group), n_scratch_pages),
-                                  PagePool.TRASH, np.int32)
-                for gi, ((req, hs), s) in enumerate(zip(group, targets)):
-                    npages = -(-len(req.prompt) // ps)
-                    phys = [pool.alloc() for _ in range(npages)]
-                    all_ids[gi, :npages] = phys
-                    table[s, :npages] = phys
-                self._store = self._scatter_pages(
-                    self._store, scratch,
-                    jnp.asarray(np.asarray(targets, np.int32)),
-                    jnp.asarray(all_ids))
-                for (req, hs), s in zip(group, targets):
-                    register_prompt_pages(s)
-                toks = np.asarray(slot_last)
-                for (req, hs), s in zip(group, targets):
-                    self._count_step(req.rid)
-                    self._emit(req, int(toks[s]))
-                    finish_checks(req, s)
-
-        fill_slots()
-        while active.any():
-            k_eff = self._spec_k(
-                slot_len, active, slot_req,
-                filling=[fill[s] is not None
-                         for s in range(n) if active[s]])
-            if k_eff >= 1:
-                # paged speculative cycle: pre-own the burst's pages
-                # (alloc / copy-on-write), draft+verify in one jitted
-                # call, then trim exclusively-owned rejected-suffix
-                # pages back to the pool
-                lens = np.minimum(slot_len, self.max_len - (k_eff + 1))
-                for s in range(n):
-                    if not active[s]:
-                        continue
-                    lens[s] = slot_len[s]
-                    for pos in range(int(slot_len[s]),
-                                     int(slot_len[s]) + k_eff + 1):
-                        ensure_writable(s, pos)
-                out, n_acc, self._store = self._spec.run_cycle_paged(
-                    self._store, jnp.asarray(table),
-                    jnp.asarray(lens.astype(np.int32)), slot_last,
-                    jnp.asarray(active), temps, top_k, top_p,
-                    self._next_key(), k_eff)
-                self._m["decode_steps"] += 1
-                last_np = np.asarray(slot_last).copy()
-                now = time.time()
-                for s in range(n):
-                    req = slot_req[s]
-                    if req is None or not active[s]:
-                        continue
-                    self._count_step(req.rid)
-                    consumed = 0
-                    for i in range(int(n_acc[s]) + 1):
-                        consumed = i + 1
-                        slot_len[s] += 1
-                        assert slot_len[s] <= self.max_len, \
-                            f"slot {s}: cache len {slot_len[s]} > max_len"
-                        last_np[s] = int(out[s, i])
-                        self._emit(req, int(out[s, i]))
-                        if len(req.out_tokens) >= req.max_new_tokens:
-                            finish(s)
-                            break
-                        elif req.deadline is not None and now > req.deadline:
-                            finish(s, counter="truncated")
-                            break
-                        elif slot_len[s] >= self.max_len:
-                            finish(s, counter="truncated")
-                            break
-                    self._spec.m["emitted_draft_tokens"] += \
-                        min(consumed, int(n_acc[s]))
-                    if active[s]:
-                        # rejected-suffix rollback: pages wholly past the
-                        # accepted depth were allocated (or COW'd) for
-                        # this burst and are exclusively owned — shared
-                        # prefix pages all sit below slot_len
-                        for j in range(self.pages_per_slot):
-                            phys = int(table[s, j])
-                            if phys != PagePool.TRASH \
-                                    and j * ps >= slot_len[s]:
-                                assert not pool.is_shared(phys)
-                                pool.decref(phys)
-                                table[s, j] = PagePool.TRASH
-                slot_last = jnp.asarray(last_np)
-            else:
-                sl = np.asarray(slot_last).copy()
-                lens = np.minimum(slot_len, self.max_len - 1)  # retired
-                for s in range(n):
-                    if not active[s]:
-                        continue
-                    lens[s] = slot_len[s]
-                    ensure_writable(s, int(slot_len[s]))
-                    if fill[s] is not None:
-                        sl[s] = fill[s][0]      # teacher-force the prompt
-                if self._spec is not None:
-                    # align the independent draft's KV through fill /
-                    # fallback steps (it sees the same token stream)
-                    self._spec.track_step(jnp.asarray(sl), lens)
-                slot_last, self._store = self._decode_paged(
-                    self.params, self._store, jnp.asarray(table),
-                    jnp.asarray(lens.astype(np.int32)), jnp.asarray(sl),
-                    jnp.asarray(active),
-                    *self._policy_args(temps, top_k, top_p),
-                    self._next_key())
-                self._m["decode_steps"] += 1
-                toks = np.asarray(slot_last)
-                now = time.time()
-                for s in range(n):
-                    req = slot_req[s]
-                    if req is None or not active[s]:
-                        continue
-                    self._count_step(req.rid)
-                    slot_len[s] += 1
-                    assert slot_len[s] <= self.max_len, \
-                        f"slot {s}: cache len {slot_len[s]} > max_len"
-                    if fill[s] is not None:
-                        self._m["fill_steps"] += 1
-                        fill[s] = fill[s][1:]
-                        if len(fill[s]):
-                            if req.deadline is not None \
-                                    and now > req.deadline:
-                                finish(s, counter="truncated")
-                            continue        # still prefilling this slot
-                        # fill done: this step consumed the last prompt
-                        # token, so the sampled token is the first output
-                        fill[s] = None
-                        register_prompt_pages(s)
-                    self._emit(req, int(toks[s]))
-                    finish_checks(req, s, now)
-            if queue and any(r is None for r in slot_req):
-                fill_slots()
-        self._m["serve_time_s"] += time.time() - t0
-        return results
 
     # -- observability -------------------------------------------------------
     def metrics(self) -> dict:
@@ -1002,6 +535,7 @@ class ServeEngine:
         m["decode_traces"] = self._decode.traces
         m["paged"] = self.paged
         m["mesh"] = dict(self.mesh.shape) if self.mesh is not None else None
+        m["prefill_chunk"] = self.prefill_chunk or 0
         if self.paged:
             counters += [self._prefill_paged, self._decode_paged]
             m["prefill_calls"] += self._prefill_paged.calls

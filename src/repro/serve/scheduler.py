@@ -21,6 +21,7 @@ from typing import Callable, Optional
 import numpy as np
 
 from .engine import Request, ServeEngine
+from .loadgen import ArrivalFeed, summarize
 
 
 class RunResult(dict):
@@ -30,9 +31,14 @@ class RunResult(dict):
     truncation counts, throughput, and (when the engine runs
     speculatively) ``accept_rate``/``tokens_per_step``/``draft_share``
     plus per-request ``tokens_per_step`` — so callers don't have to
-    reach into engine-level counters.
+    reach into engine-level counters.  Traffic runs
+    (:meth:`Scheduler.run_traffic`) additionally attach ``records`` —
+    per-request arrival/admit/first-token/finish timestamps — and a
+    ``traffic`` percentile report.
     """
     summary: dict = {}
+    records: dict = {}
+    traffic: dict = {}
 
 
 class Scheduler:
@@ -43,6 +49,12 @@ class Scheduler:
         self._heap: list = []
         self._seq = itertools.count()
         self.last_summary: dict = {}
+
+    @property
+    def clock(self):
+        """The engine's injectable deadline clock (one seam end-to-end:
+        deadlines, traffic timestamps, and serve timing all read it)."""
+        return self.engine.clock
 
     def submit(self, request: Request, *,
                deadline: Optional[float] = None,
@@ -111,6 +123,74 @@ class Scheduler:
                 spec_cycles=d("spec_cycles"),
                 spec_k=m["spec_k"],
                 draft_kind=m["draft_kind"])
+        self.last_summary = out.summary
+        return out
+
+    def run_traffic(self, trace) -> RunResult:
+        """Drive the engine with an open-loop arrival trace
+        (``[(arrival_offset_s, Request)]``, e.g. from
+        :func:`.loadgen.make_trace`).
+
+        Unlike :meth:`run`, requests are *not* all admitted up front:
+        an :class:`.loadgen.ArrivalFeed` releases each one as its
+        arrival time passes on the engine clock, so queueing is real.
+        Per-request arrival / admission / first-token / finish
+        timestamps are recorded and digested into p50/p95/p99 TTFT,
+        queue-delay, and per-token-latency percentiles
+        (``result.traffic``, raw records on ``result.records``)."""
+        clock = self.engine.clock
+        records: dict = {}
+        items = sorted(trace, key=lambda it: it[0])
+        for offset, req in items:
+            rec = records[req.rid] = dict(
+                scheduled=float(offset), arrival=None, admit=None,
+                first=None, end=None, tokens=0)
+            prev_admit = req.on_admit
+            prev_token = req.on_token
+            prev_finish = req.on_finish
+
+            def on_admit(rid, _rec=rec, _p=prev_admit):
+                _rec["admit"] = clock()
+                if _p:
+                    _p(rid)
+
+            def on_token(rid, tok, _rec=rec, _p=prev_token):
+                if _rec["first"] is None:
+                    _rec["first"] = clock()
+                _rec["tokens"] += 1
+                if _p:
+                    _p(rid, tok)
+
+            def on_finish(rid, out, _rec=rec, _p=prev_finish):
+                _rec["end"] = clock()
+                if _p:
+                    _p(rid, out)
+
+            req.on_admit = on_admit
+            req.on_token = on_token
+            req.on_finish = on_finish
+        feed = ArrivalFeed(
+            items,
+            record=lambda rid, t: records[rid].__setitem__("arrival", t))
+        m0 = self.engine.metrics()
+        out = RunResult()
+        out.update(self.engine.serve((), feed=feed))
+        m = self.engine.metrics()
+        d = lambda key: m[key] - m0[key]
+        tokens, steps = d("tokens_generated"), d("decode_steps")
+        dt = m["serve_time_s"] - m0["serve_time_s"]
+        out.summary = {
+            "requests": len(items),
+            "completed": d("completed"),
+            "expired": d("expired"),
+            "truncated": d("truncated"),
+            "tokens_generated": tokens,
+            "tokens_per_s": (tokens / dt) if dt > 0 else 0.0,
+            "tokens_per_step": tokens / max(steps, 1),
+            "spec": m["spec"],
+        }
+        out.records = records
+        out.traffic = summarize(records)
         self.last_summary = out.summary
         return out
 

@@ -1,0 +1,126 @@
+"""Slot-table state shared by every admission strategy and cache kind.
+
+The serving engine is slot-based continuous batching: ``n_slots`` fixed
+batch rows, each either free or bound to one in-flight
+:class:`Request`.  :class:`SlotTable` owns the *host-side* mirror of
+that binding — per-slot request pointers, sampling policy rows, the
+host-tracked cache lengths, the pending prompt tails of chunked
+admissions, and the per-slot prompt block hashes the paged prefix index
+keys on.  Device state (the dense cache block or the page store) lives
+in the stepper (:mod:`.stepper`); the engine's serve loop and the
+admission strategies (:mod:`.admission`) only ever talk to slots
+through this table, which is what lets dense and paged share one loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (T,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0     # 0 => greedy
+    top_k: int = 0               # 0 => disabled
+    top_p: float = 0.0           # 0 or >= 1 => disabled (nucleus)
+    deadline: Optional[float] = None   # absolute engine-clock cutoff
+    on_token: Optional[Callable[[int, int], None]] = None
+    on_finish: Optional[Callable[[int, np.ndarray], None]] = None
+    on_admit: Optional[Callable[[int], None]] = None
+    out_tokens: Optional[list] = None
+
+
+class TraceCounter:
+    """Wraps a jitted callable; counts calls and distinct input
+    shape/dtype signatures (== XLA traces for a jit with no static
+    args).  The serving tests assert prefill traces <= bucket count."""
+
+    def __init__(self, fn):
+        self.fn = fn
+        self.calls = 0
+        self._sigs = set()
+
+    def __call__(self, *args):
+        self.calls += 1
+        sig = tuple(
+            (leaf.shape, str(leaf.dtype))
+            for leaf in jax.tree_util.tree_leaves(args)
+            if hasattr(leaf, "shape"))
+        self._sigs.add(sig)
+        return self.fn(*args)
+
+    @property
+    def traces(self) -> int:
+        return len(self._sigs)
+
+
+def empty_tokens() -> np.ndarray:
+    return np.zeros((0,), np.int32)
+
+
+class SlotTable:
+    """Host-side slot <-> request state.
+
+    ``slot_len`` is the host mirror of each slot's valid cache length
+    (dense ``cache["len"]`` / paged page-table occupancy).  ``fill[s]``
+    is the not-yet-prefilled prompt tail of a chunked or prefix-hit
+    admission — while non-None the slot is teacher-forcing its prompt
+    through the decode step and emits nothing.  ``hashes[s]`` keeps the
+    prompt's block hashes for paged prefix-index registration.
+    """
+
+    def __init__(self, n: int):
+        self.n = n
+        self.req: List[Optional[Request]] = [None] * n
+        self.active = np.zeros(n, bool)
+        self.temps = np.zeros(n, np.float32)
+        self.top_k = np.zeros(n, np.int32)
+        self.top_p = np.zeros(n, np.float32)
+        self.slot_len = np.zeros(n, np.int64)
+        self.fill: List[Optional[np.ndarray]] = [None] * n
+        self.hashes: List[Optional[list]] = [None] * n
+        self.slot_last = jnp.zeros((n,), jnp.int32)
+
+    def free(self) -> List[int]:
+        return [s for s in range(self.n) if self.req[s] is None]
+
+    def any_active(self) -> bool:
+        return bool(self.active.any())
+
+    def bind(self, req: Request, s: int):
+        """Bind a request to slot ``s`` (policy rows + request pointer;
+        engine-level accounting stays in the engine)."""
+        req.out_tokens = []
+        self.req[s] = req
+        self.active[s] = True
+        self.temps[s] = req.temperature
+        self.top_k[s] = req.top_k
+        self.top_p[s] = req.top_p
+
+    def clear(self, s: int):
+        self.req[s] = None
+        self.active[s] = False
+        self.fill[s] = None
+        self.hashes[s] = None
+
+    def filling(self) -> List[bool]:
+        """Per-active-slot "still teacher-forcing its prompt" flags —
+        feeds the spec-depth decision (no speculative bursts while any
+        slot is mid-prompt)."""
+        return [self.fill[s] is not None
+                for s in range(self.n) if self.active[s]]
+
+    def input_tokens(self) -> np.ndarray:
+        """Next decode-step input per slot: the last sampled token,
+        with filling slots teacher-forced from their prompt tail."""
+        sl = np.asarray(self.slot_last).copy()
+        for s in range(self.n):
+            if self.active[s] and self.fill[s] is not None:
+                sl[s] = self.fill[s][0]
+        return sl

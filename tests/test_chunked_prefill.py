@@ -1,0 +1,109 @@
+"""Chunked prefill: serve == generate token-for-token across the
+fp16/kv8 × dense/paged × spec on/off matrix, with a forced-small chunk
+so every long prompt actually takes the chunked path, plus TraceCounter
+assertions that chunking adds no compiles beyond the bucket grid."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models.registry import build_model
+from repro.serve import Request, ServeEngine, SpecConfig, self_int8_draft
+
+
+@pytest.fixture(scope="module")
+def fp_setup():
+    cfg = ARCHS["llama3-8b"].tiny()
+    m = build_model(cfg)
+    return cfg, m, m.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def kv8_setup():
+    cfg = dataclasses.replace(ARCHS["llama3-8b"].tiny(), kv_cache_bits=8)
+    m = build_model(cfg)
+    return cfg, m, m.init(jax.random.PRNGKey(0))
+
+
+def _requests(cfg, seed=0):
+    # prompt lengths straddle the forced chunk (8): 5 (unchunked), and
+    # 17/26/31 (chunked, crossing several bucket boundaries)
+    rng = np.random.default_rng(seed)
+    lens = [5, 17, 26, 31]
+    return [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size, n)
+                    .astype(np.int32),
+                    max_new_tokens=5)
+            for i, n in enumerate(lens)]
+
+
+@pytest.mark.parametrize("cache", ["fp16", "kv8"])
+@pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+@pytest.mark.parametrize("spec", [False, True], ids=["plain", "spec"])
+def test_chunked_serve_matches_generate(cache, paged, spec, fp_setup,
+                                        kv8_setup):
+    cfg, m, params = fp_setup if cache == "fp16" else kv8_setup
+    kw = dict(n_slots=2, max_len=48, buckets=(8, 24), prefill_chunk=8)
+    if paged:
+        kw.update(paged=True, page_size=8)
+    if spec:
+        kw.update(spec=SpecConfig(k=2, draft=self_int8_draft(m, params)))
+    eng = ServeEngine(m, params, **kw)
+    assert eng.prefill_chunk == 8
+    reqs = _requests(cfg)
+    res = eng.serve(reqs)
+    mm = eng.metrics()       # snapshot before generate() pollutes counters
+    assert mm["chunked_admissions"] == 3
+    assert mm["fill_steps"] >= (17 - 8) + (26 - 8) + (31 - 8)
+    assert mm["completed"] == len(reqs)
+    # chunking rounds to the bucket grid: no compiles beyond it, and the
+    # plain decode step keeps its single shape signature
+    assert mm["prefill_traces"] <= len(eng.buckets)
+    if paged:
+        assert eng._decode_paged.traces <= 1
+    else:
+        assert eng._decode.traces == 1
+    ref = ServeEngine(m, params, n_slots=2, max_len=48)
+    for r in reqs:
+        g = ref.generate(Request(rid=100 + r.rid, prompt=r.prompt,
+                                 max_new_tokens=r.max_new_tokens))
+        np.testing.assert_array_equal(res[r.rid], g)
+
+
+def test_chunk_auto_default_and_rounding(fp_setup):
+    cfg, m, params = fp_setup
+    # auto: second-largest bucket
+    eng = ServeEngine(m, params, max_len=64)
+    assert eng.buckets == (16, 32, 64) and eng.prefill_chunk == 32
+    # single-bucket grid: nothing to chunk to
+    eng1 = ServeEngine(m, params, max_len=16)
+    assert eng1.prefill_chunk is None
+    # explicit chunk rounds *up* to the bucket grid
+    eng2 = ServeEngine(m, params, max_len=64, prefill_chunk=20)
+    assert eng2.prefill_chunk == 32
+    # 0 / None disable
+    assert ServeEngine(m, params, max_len=64,
+                       prefill_chunk=0).prefill_chunk is None
+    assert ServeEngine(m, params, max_len=64,
+                       prefill_chunk=None).prefill_chunk is None
+
+
+def test_chunked_vs_monolithic_identical(fp_setup):
+    """The chunk size is a latency knob, never a sampling knob: greedy
+    outputs are bit-identical for monolithic, auto, and tiny chunks."""
+    cfg, m, params = fp_setup
+    reqs = _requests(cfg)
+    outs = []
+    for chunk in (0, "auto", 8):
+        eng = ServeEngine(m, params, n_slots=2, max_len=48,
+                          buckets=(8, 24), prefill_chunk=chunk)
+        res = eng.serve([Request(rid=r.rid, prompt=r.prompt,
+                                 max_new_tokens=r.max_new_tokens)
+                         for r in reqs])
+        outs.append([res[r.rid] for r in reqs])
+    for a, b in zip(outs[0], outs[1]):
+        np.testing.assert_array_equal(a, b)
+    for a, b in zip(outs[0], outs[2]):
+        np.testing.assert_array_equal(a, b)

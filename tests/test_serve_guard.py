@@ -1,0 +1,35 @@
+"""Guards that the serving-core decomposition sticks: no serve module
+regrows into a monolith, and dense/paged share one serve loop."""
+import inspect
+from pathlib import Path
+
+import repro.serve as serve_pkg
+from repro.serve import ServeEngine
+
+MAX_MODULE_LINES = 600
+
+
+def test_no_serve_module_exceeds_line_budget():
+    pkg_dir = Path(serve_pkg.__file__).parent
+    oversized = {}
+    for path in sorted(pkg_dir.glob("*.py")):
+        n = len(path.read_text().splitlines())
+        if n > MAX_MODULE_LINES:
+            oversized[path.name] = n
+    assert not oversized, (
+        f"serve modules over {MAX_MODULE_LINES} lines: {oversized} — "
+        "split along the SlotTable/AdmissionPipeline/stepper seams "
+        "(DESIGN.md §14) instead of growing the monolith back")
+
+
+def test_single_serve_loop_for_both_cache_kinds():
+    # the paged path is a stepper plugged into ServeEngine.serve, not a
+    # second loop
+    assert not hasattr(ServeEngine, "_serve_paged")
+    sig = inspect.signature(ServeEngine.serve)
+    assert "feed" in sig.parameters          # open-loop entry, same loop
+    # the loop delegates cache-kind specifics through the stepper hooks:
+    # no cache-kind branching inside the loop body
+    src = inspect.getsource(ServeEngine.serve)
+    assert "self.paged" not in src and "self._stepper." not in src.replace(
+        "self._stepper.begin", "")

@@ -202,15 +202,14 @@ def test_spec_capacity_truncation_matches_nonspec(fp_setup):
     assert spec.metrics()["truncated"] == 1
 
 
-def test_edf_deadline_expires_mid_decode_spec_burst(fp_setup, monkeypatch):
+def test_edf_deadline_expires_mid_decode_spec_burst(fp_setup):
     """EDF-scheduled request whose deadline passes *mid-decode* while a
     speculative burst overshoots its budget: accepted tokens past the
     deadline/budget are dropped, the request is truncated (not
     expired), and the emitted prefix matches the deadline-free run.
-    The engine clock is faked so expiry lands deterministically inside
-    the decode loop."""
+    The engine clock is injected (``clock=`` seam) so expiry lands
+    deterministically inside the decode loop — no monkeypatching."""
     cfg, m, params = fp_setup
-    from repro.serve import engine as engine_mod
 
     draft = self_int8_draft(m, params)
     prompt = (np.arange(7) % cfg.vocab_size).astype(np.int32)
@@ -227,9 +226,8 @@ def test_edf_deadline_expires_mid_decode_spec_burst(fp_setup, monkeypatch):
         clock["t"] += 1.0           # each engine timestamp advances 1s
         return clock["t"]
 
-    monkeypatch.setattr(engine_mod.time, "time", fake_time)
     eng = ServeEngine(m, params, n_slots=1, max_len=64,
-                      spec=SpecConfig(k=3, draft=draft))
+                      spec=SpecConfig(k=3, draft=draft), clock=fake_time)
     sched = Scheduler(eng)
     streamed = []
     # expires a few engine timestamps in: admission survives, a later
