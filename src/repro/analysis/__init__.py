@@ -1,0 +1,23 @@
+"""Static analysis for the repro codebase (DESIGN.md §15).
+
+Two passes turn the repo's hand-enforced invariants into machine checks:
+
+* :mod:`.lint` — an AST lint framework with per-rule codes (RPR001..),
+  ``# repro: noqa[RPRxxx] reason`` suppressions, and a committed
+  baseline file.  The rules encode real past bug classes: raw
+  ``jax.jit`` bypassing the serve rule-table seam, host syncs inside
+  jitted bodies, recompile hazards, low-precision accumulation in
+  Pallas kernels, serve-loop regrowth, clock-seam bypasses, and bare
+  tile-divisibility asserts.
+* :mod:`.hlo_audit` — compiles the serving entry points for a
+  dense/paged × spec × mesh matrix and checks the lowered HLO against
+  a declarative contract table (collective counts, all-reduce operand
+  ceilings, no host transfers).
+
+CLI: ``python -m repro.analysis [paths] [--hlo]`` — see ``--help``.
+The lint pass is stdlib-only (no jax import) so it stays fast enough
+for a pre-commit hook; the HLO audit imports jax lazily.
+"""
+from .lint import Finding, code_line_count, load_baseline, run_lint
+
+__all__ = ["Finding", "code_line_count", "load_baseline", "run_lint"]

@@ -1,0 +1,114 @@
+"""CLI: ``python -m repro.analysis [paths] [options]``.
+
+Default run lints ``src/`` against the committed baseline
+(``analysis_baseline.json`` at the repo root) and exits non-zero on
+any non-baselined finding.  ``--hlo`` additionally compiles the
+serving entry points and checks the lowered HLO against the contract
+table (imports jax; needs enough devices for the mesh — the CLI sets
+``XLA_FLAGS`` for 8 virtual CPU devices if unset).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from pathlib import Path
+
+from .lint import apply_baseline, collect_files, load_baseline, run_lint, \
+    write_baseline
+from .rules import all_rules
+
+
+def _default_baseline(paths) -> Path:
+    """analysis_baseline.json next to the scanned tree's repo root
+    (the directory holding ``src``), falling back to cwd."""
+    for p in paths:
+        p = Path(p).resolve()
+        for anchor in (p, *p.parents):
+            if (anchor / "analysis_baseline.json").exists() \
+                    or (anchor / "src").is_dir():
+                return anchor / "analysis_baseline.json"
+    return Path("analysis_baseline.json")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="AST lint + compiled-HLO contract audit "
+                    "(DESIGN.md §15)")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/dirs to lint (default: src)")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline file (default: analysis_baseline.json "
+                         "at the repo root)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="accept current findings into the baseline")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline (report everything)")
+    ap.add_argument("--hlo", action="store_true",
+                    help="also run the compiled-HLO contract audit")
+    ap.add_argument("--hlo-mesh", default="1,2", metavar="DATA,MODEL",
+                    help="mesh shape for the HLO audit (default 1,2)")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    rules = all_rules()
+    if args.list_rules:
+        for r in rules:
+            scope = ",".join(r.scope) if r.scope else "project-wide"
+            print(f"{r.code}  [{scope}]  {r.title}")
+        return 0
+
+    paths = args.paths or ["src"]
+    missing = [p for p in paths if not Path(p).exists()]
+    if missing:
+        print(f"error: no such path(s): {missing}", file=sys.stderr)
+        return 2
+    files = collect_files(paths)
+    findings = run_lint(paths, rules, files=files)
+
+    baseline_path = (Path(args.baseline) if args.baseline
+                     else _default_baseline(paths))
+    if args.write_baseline:
+        write_baseline(baseline_path, findings, files)
+        print(f"wrote {len(findings)} finding(s) to {baseline_path}")
+        return 0
+
+    baseline = set() if args.no_baseline else load_baseline(baseline_path)
+    new, old, stale = apply_baseline(findings, files, baseline)
+    for f in new:
+        print(f.render())
+    if old:
+        print(f"({len(old)} baselined finding(s) suppressed)")
+    for key in stale:
+        print(f"stale baseline entry (fixed? shrink the baseline): {key}")
+
+    rc = 0
+    if new:
+        print(f"\n{len(new)} new finding(s) — fix, noqa with a reason, "
+              f"or (last resort) --write-baseline")
+        rc = 1
+    else:
+        print(f"lint clean: {len(files)} files, "
+              f"{len(rules)} rules, {len(old)} baselined")
+
+    if args.hlo:
+        # 8 virtual CPU devices unless the caller already configured XLA
+        os.environ.setdefault(
+            "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+        from . import hlo_audit
+        mesh_shape = tuple(int(x) for x in args.hlo_mesh.split(","))
+        violations = hlo_audit.audit(mesh_shape=mesh_shape)
+        for v in violations:
+            print(v.render())
+        if violations:
+            print(f"\nHLO audit: {len(violations)} contract violation(s)")
+            rc = 1
+        else:
+            print(f"HLO audit clean at mesh {mesh_shape}: "
+                  f"{len(hlo_audit.CONTRACTS)} contracts")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,293 @@
+"""Compiled-artifact auditor: check lowered HLO against collective contracts.
+
+The serving design makes hard promises about what each jitted entry
+point is allowed to do on the wire (DESIGN.md §9, §15.3): decode pays
+exactly **one** logits all-gather per step, nothing ever lowers to an
+all-to-all or collective-permute, per-token all-reduces stay at
+activation size (2×d_model elements per operand), and no jitted hot
+path touches the host (``is_host_transfer=true``).  Those promises used
+to live as one-off regexes in ``tests/test_serve_sharded.py``; this
+module turns them into a declarative :data:`CONTRACTS` table checked
+uniformly across the full (cache kind × op × spec) matrix.
+
+Each :class:`Contract` names an engine entry point and bounds, per
+collective kind, how many ops the compiled module may contain and how
+large their operands may be.  :func:`audit` builds one spec-enabled
+engine per cache kind on a virtual mesh, lowers every contract's entry
+point under the rule table the serve loop would use, and returns a
+:class:`Violation` per broken bound.  Run it from the CLI::
+
+    python -m repro.analysis --hlo            # mesh (1, 2), 8 CPU devices
+
+Counts are exact for the audited tiny config and pinned toolchain; when
+a legitimate change shifts a count, edit the table entry in the same PR
+— the table is the reviewable artifact, exactly like the lint baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+#: Operand-size ceilings are expressed as multiples of d_model so the
+#: table survives config-size changes; ``VOCAB`` marks "the padded vocab
+#: dimension must appear in the operand type" (the logits gather).
+VOCAB = "vocab"
+
+
+@dataclasses.dataclass(frozen=True)
+class Bound:
+    """Per-collective-kind budget inside one compiled module."""
+
+    max_count: int                       # how many such ops may appear
+    max_elem_factor: Optional[float] = None   # operand elems <= f * d_model
+    require_contains: Optional[str] = None    # VOCAB: padded vocab must
+    #                                           appear as an operand dim
+
+
+@dataclasses.dataclass(frozen=True)
+class Contract:
+    name: str                            # stable id, e.g. "decode/dense"
+    op: str                              # decode | prefill | spec_cycle
+    paged: bool
+    bounds: Dict[str, Bound] = dataclasses.field(default_factory=dict)
+    forbid_host_transfer: bool = True
+
+    def bound(self, kind: str) -> Bound:
+        # Unlisted collective kinds are forbidden outright.
+        return self.bounds.get(kind, Bound(max_count=0))
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    contract: str
+    kind: str                            # collective kind or "host-transfer"
+    message: str
+
+    def render(self) -> str:
+        return f"{self.contract}: [{self.kind}] {self.message}"
+
+
+_COLLECTIVES = ("all-gather", "all-to-all", "collective-permute",
+                "all-reduce")
+
+# The one-all-gather-per-decode-step invariant and its friends, probed
+# on the tiny llama3-8b at mesh (1, 2).  Decode: the single all-gather
+# is the logits gather (operand carries the padded vocab dim) and the
+# three all-reduces are activation-sized.  Prefill additionally gathers
+# sequence-sharded activations and row-parallel weights (bounded by
+# count only).  The spec cycle never moves vocab-sized data: its
+# all-gathers are (B, k+1)-shaped token/prob exchanges, bounded tightly
+# at 16×d_model elements.
+_DECODE_BOUNDS = {
+    "all-gather": Bound(max_count=1, require_contains=VOCAB),
+    "all-reduce": Bound(max_count=3, max_elem_factor=2.0),
+}
+_PREFILL_BOUNDS = {
+    "all-gather": Bound(max_count=15),
+    "all-reduce": Bound(max_count=2, max_elem_factor=32.0),
+}
+_SPEC_BOUNDS = {
+    "all-gather": Bound(max_count=14, max_elem_factor=16.0),
+    "all-reduce": Bound(max_count=18, max_elem_factor=8.0),
+}
+
+CONTRACTS: Tuple[Contract, ...] = (
+    Contract("decode/dense", "decode", paged=False, bounds=_DECODE_BOUNDS),
+    Contract("decode/paged", "decode", paged=True, bounds=_DECODE_BOUNDS),
+    Contract("prefill/dense", "prefill", paged=False, bounds=_PREFILL_BOUNDS),
+    Contract("prefill/paged", "prefill", paged=True, bounds=_PREFILL_BOUNDS),
+    Contract("spec_cycle/dense", "spec_cycle", paged=False,
+             bounds=_SPEC_BOUNDS),
+    Contract("spec_cycle/paged", "spec_cycle", paged=True,
+             bounds=_SPEC_BOUNDS),
+)
+
+#: Draft depth the spec-cycle contracts are probed at.
+SPEC_K = 2
+
+
+# ---------------------------------------------------------------------------
+# HLO text inspection
+# ---------------------------------------------------------------------------
+
+def collective_operands(txt: str, kind: str) -> List[str]:
+    """Result types of every ``kind`` op in an HLO module dump."""
+    return re.findall(r"= (\S+) %s\(" % kind, txt)
+
+
+def type_elems(ty: str) -> int:
+    """Element count of an HLO type string.
+
+    ``f32[2,1,512]{2,1,0}`` -> 1024.  The layout suffix in braces must
+    be ignored (its digits are dimension *indices*, and the trailing 0
+    would zero the product — the bug that made the old inline check in
+    test_serve_sharded vacuous).  Scalars (``f32[]``) count as 1; tuple
+    types sum their leaves.
+    """
+    total = 0
+    for shape in re.findall(r"\[([\d,]*)\]", ty):
+        n = 1
+        for d in shape.split(","):
+            if d.strip().isdigit():
+                n *= int(d)
+        total += n
+    return total if total else 1
+
+
+def type_dims(ty: str) -> List[int]:
+    dims: List[int] = []
+    for shape in re.findall(r"\[([\d,]*)\]", ty):
+        dims.extend(int(d) for d in shape.split(",") if d.strip().isdigit())
+    return dims
+
+
+def check_module(txt: str, contract: Contract, *, d_model: int,
+                 vocab_pad: int) -> List[Violation]:
+    """Check one compiled module's text against one contract."""
+    out: List[Violation] = []
+    for kind in _COLLECTIVES:
+        ops = collective_operands(txt, kind)
+        b = contract.bound(kind)
+        if len(ops) > b.max_count:
+            out.append(Violation(
+                contract.name, kind,
+                f"{len(ops)} ops, contract allows {b.max_count}"))
+        if b.max_elem_factor is not None:
+            ceil = int(b.max_elem_factor * d_model)
+            for ty in ops:
+                n = type_elems(ty)
+                if n > ceil:
+                    out.append(Violation(
+                        contract.name, kind,
+                        f"operand {ty} has {n} elems, contract ceiling "
+                        f"{ceil} ({b.max_elem_factor} x d_model)"))
+        if b.require_contains == VOCAB:
+            for ty in ops:
+                if vocab_pad not in type_dims(ty):
+                    out.append(Violation(
+                        contract.name, kind,
+                        f"operand {ty} does not carry the padded vocab "
+                        f"dim {vocab_pad} — expected the logits gather"))
+    if contract.forbid_host_transfer and "is_host_transfer=true" in txt:
+        out.append(Violation(
+            contract.name, "host-transfer",
+            "compiled module contains is_host_transfer=true"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Engine building + lowering (imports deferred: jax init is expensive and
+# the lint half of the package must stay importable without devices)
+# ---------------------------------------------------------------------------
+
+def _build_engine(paged: bool, mesh):
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import ARCHS
+    from repro.core import QuantSpec, quantize_model, run_calibration
+    from repro.data.synthetic import DataConfig, SyntheticLM, \
+        calibration_batches
+    from repro.models.registry import build_model
+    from repro.serve.draft import self_int8_draft
+    from repro.serve.engine import ServeEngine
+    from repro.serve.spec import SpecConfig
+
+    cfg = ARCHS["llama3-8b"].tiny()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size))
+    calib = [{k: jnp.asarray(v) for k, v in b.items()}
+             for b in calibration_batches(data, 4, 32)]
+    stats = run_calibration(model.forward, params, calib)
+    qp, _ = quantize_model(params, model.quant_site_map(), stats,
+                           method="faq", spec=QuantSpec(bits=4,
+                                                        group_size=64),
+                           mode="packed")
+    spec = SpecConfig(k=SPEC_K, draft=self_int8_draft(model, qp, stats))
+    eng = ServeEngine(model, qp, n_slots=2, max_len=64, paged=paged,
+                      spec=spec, mesh=mesh)
+    return cfg, model, eng
+
+
+def _lower_contract(contract: Contract, cfg, model, eng, mesh) -> str:
+    import jax
+    import jax.numpy as jnp
+    from repro.dist.sharding import SERVE_DECODE_RULES, \
+        SERVE_PREFILL_RULES, axis_rules
+
+    B = eng.n_slots
+    zi = jnp.zeros((B,), jnp.int32)
+    zb = jnp.ones((B,), bool)
+    zf = jnp.zeros((B,), jnp.float32)
+    key = jax.random.PRNGKey(0)
+
+    if not contract.paged:
+        cache = eng._place(model.init_cache(B, eng.max_len),
+                           eng._cache_axes)
+        if contract.op == "decode":
+            with axis_rules(mesh, SERVE_DECODE_RULES):
+                low = eng._decode.fn.jitted.lower(
+                    eng.params, cache, zi, zb, zf, None, None, key)
+        elif contract.op == "prefill":
+            b = eng.buckets[0]
+            toks = jnp.zeros((B, b), jnp.int32)
+            plen = jnp.full((B,), b, jnp.int32)
+            with axis_rules(mesh, SERVE_PREFILL_RULES):
+                low = eng._prefill_admit.fn.jitted.lower(
+                    eng.params, toks, plen, cache, zb, zf, None, None,
+                    key, zi)
+        else:
+            fn = eng._spec._get_cycle("dense", SPEC_K, False, False)
+            with axis_rules(mesh, SERVE_DECODE_RULES):
+                low = fn.fn.jitted.lower(
+                    eng.params, eng._spec.draft.params, cache, zi, zi,
+                    zb, zf, zi, zf, key)
+    else:
+        store = eng._store
+        table = jnp.zeros((B, eng.pages_per_slot), jnp.int32)
+        if contract.op == "decode":
+            with axis_rules(mesh, SERVE_DECODE_RULES):
+                low = eng._decode_paged.fn.jitted.lower(
+                    eng.params, store, table, zi, zi, zb, zf, None,
+                    None, key)
+        elif contract.op == "prefill":
+            b = eng.buckets[0]
+            toks = jnp.zeros((B, b), jnp.int32)
+            plen = jnp.full((B,), b, jnp.int32)
+            with axis_rules(mesh, SERVE_PREFILL_RULES):
+                low = eng._prefill_paged.fn.jitted.lower(
+                    eng.params, toks, plen, zb, zf, None, None, key, zi)
+        else:
+            fn = eng._spec._get_cycle("paged", SPEC_K, False, False)
+            with axis_rules(mesh, SERVE_DECODE_RULES):
+                low = fn.fn.jitted.lower(
+                    eng.params, eng._spec.draft.params, store, table,
+                    zi, zi, zb, zf, zi, zf, key)
+    return low.compile().as_text()
+
+
+def audit(mesh_shape: Tuple[int, int] = (1, 2),
+          contracts: Tuple[Contract, ...] = CONTRACTS) -> List[Violation]:
+    """Compile every contract's entry point and check its HLO.
+
+    Needs enough devices for ``mesh_shape`` (CI uses
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).  Returns
+    the flat list of violations; empty means every contract holds.
+    """
+    from repro.launch.mesh import make_local_mesh
+
+    mesh = make_local_mesh(*mesh_shape)
+    violations: List[Violation] = []
+    for paged in (False, True):
+        todo = [c for c in contracts if c.paged is paged]
+        if not todo:
+            continue
+        cfg, model, eng = _build_engine(paged, mesh)
+        from repro.models.common import padded_vocab
+        vocab_pad = padded_vocab(cfg.vocab_size)
+        for c in todo:
+            txt = _lower_contract(c, cfg, model, eng, mesh)
+            violations.extend(check_module(
+                txt, c, d_model=cfg.d_model, vocab_pad=vocab_pad))
+    return violations

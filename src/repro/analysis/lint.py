@@ -1,0 +1,236 @@
+"""AST lint framework: findings, noqa suppressions, baseline, runner.
+
+A rule is a class with a ``code`` ("RPR001"), a ``scope`` (path
+substrings it applies to; empty = everywhere), and either a per-file
+``check(sf)`` or a whole-project ``project(files)`` hook (for rules
+that need cross-file state, e.g. which functions end up jitted).
+
+Suppression is per physical line: ``# repro: noqa[RPR002] <reason>``.
+The reason string is part of the convention (every suppression should
+say *why* the invariant doesn't apply), but the parser accepts a bare
+``noqa[...]`` so fixtures stay terse.
+
+The baseline file keys findings on ``(rule, path, stripped line
+text)`` rather than line numbers, so unrelated edits above a
+baselined finding don't churn the file.  Entries that no longer match
+anything are reported as stale — the baseline can only shrink.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import json
+import re
+import tokenize
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Set
+
+NOQA_RE = re.compile(
+    r"#\s*repro:\s*noqa\[(?P<codes>[A-Z0-9,\s]+)\]\s*(?P<reason>.*)")
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    path: str          # posix path as given to the runner
+    line: int          # 1-based
+    rule: str          # "RPR001"
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+class SourceFile:
+    """One parsed file: text, lines, AST, and per-line noqa codes."""
+
+    def __init__(self, path: Path, rel: str):
+        self.path = path
+        self.rel = rel
+        self.text = path.read_text()
+        self.lines = self.text.splitlines()
+        self.tree = ast.parse(self.text, filename=str(path))
+        self.noqa: Dict[int, Set[str]] = {}
+        for i, line in enumerate(self.lines, start=1):
+            m = NOQA_RE.search(line)
+            if m:
+                self.noqa[i] = {c.strip() for c in
+                                m.group("codes").split(",") if c.strip()}
+
+    def suppressed(self, line: int, code: str) -> bool:
+        return code in self.noqa.get(line, ())
+
+    def line_text(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1].strip()
+        return ""
+
+
+class Rule:
+    """Base rule.  Subclasses set ``code``/``title``/``scope`` and
+    implement ``check`` (per file) or ``project`` (whole run)."""
+
+    code = "RPR000"
+    title = ""
+    scope: Sequence[str] = ()      # path substrings; empty = all files
+
+    def applies(self, rel: str) -> bool:
+        rel = rel.replace("\\", "/")
+        return not self.scope or any(s in rel for s in self.scope)
+
+    def finding(self, sf: SourceFile, node, message: str) -> Finding:
+        return Finding(sf.rel, getattr(node, "lineno", 0), self.code,
+                       message)
+
+    def check(self, sf: SourceFile) -> List[Finding]:
+        return []
+
+
+def collect_files(paths: Sequence, *, base: Optional[Path] = None
+                  ) -> List[SourceFile]:
+    """Parse every ``.py`` under ``paths`` (files or directories).
+    ``rel`` paths are relative to ``base`` (default cwd) when possible,
+    so baselines are machine-independent."""
+    base = Path.cwd() if base is None else Path(base)
+    out, seen = [], set()
+    for p in paths:
+        p = Path(p)
+        files = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for f in files:
+            f = f.resolve()
+            if f in seen:
+                continue
+            seen.add(f)
+            try:
+                rel = f.relative_to(base.resolve()).as_posix()
+            except ValueError:
+                rel = f.as_posix()
+            out.append(SourceFile(f, rel))
+    return out
+
+
+def run_lint(paths: Sequence, rules: Sequence[Rule], *,
+             base: Optional[Path] = None,
+             files: Optional[List[SourceFile]] = None) -> List[Finding]:
+    """Run ``rules`` over ``paths``; returns noqa-filtered findings
+    sorted by (path, line, rule)."""
+    if files is None:
+        files = collect_files(paths, base=base)
+    by_rel = {sf.rel: sf for sf in files}
+    findings: List[Finding] = []
+    for rule in rules:
+        in_scope = [sf for sf in files if rule.applies(sf.rel)]
+        if hasattr(rule, "project"):
+            got = rule.project(in_scope, all_files=files)
+        else:
+            got = [f for sf in in_scope for f in rule.check(sf)]
+        for f in got:
+            sf = by_rel.get(f.path)
+            if sf is not None and sf.suppressed(f.line, f.rule):
+                continue
+            findings.append(f)
+    return sorted(set(findings))
+
+
+# ---------------------------------------------------------------------------
+# Baseline
+# ---------------------------------------------------------------------------
+
+def _baseline_key(f: Finding, by_rel: Dict[str, SourceFile]):
+    sf = by_rel.get(f.path)
+    text = sf.line_text(f.line) if sf is not None else ""
+    return (f.rule, f.path, text)
+
+
+def load_baseline(path) -> Set[tuple]:
+    path = Path(path)
+    if not path.exists():
+        return set()
+    data = json.loads(path.read_text())
+    return {(e["rule"], e["path"], e["line_text"])
+            for e in data.get("findings", [])}
+
+
+def write_baseline(path, findings: Sequence[Finding],
+                   files: Sequence[SourceFile]) -> None:
+    by_rel = {sf.rel: sf for sf in files}
+    entries = sorted({_baseline_key(f, by_rel) for f in findings})
+    Path(path).write_text(json.dumps(
+        {"comment": "Accepted findings; regenerate with "
+                    "`python -m repro.analysis --write-baseline`. "
+                    "This file can only shrink — fix or noqa new "
+                    "findings instead of re-baselining them.",
+         "findings": [{"rule": r, "path": p, "line_text": t}
+                      for r, p, t in entries]}, indent=2) + "\n")
+
+
+def apply_baseline(findings: Sequence[Finding],
+                   files: Sequence[SourceFile], baseline: Set[tuple]):
+    """Split findings into (new, baselined) and report stale baseline
+    entries (accepted findings that no longer occur)."""
+    by_rel = {sf.rel: sf for sf in files}
+    new, old, seen = [], [], set()
+    for f in findings:
+        key = _baseline_key(f, by_rel)
+        if key in baseline:
+            old.append(f)
+            seen.add(key)
+        else:
+            new.append(f)
+    stale = sorted(baseline - seen)
+    return new, old, stale
+
+
+# ---------------------------------------------------------------------------
+# Comment/format-insensitive line counting (serve module budget)
+# ---------------------------------------------------------------------------
+
+def code_line_count(text: str) -> int:
+    """Number of lines carrying actual code: comments, blank lines, and
+    docstrings don't count — a module can't dodge (or trip) the serve
+    line budget by reformatting."""
+    tree = ast.parse(text)
+    doc_lines: Set[int] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.Module, ast.ClassDef, ast.FunctionDef,
+                             ast.AsyncFunctionDef)):
+            body = getattr(node, "body", [])
+            if (body and isinstance(body[0], ast.Expr)
+                    and isinstance(body[0].value, ast.Constant)
+                    and isinstance(body[0].value.value, str)):
+                doc_lines.update(range(body[0].lineno,
+                                       body[0].end_lineno + 1))
+    skip = {tokenize.COMMENT, tokenize.NL, tokenize.NEWLINE,
+            tokenize.INDENT, tokenize.DEDENT, tokenize.ENCODING,
+            tokenize.ENDMARKER}
+    code_lines: Set[int] = set()
+    for tok in tokenize.generate_tokens(io.StringIO(text).readline):
+        if tok.type in skip:
+            continue
+        code_lines.update(range(tok.start[0], tok.end[0] + 1))
+    return len(code_lines - doc_lines)
+
+
+# ---------------------------------------------------------------------------
+# Shared AST helpers for rules
+# ---------------------------------------------------------------------------
+
+def dotted(node) -> Optional[str]:
+    """'jax.jit' for Attribute/Name chains, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def last_seg(node) -> Optional[str]:
+    d = dotted(node)
+    return d.rsplit(".", 1)[-1] if d else None
+
+
+def call_kwargs(call: ast.Call) -> Set[str]:
+    return {kw.arg for kw in call.keywords if kw.arg}

@@ -1,0 +1,50 @@
+"""RPR001: raw ``jax.jit`` in ``serve/`` bypassing the rule-table seam.
+
+Every jitted serving entry point must go through
+``ServeEngine._jit(fn, rules)`` so it traces (and re-traces) under the
+right ``axis_rules`` table (DESIGN.md §13).  A raw ``jax.jit`` in
+``serve/`` compiles without the regime's sharding rules: on a mesh the
+lowered program silently loses the decode-layout constraints (the PR 6
+bug class this rule encodes).  The seam itself carries the one
+documented suppression.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..lint import Finding, Rule, SourceFile, dotted
+
+_JIT_NAMES = {"jax.jit", "jit"}
+_PARTIAL = {"functools.partial", "partial"}
+
+
+def _is_raw_jit(node) -> bool:
+    """``jax.jit``/``jit`` as a name, or ``partial(jax.jit, ...)``."""
+    d = dotted(node)
+    if d in _JIT_NAMES:
+        return True
+    if isinstance(node, ast.Call) and dotted(node.func) in _PARTIAL:
+        return bool(node.args) and dotted(node.args[0]) in _JIT_NAMES
+    return False
+
+
+class RawJitInServe(Rule):
+    code = "RPR001"
+    title = "raw jax.jit in serve/ bypasses the ServeEngine._jit seam"
+    scope = ("repro/serve/",)
+
+    def check(self, sf: SourceFile) -> List[Finding]:
+        out = []
+        msg = ("raw jax.jit bypasses the rule-table seam — route through "
+               "ServeEngine._jit(fn, rules) so the trace runs under the "
+               "regime's axis_rules table")
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Call) and _is_raw_jit(node.func):
+                out.append(self.finding(sf, node, msg))
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    if _is_raw_jit(dec):
+                        out.append(Finding(sf.rel, dec.lineno, self.code,
+                                           msg))
+        return out

@@ -1,0 +1,160 @@
+"""RPR002: host-sync calls inside jitted/shard_map'd bodies, and
+device→host transfers on the per-step serve hot path.
+
+Two detection modes share the code:
+
+1. **Jitted bodies** (project-wide): collect every function that ends
+   up jitted — ``@jax.jit`` / ``@partial(jax.jit, ...)`` decorators,
+   first arguments to ``jax.jit`` / ``ServeEngine._jit`` / ``shard_map``
+   calls (by name or attribute, through ``functools.partial``), plus
+   the transitive closure over plain-name calls from those bodies —
+   then flag ``.item()``, ``np.asarray``/``np.array``,
+   ``jax.device_get``, and ``float()``/``int()`` on non-constants
+   inside them.  Inside a trace these either fail at trace time or,
+   worse, silently constant-fold a traced value.
+
+2. **Serve hot path**: the per-step methods of the engine/stepper/spec
+   loop (``_plain_step``, ``plain_step``, ``spec_cycle``,
+   ``input_tokens``, ...) run once per decode step — a device→host
+   transfer there serializes the step pipeline.  Each transfer must be
+   either removed or noqa-documented with the reason it is part of the
+   designed per-step budget (one int32 per slot per step).
+
+Known static limits: jit targets built by factories
+(``build(k, ...)`` call results) and lambdas passed inline are only
+scanned when the lambda itself is the argument; attribute calls are
+not followed in the closure (bounding false positives).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set
+
+from ..lint import Finding, Rule, SourceFile, call_kwargs, dotted, last_seg
+
+_WRAPPERS = {"jit", "_jit", "shard_map"}
+_TRANSFER_FUNCS = {"np.asarray", "np.array", "numpy.asarray",
+                   "numpy.array", "jax.device_get", "device_get"}
+_HOT_METHODS = {"_plain_step", "_spec_step", "plain_step", "spec_cycle",
+                "input_tokens", "run_cycle_dense", "run_cycle_paged",
+                "track_step"}
+
+
+def _is_jit_decorator(dec) -> bool:
+    if last_seg(dec) == "jit":
+        return True
+    if isinstance(dec, ast.Call):
+        if last_seg(dec.func) in _WRAPPERS:
+            return True
+        if last_seg(dec.func) == "partial" and dec.args:
+            return last_seg(dec.args[0]) in _WRAPPERS
+    return False
+
+
+def _wrapped_names(call: ast.Call) -> Set[str]:
+    """Names a ``jit(fn)`` / ``shard_map(fn, ...)`` call roots: the bare
+    or attribute name of the first argument (through ``partial``)."""
+    if not call.args:
+        return set()
+    arg = call.args[0]
+    if isinstance(arg, ast.Call) and last_seg(arg.func) == "partial" \
+            and arg.args:
+        arg = arg.args[0]
+    if isinstance(arg, ast.Name):
+        return {arg.id}
+    if isinstance(arg, ast.Attribute):
+        return {arg.attr}
+    return set()
+
+
+def _host_sync_calls(body_node, *, include_casts: bool):
+    """Yield (node, description) for host-sync calls under ``body_node``
+    (not descending into nested function definitions' decorators —
+    nested defs are part of the traced body, so they are scanned)."""
+    for node in ast.walk(body_node):
+        if not isinstance(node, ast.Call):
+            continue
+        d = dotted(node.func)
+        if d in _TRANSFER_FUNCS:
+            yield node, f"{d}() forces a device sync"
+        elif isinstance(node.func, ast.Attribute) \
+                and node.func.attr == "item" and not node.args:
+            yield node, ".item() forces a device sync"
+        elif include_casts and isinstance(node.func, ast.Name) \
+                and node.func.id in ("float", "int") and node.args \
+                and not isinstance(node.args[0], ast.Constant):
+            yield node, (f"{node.func.id}() on a traced value forces a "
+                         "device sync (or fails at trace time)")
+
+
+class HostSyncInJitted(Rule):
+    code = "RPR002"
+    title = "host sync inside a jitted/shard_map'd body or serve hot path"
+    scope = ()          # project-wide (closure crosses modules)
+
+    def project(self, in_scope: List[SourceFile],
+                all_files: List[SourceFile]) -> List[Finding]:
+        files = all_files
+        # -- pass 1: every function definition, and every jit/shard_map
+        #    root name, across the project
+        defs: Dict[str, List[tuple]] = {}     # name -> [(sf, node)]
+        roots: Set[str] = set()
+        direct: List[tuple] = []              # (sf, lambda/def node)
+        for sf in files:
+            for node in ast.walk(sf.tree):
+                if isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                    defs.setdefault(node.name, []).append((sf, node))
+                    if any(_is_jit_decorator(d)
+                           for d in node.decorator_list):
+                        direct.append((sf, node))
+                elif isinstance(node, ast.Call) \
+                        and last_seg(node.func) in _WRAPPERS:
+                    roots |= _wrapped_names(node)
+                    if node.args and isinstance(node.args[0], ast.Lambda):
+                        direct.append((sf, node.args[0]))
+        # -- pass 2: transitive closure over plain-name calls
+        jitted: Set[str] = set()
+        frontier = set(roots)
+        while frontier:
+            name = frontier.pop()
+            if name in jitted or name not in defs:
+                continue
+            jitted.add(name)
+            for _, fn in defs[name]:
+                for node in ast.walk(fn):
+                    if isinstance(node, ast.Call) \
+                            and isinstance(node.func, ast.Name) \
+                            and node.func.id in defs:
+                        frontier.add(node.func.id)
+        # -- pass 3: flag host syncs inside jitted bodies
+        out: List[Finding] = []
+        bodies = list(direct) + [(sf, fn) for name in jitted
+                                 for sf, fn in defs[name]]
+        seen: Set[int] = set()
+        for sf, fn in bodies:
+            if id(fn) in seen:
+                continue
+            seen.add(id(fn))
+            label = getattr(fn, "name", "<lambda>")
+            for node, why in _host_sync_calls(fn, include_casts=True):
+                out.append(Finding(
+                    sf.rel, node.lineno, self.code,
+                    f"{why} inside jitted body {label!r}"))
+        # -- hot-path mode: per-step serve methods (host code, so casts
+        #    like int(tok) are fine — only transfer initiators count)
+        for sf in files:
+            if "repro/serve/" not in sf.rel.replace("\\", "/"):
+                continue
+            for node in ast.walk(sf.tree):
+                if isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)) \
+                        and node.name in _HOT_METHODS \
+                        and node.name not in jitted:
+                    for call, why in _host_sync_calls(
+                            node, include_casts=False):
+                        out.append(Finding(
+                            sf.rel, call.lineno, self.code,
+                            f"{why} on the per-step serve hot path "
+                            f"({node.name!r} runs every decode step)"))
+        return out

@@ -1,0 +1,87 @@
+"""RPR003: jit over a function taking Python scalars without
+``static_argnames`` — the recompile hazard.
+
+A jitted function whose signature takes Python ints/floats/bools/strs
+(by annotation or default) retraces on every distinct value unless the
+argument is declared static.  Resolvable sites only: ``jax.jit(f)`` /
+``@jax.jit`` / ``partial(jax.jit, ...)`` where ``f`` is a function
+defined in the same module; lambdas and call-result targets are
+skipped.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from ..lint import Finding, Rule, SourceFile, call_kwargs, dotted
+
+_JIT = {"jax.jit", "jit"}
+_PARTIAL = {"functools.partial", "partial"}
+_SCALARS = {"int", "float", "bool", "str"}
+
+
+def _scalar_params(fn) -> List[str]:
+    """Parameter names whose annotation or default is a Python scalar."""
+    a = fn.args
+    params = a.posonlyargs + a.args + a.kwonlyargs
+    defaults = dict(zip([p.arg for p in a.args[::-1]],
+                        a.defaults[::-1]))
+    defaults.update({p.arg: d for p, d in zip(a.kwonlyargs, a.kw_defaults)
+                     if d is not None})
+    out = []
+    for p in params:
+        ann = dotted(p.annotation) if p.annotation is not None else None
+        d = defaults.get(p.arg)
+        scalar_default = (isinstance(d, ast.Constant)
+                          and isinstance(d.value, (int, float, bool, str))
+                          and d.value is not None)
+        if ann in _SCALARS or scalar_default:
+            out.append(p.arg)
+    return out
+
+
+def _jit_call_without_static(node: ast.Call) -> Optional[ast.AST]:
+    """The wrapped-function node of a jit site lacking static args."""
+    d = dotted(node.func)
+    if d in _JIT:
+        if {"static_argnames", "static_argnums"} & call_kwargs(node):
+            return None
+        return node.args[0] if node.args else None
+    if d in _PARTIAL and node.args and dotted(node.args[0]) in _JIT:
+        if {"static_argnames", "static_argnums"} & call_kwargs(node):
+            return None
+        return "decorated"        # partial(jax.jit, ...) as decorator
+    return None
+
+
+class ScalarArgsWithoutStatic(Rule):
+    code = "RPR003"
+    title = "jit signature takes Python scalars without static_argnames"
+
+    def check(self, sf: SourceFile) -> List[Finding]:
+        defs = {n.name: n for n in ast.walk(sf.tree)
+                if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+        out = []
+
+        def flag(site, fn):
+            scalars = _scalar_params(fn)
+            if scalars:
+                out.append(Finding(
+                    sf.rel, site.lineno, self.code,
+                    f"jit over {fn.name!r} takes Python scalar(s) "
+                    f"{scalars} without static_argnames — every distinct "
+                    "value retraces; declare them static or pass arrays"))
+
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Call):
+                target = _jit_call_without_static(node)
+                if isinstance(target, ast.Name) and target.id in defs:
+                    flag(node, defs[target.id])
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    if dotted(dec) in _JIT:
+                        flag(dec, node)
+                    elif isinstance(dec, ast.Call) \
+                            and _jit_call_without_static(dec) is not None:
+                        flag(dec, node)
+        return out

@@ -1,0 +1,42 @@
+"""RPR004: kernel ``dot``/``cumsum`` without an explicit f32
+accumulator — the PR 1 ``window_preview`` cancellation bug class.
+
+In ``kernels/``, every MXU-feeding contraction must pin
+``preferred_element_type=jnp.float32`` (low-precision inputs otherwise
+accumulate in the input dtype) and every ``cumsum`` must pin ``dtype``
+(long prefix sums cancel catastrophically below f32).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..lint import Finding, Rule, SourceFile, call_kwargs, last_seg
+
+_DOT_FNS = {"dot", "dot_general", "matmul"}
+
+
+class KernelAccumDtype(Rule):
+    code = "RPR004"
+    title = "kernel dot/cumsum without an explicit float32 accumulator"
+    scope = ("repro/kernels/",)
+
+    def check(self, sf: SourceFile) -> List[Finding]:
+        out = []
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            seg = last_seg(node.func)
+            kwargs = call_kwargs(node)
+            if seg in _DOT_FNS and "preferred_element_type" not in kwargs:
+                out.append(self.finding(
+                    sf, node,
+                    f"{seg}() without preferred_element_type=jnp.float32 "
+                    "accumulates in the input dtype — pin the f32 "
+                    "accumulator (window_preview cancellation bug class)"))
+            elif seg == "cumsum" and "dtype" not in kwargs:
+                out.append(self.finding(
+                    sf, node,
+                    "cumsum() without dtype=jnp.float32 — long prefix "
+                    "sums cancel below f32; pin the accumulator dtype"))
+        return out

@@ -1,0 +1,68 @@
+"""RPR005: serve-loop regrowth — cache-kind branching or a second
+serve loop in the engine.
+
+PR 7 collapsed dense and paged serving into ONE ``ServeEngine.serve``
+loop driving a pluggable stepper.  This rule keeps it that way without
+the old substring heuristics: no ``_serve_*`` sibling loops anywhere in
+``serve/``, and inside ``ServeEngine.serve`` no ``self.paged``
+branching and no stepper access beyond the ``begin()`` lifecycle hook
+(everything else must flow through the per-step engine helpers, which
+delegate through the stepper interface).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..lint import Finding, Rule, SourceFile
+
+_ALLOWED_STEPPER_ATTRS = {"begin"}
+
+
+class SingleServeLoop(Rule):
+    code = "RPR005"
+    title = "cache-kind branching or a second serve loop in the engine"
+    scope = ("repro/serve/",)
+
+    def check(self, sf: SourceFile) -> List[Finding]:
+        out = []
+        for node in ast.walk(sf.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node.name.startswith("_serve_"):
+                out.append(self.finding(
+                    sf, node,
+                    f"{node.name!r} looks like a second serve loop — "
+                    "dense and paged must share ServeEngine.serve with a "
+                    "stepper plugged in (DESIGN.md §14)"))
+            if isinstance(node, ast.ClassDef) and node.name == "ServeEngine":
+                out.extend(self._check_serve(sf, node))
+        return out
+
+    def _check_serve(self, sf: SourceFile, cls: ast.ClassDef):
+        out = []
+        serve = next((n for n in cls.body
+                      if isinstance(n, ast.FunctionDef)
+                      and n.name == "serve"), None)
+        if serve is None:
+            return out
+        for node in ast.walk(serve):
+            if not isinstance(node, ast.Attribute):
+                continue
+            base = node.value
+            if isinstance(base, ast.Name) and base.id == "self" \
+                    and node.attr == "paged":
+                out.append(self.finding(
+                    sf, node,
+                    "cache-kind branching (self.paged) inside the serve "
+                    "loop — delegate through the stepper hooks"))
+            elif isinstance(base, ast.Attribute) \
+                    and isinstance(base.value, ast.Name) \
+                    and base.value.id == "self" \
+                    and base.attr == "_stepper" \
+                    and node.attr not in _ALLOWED_STEPPER_ATTRS:
+                out.append(self.finding(
+                    sf, node,
+                    f"serve loop reaches into the stepper "
+                    f"(self._stepper.{node.attr}) — only the begin() "
+                    "lifecycle hook may be called from the loop body"))
+        return out

@@ -1,0 +1,37 @@
+"""RPR006: wall-clock reads in ``serve/`` outside the clock seam.
+
+PR 7 threaded one injectable ``clock=`` through the engine, scheduler,
+and load generator so deadline/TTFT behavior is testable with fake
+clocks.  Any direct ``time.time()`` / ``time.monotonic()`` /
+``time.perf_counter()`` *reference* (not just call — ``clock or
+time.time`` defaults count) in ``serve/`` reintroduces untestable wall
+time.  The seam's own default carries the documented suppression.
+(``time.sleep`` is not a clock read and stays allowed.)
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..lint import Finding, Rule, SourceFile, dotted
+
+_CLOCK_READS = {"time.time", "time.monotonic", "time.perf_counter",
+                "time.process_time"}
+
+
+class ClockSeamBypass(Rule):
+    code = "RPR006"
+    title = "wall-clock read in serve/ outside the injectable clock seam"
+    scope = ("repro/serve/",)
+
+    def check(self, sf: SourceFile) -> List[Finding]:
+        out = []
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Attribute) \
+                    and dotted(node) in _CLOCK_READS:
+                out.append(self.finding(
+                    sf, node,
+                    f"{dotted(node)} bypasses the injectable clock seam "
+                    "— read self.clock() (engine) or the injected "
+                    "clock= callable instead"))
+        return out

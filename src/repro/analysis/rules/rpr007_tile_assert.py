@@ -1,0 +1,39 @@
+"""RPR007: bare tile-divisibility ``assert`` in ``kernels/`` without a
+pad fallback — the PR 3 ``quant_matmul`` crash class.
+
+A kernel that asserts ``dim % tile == 0`` crashes on any model whose
+shapes don't land on the tile grid (hymba's d_model=1600 was the
+original trigger).  The fix pattern is pad-and-slice (see
+``quant_matmul_pallas``); asserts that document a *constructed*
+invariant (the code above already forced divisibility) carry a noqa
+with the reason.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..lint import Finding, Rule, SourceFile
+
+
+def _has_mod(node) -> bool:
+    return any(isinstance(n, ast.BinOp) and isinstance(n.op, ast.Mod)
+               for n in ast.walk(node))
+
+
+class BareTileAssert(Rule):
+    code = "RPR007"
+    title = "bare tile-divisibility assert in kernels/ without pad fallback"
+    scope = ("repro/kernels/",)
+
+    def check(self, sf: SourceFile) -> List[Finding]:
+        out = []
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Assert) and _has_mod(node.test):
+                out.append(self.finding(
+                    sf, node,
+                    "divisibility assert without a pad fallback crashes "
+                    "on non-tile-divisible shapes — pad up to the tile "
+                    "and slice the result (quant_matmul pattern), or "
+                    "noqa with the invariant that guarantees it"))
+        return out

@@ -147,15 +147,18 @@ def _mesh_axis_sizes(mesh) -> dict:
 
 
 # Divisibility fallbacks already warned about, keyed on
-# (axes, shape, dim, dropped mesh axes) — silent replication during serve
-# should show up in logs exactly once per distinct site.
+# (axes, shape, dim, logical name, dropped mesh axes) — silent
+# replication during serve should show up in logs exactly once per
+# distinct site.  The logical name is part of the key: two sites that
+# agree on position and shape but drop a *different* logical axis are
+# different warnings, and must not mask each other.
 _WARNED_DROPS: set = set()
 
 
 def _warn_dropped(axes, shape, dim, name, cand, total):
     if shape[dim] == 1:
         return  # replicating a singleton dim loses nothing
-    key = (tuple(axes), tuple(shape), dim, cand)
+    key = (tuple(axes), tuple(shape), dim, name, cand)
     if key in _WARNED_DROPS:
         return
     _WARNED_DROPS.add(key)

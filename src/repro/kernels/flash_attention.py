@@ -21,6 +21,7 @@ for causal runs.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +34,8 @@ NEG_INF = -1e30
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-            causal: bool, g: int, bq: int, bk: int, hd: int, scale: float):
+            causal: bool, g: int, bq: int, bk: int, hd: int, scale: float,
+            t_valid: int | None):
     iq = pl.program_id(1)
     ik = pl.program_id(2)
     nk = pl.num_programs(2)
@@ -57,6 +59,11 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         k = k_ref[0].astype(jnp.float32)                  # (bk, hd)
         v = v_ref[0].astype(jnp.float32)
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+        if t_valid is not None:
+            # padded tail keys (t not on the block grid) must not attend
+            kpos = ik * bk + jax.lax.broadcasted_iota(
+                jnp.int32, (g * bq, bk), 1)
+            s = jnp.where(kpos < t_valid, s, NEG_INF)
         if causal:
             # row r of the flattened (G, bq) tile is query position
             # iq*bq + r % bq (group index r // bq shares the position)
@@ -95,12 +102,25 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
     assert k.shape[0] == bkh and k.shape[1] == t, (q.shape, k.shape)
     bq = min(bq, t)
     bk = min(bk, t)
-    assert t % bq == 0 and t % bk == 0, (t, bq, bk)
-    grid = (bkh, t // bq, t // bk)
+    # t need not land on the block grid (odd prompt lengths): pad q/k/v
+    # up to a common multiple of both block sizes and mask padded key
+    # positions inside the kernel; padded query rows are sliced away.
+    # When t already divides, t_valid stays None and the lowered kernel
+    # is bit-identical to the unpadded build.
+    step = bq * bk // math.gcd(bq, bk)
+    t_pad = -(-t // step) * step
+    t_valid = None
+    if t_pad != t:
+        pad = ((0, t_pad - t), (0, 0))
+        q = jnp.pad(q, ((0, 0), (0, 0)) + pad)
+        k = jnp.pad(k, ((0, 0),) + pad)
+        v = jnp.pad(v, ((0, 0),) + pad)
+        t_valid = t
+    grid = (bkh, t_pad // bq, t_pad // bk)
     scale = hd ** -0.5
     out = pl.pallas_call(
         functools.partial(_kernel, causal=causal, g=g, bq=bq, bk=bk, hd=hd,
-                          scale=scale),
+                          scale=scale, t_valid=t_valid),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, g, bq, hd), lambda b, i, j: (b, 0, i, 0)),
@@ -108,7 +128,7 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
         ],
         out_specs=pl.BlockSpec((1, g, bq, hd), lambda b, i, j: (b, 0, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bkh, g, t, hd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((bkh, g, t_pad, hd), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((g * bq, 1), jnp.float32),
             pltpu.VMEM((g * bq, 1), jnp.float32),
@@ -118,6 +138,7 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)
+    out = out[:, :, :t]
     return out[:, 0] if squeeze else out
 
 

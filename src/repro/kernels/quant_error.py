@@ -74,11 +74,21 @@ def quant_error_pallas(w: jax.Array, scales: jax.Array, mean_sq: jax.Array,
     g = effective_group_size(k, spec.group_size)
     bk = min(bk, k)
     bn = min(bn, n)
-    if bk % g != 0:
-        bk = g
-    assert k % bk == 0 and n % bn == 0, (k, n, bk, bn)
+    if bk % g != 0 or k % bk != 0:
+        bk = g  # group size divides k by construction (same invariant
+        #         as quant_matmul_pallas), so bk=g always tiles K
+    assert k % bk == 0, (k, bk, g)  # repro: noqa[RPR007] bk=g fallback above guarantees this
+    # n need not divide the tile: zero-pad the weight columns.  A padded
+    # column has w=0 in every group, so lo=hi=0 -> scale clamps to 1e-8,
+    # zero=0, codes=0, w_hat=0 — its error contribution is exactly 0 in
+    # both the symmetric and asymmetric branches, and the final /n uses
+    # the original n.
+    pad_n = (-n) % bn
+    if pad_n:
+        w = jnp.pad(w, ((0, 0), (0, pad_n)))
+    np_ = n + pad_n
 
-    grid = (a, k // bk, n // bn)
+    grid = (a, k // bk, np_ // bn)
     msq2 = mean_sq.reshape(1, k)
     out = pl.pallas_call(
         functools.partial(_kernel, g=g, spec=spec),

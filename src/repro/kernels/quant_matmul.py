@@ -69,9 +69,10 @@ def quant_matmul_pallas(x: jax.Array, codes: jax.Array, scale: jax.Array,
         bk = g  # never straddle a quant group across K blocks; the
         #         group size always divides k, so this also covers
         #         k not a multiple of the default tile
-    assert k % bk == 0, (k, bk, g)
-    assert bk % 2 == 0, f"quant group size must be even to unpack " \
-                        f"nibble-packed codes in K blocks (bk={bk})"
+    assert k % bk == 0, (k, bk, g)  # repro: noqa[RPR007] bk=g fallback above guarantees this
+    assert bk % 2 == 0, (  # repro: noqa[RPR007] packing invariant, not a tile-shape constraint
+        f"quant group size must be even to unpack nibble-packed codes "
+        f"in K blocks (bk={bk})")
     # m and n need not divide the MXU tile (hymba's d_model=1600 leaves
     # 1600 % 128 = 64): pad both up to the tile and slice the result.
     # Padded activation rows are zeros; padded weight columns carry

@@ -78,7 +78,7 @@ class ServeEngine:
                  prefill_chunk="auto", clock=None):
         self.model = model
         self.mesh = mesh
-        self.clock = clock if clock is not None else time.time
+        self.clock = clock if clock is not None else time.time  # repro: noqa[RPR006] the seam's own wall-clock default
         # serve-time sharding (DESIGN.md §13): with a mesh, weights are
         # laid out tensor-parallel once at admission-to-engine time —
         # QuantizedTensor codes *and* scales split on the same logical
@@ -202,7 +202,7 @@ class ServeEngine:
         """jit ``fn``; with a mesh, every call (so also the trace) runs
         under ``axis_rules(mesh, rules)``.  The raw jitted callable stays
         reachable as ``.jitted`` (lowering/compile introspection)."""
-        jf = jax.jit(fn)
+        jf = jax.jit(fn)  # repro: noqa[RPR001] this IS the seam every other serve jit routes through
         if self.mesh is None:
             return jf
 
@@ -436,7 +436,7 @@ class ServeEngine:
         st = run.st
         self._stepper.plain_step(st)
         self._m["decode_steps"] += 1
-        toks = np.asarray(st.slot_last)
+        toks = np.asarray(st.slot_last)  # repro: noqa[RPR002] the designed per-step budget: one int32 per slot for emission
         now = self.clock()
         for s in range(self.n_slots):
             req = st.req[s]
@@ -466,7 +466,7 @@ class ServeEngine:
         st = run.st
         out, n_acc = self._stepper.spec_cycle(st, k_eff)
         self._m["decode_steps"] += 1
-        last_np = np.asarray(st.slot_last).copy()
+        last_np = np.asarray(st.slot_last).copy()  # repro: noqa[RPR002] burst emission rewrites slot_last on host; k+1 int32 per slot
         now = self.clock()
         for s in range(self.n_slots):
             req = st.req[s]

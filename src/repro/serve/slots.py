@@ -116,11 +116,21 @@ class SlotTable:
         return [self.fill[s] is not None
                 for s in range(self.n) if self.active[s]]
 
-    def input_tokens(self) -> np.ndarray:
+    def input_tokens(self):
         """Next decode-step input per slot: the last sampled token,
-        with filling slots teacher-forced from their prompt tail."""
-        sl = np.asarray(self.slot_last).copy()
-        for s in range(self.n):
-            if self.active[s] and self.fill[s] is not None:
-                sl[s] = self.fill[s][0]
+        with filling slots teacher-forced from their prompt tail.
+
+        Steady state (nothing filling) passes ``slot_last`` through as
+        the device array — the steppers feed it straight back into the
+        jitted step, so the common decode path never round-trips the
+        sampled tokens device→host→device.  Only a slot mid-prompt
+        (chunked or prefix-hit admission) forces the transfer, because
+        its next input lives in a host-side prompt tail."""
+        filling = [s for s in range(self.n)
+                   if self.active[s] and self.fill[s] is not None]
+        if not filling:
+            return self.slot_last
+        sl = np.asarray(self.slot_last).copy()  # repro: noqa[RPR002] fill tokens live on host; only chunked-admission steps pay this
+        for s in filling:
+            sl[s] = self.fill[s][0]
         return sl

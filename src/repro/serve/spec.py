@@ -152,7 +152,7 @@ class SpecRunner:
         if self.shares:
             return
         dc = dict(self.dcache,
-                  len=jnp.asarray(np.asarray(lens, np.int32)))
+                  len=jnp.asarray(np.asarray(lens, np.int32)))  # repro: noqa[RPR002] lens is already a host array (engine slot_len)
         _, self.dcache = self._dtrack(self.draft.params, dc,
                                       jnp.asarray(last)[:, None])
         self.m["draft_steps"] += 1
@@ -284,9 +284,9 @@ class SpecRunner:
             out, n_acc, cache, self.dcache = fn(
                 self.engine.params, self.draft.params, cache, self.dcache,
                 lens, last, active, temps, top_k, top_p, key)
-        n_acc = np.asarray(n_acc)
-        self._account(np.asarray(active), n_acc, k)
-        return np.asarray(out), n_acc, cache
+        n_acc = np.asarray(n_acc)  # repro: noqa[RPR002] acceptance depths drive the host emission loop
+        self._account(np.asarray(active), n_acc, k)  # repro: noqa[RPR002] active mask is a host-side bool row
+        return np.asarray(out), n_acc, cache  # repro: noqa[RPR002] burst tokens are emitted host-side; (k+1) int32 per slot per cycle
 
     def run_cycle_paged(self, store, table, lens, last, active, temps,
                         top_k, top_p, key, k: int):
@@ -302,9 +302,9 @@ class SpecRunner:
             out, n_acc, store, self.dcache = fn(
                 self.engine.params, self.draft.params, store, table,
                 self.dcache, lens, last, active, temps, top_k, top_p, key)
-        n_acc = np.asarray(n_acc)
-        self._account(np.asarray(active), n_acc, k)
-        return np.asarray(out), n_acc, store
+        n_acc = np.asarray(n_acc)  # repro: noqa[RPR002] acceptance depths drive the host emission loop
+        self._account(np.asarray(active), n_acc, k)  # repro: noqa[RPR002] active mask is a host-side bool row
+        return np.asarray(out), n_acc, store  # repro: noqa[RPR002] burst tokens are emitted host-side; (k+1) int32 per slot per cycle
 
     def _account(self, active, n_acc, k: int):
         """accepted_tokens counts *acceptances* (draft quality, the

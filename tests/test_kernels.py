@@ -55,6 +55,24 @@ def test_quant_error_kernel_vs_oracle(a, sym):
                                rtol=1e-4)
 
 
+@pytest.mark.parametrize("k,n,g", [(320, 100, 64), (256, 100, 128),
+                                   (320, 128, 64)])
+def test_quant_error_kernel_non_tile_shapes(k, n, g):
+    """Tile-divisibility regression for the error kernel (RPR007 fix):
+    n not a multiple of the column tile pads with zero columns (which
+    contribute exactly zero error), and k=320 with the default bk=256
+    falls back to bk=g instead of tripping an assert."""
+    a = 3
+    w = jax.random.normal(jax.random.PRNGKey(k + n), (k, n))
+    scales = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (a, k))) + 0.5
+    msq = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (k,)))
+    spec = QuantSpec(bits=4, group_size=g)
+    got = quant_error_pallas(w, scales, msq, spec)
+    expect = ref.quant_error_ref(w, scales, msq, spec)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect),
+                               rtol=1e-4)
+
+
 @pytest.mark.parametrize("m", [1, 3, 130, 192])
 @pytest.mark.parametrize("k,n,g", [(128, 1600, 64), (1600, 128, 100),
                                    (1600, 1600, 100)])
@@ -132,6 +150,26 @@ def test_flash_attention_vs_oracle(shape, causal):
     out = flash_attention_pallas(q, k, v, causal=causal)
     ref = flash_attention_ref(q, k, v, causal=causal)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("t", [37, 150])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_non_tile_seq_len(t, causal):
+    """Sequence lengths that don't divide the (bq, bk) tiles pad to the
+    tile grid with masked-out keys (RPR007 fix: the kernel used to
+    assert divisibility instead of padding)."""
+    from repro.kernels.flash_attention import (flash_attention_pallas,
+                                               flash_attention_ref)
+    bh, hd = 3, 64
+    ks = jax.random.split(jax.random.PRNGKey(t), 3)
+    q = jax.random.normal(ks[0], (bh, t, hd))
+    k = jax.random.normal(ks[1], (bh, t, hd))
+    v = jax.random.normal(ks[2], (bh, t, hd))
+    out = flash_attention_pallas(q, k, v, causal=causal)
+    expect = flash_attention_ref(q, k, v, causal=causal)
+    assert out.shape == (bh, t, hd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5)
 
 
 def test_flash_attention_gqa_grouped_vs_chunked():

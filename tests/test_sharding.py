@@ -44,6 +44,27 @@ def test_axis_used_once_priority():
     assert spec[2] is None and spec[3] == "model"
 
 
+def test_warn_dropped_keyed_on_logical_name(caplog):
+    """The warn-once dedupe key includes the logical axis *name*: two
+    sites that agree on position, shape and dropped mesh axes but drop
+    a different logical axis must both warn (the name is not derivable
+    from the other key parts when a caller resolves aliases)."""
+    import logging
+
+    from repro.dist.sharding import _warn_dropped
+
+    axes = ["batch", None, "kv_heads", None]
+    shape = (257, 3, 11, 129)            # distinctive: module-global set
+    with caplog.at_level(logging.WARNING, logger="repro.dist.sharding"):
+        _warn_dropped(axes, shape, 2, "kv_heads", ("model",), 16)
+        _warn_dropped(axes, shape, 2, "kv_heads", ("model",), 16)  # dup
+        _warn_dropped(axes, shape, 2, "kv_seq", ("model",), 16)    # new
+    warns = [r for r in caplog.records if "NOT sharded" in r.message]
+    assert len(warns) == 2
+    assert "kv_heads" in warns[0].message
+    assert "kv_seq" in warns[1].message
+
+
 def test_missing_mesh_axis_dropped():
     mesh = FakeMesh({"data": 16, "model": 16})  # no "pod"
     spec = logical_to_spec(["batch"], shape=(256,), mesh=mesh,
