@@ -154,6 +154,101 @@ def bench_chunked_ttft(emit=print, *, waves=10, shorts_per_wave=2,
     return out
 
 
+def bench_overload(emit=print, *, requests=60, rate=None, n_slots=4,
+                   max_len=128, new_tokens=8, deadline_s=None,
+                   n_pages=None, seed=0, record=True):
+    """Seeded overload run: arrivals well above the measured service
+    rate into a page pool sized below peak demand, with SLO-aware
+    admission shedding doomed requests.  The contract (asserted here
+    and in CI): the loop never crashes, every request reaches exactly
+    one terminal outcome (completed + shed + expired + truncated ==
+    submitted), and survivors' tail TTFT stays reported.  Returns the
+    report with ``shed_rate`` and survivor percentiles."""
+    from repro.serve import (Request, Scheduler, ServeEngine, SLOConfig,
+                             TrafficConfig, make_trace)
+
+    cfg, model, qp = _quantized_setup()
+    page_size = 16
+    if n_pages is None:
+        # below peak demand: the pool holds less than what all slots
+        # decoding *typical* (median-length) sequences need at once, so
+        # sustained concurrency must preempt; the longest single request
+        # (prompt cap + generation) still fits on its own
+        med_pages = -(-(12 + new_tokens) // page_size)   # lognormal median
+        cap_pages = -(-(min(48, max_len - new_tokens - 1) + new_tokens + 1)
+                      // page_size)
+        n_pages = 1 + max(cap_pages, n_slots * med_pages - 2)
+    if rate is None or deadline_s is None:
+        # calibrate against *this machine's* compiled service rate: a
+        # closed-loop probe of typical-length requests on an identical
+        # warmed engine (warmup-time estimates are dominated by compile)
+        eng0 = ServeEngine(model, qp, n_slots=n_slots, max_len=max_len,
+                           paged=True, page_size=page_size)
+        _warm(eng0, cfg, new_tokens)
+        rng = np.random.default_rng(7)
+        mk = lambda base: [Request(rid=-(base + i),
+                                   prompt=rng.integers(1, cfg.vocab_size,
+                                                       12 + i % 8)
+                                   .astype(np.int32),
+                                   max_new_tokens=new_tokens)
+                           for i in range(3 * n_slots)]
+        eng0.serve(mk(100))          # first pass compiles partial-batch
+        m0 = eng0.metrics()["serve_time_s"]     # shapes; time the second
+        probe = mk(200)
+        eng0.serve(probe)
+        dt = eng0.metrics()["serve_time_s"] - m0
+        service_rate = len(probe) / max(dt, 1e-6)
+        if rate is None:
+            rate = 3.0 * service_rate
+        if deadline_s is None:
+            # a multiple of the naive drain time (requests/service):
+            # preemption churn on the undersized pool stretches the real
+            # drain well past it, so the backlog's tail is doomed while
+            # the front can still make it — shed and survival
+            # populations both stay non-degenerate
+            deadline_s = max(0.1, 6.0 * requests / service_rate)
+    eng = ServeEngine(model, qp, n_slots=n_slots, max_len=max_len,
+                      paged=True, page_size=page_size, n_pages=n_pages,
+                      slo=SLOConfig(seed=seed))
+    _warm(eng, cfg, new_tokens)
+    tcfg = TrafficConfig(n_requests=requests, process="poisson", rate=rate,
+                         max_new_tokens=new_tokens,
+                         prompt_len_max=min(48, max_len - new_tokens - 1),
+                         vocab_size=cfg.vocab_size, deadline_s=deadline_s,
+                         seed=seed)
+    res = Scheduler(eng).run_traffic(make_trace(tcfg))
+    s, rep = res.summary, res.traffic
+    terminal = (s["completed"] + s["shed"] + s["expired"] + s["truncated"])
+    assert terminal == rep["submitted"], (
+        f"request accounting leak: {terminal} terminal outcomes for "
+        f"{rep['submitted']} submitted ({s})")
+    pool = eng._stepper.pool
+    assert int(pool.ref[1:].sum()) == sum(
+        1 for p in pool.index.values()), \
+        "page refs leaked after overload run"
+    shed_rate = s["shed"] / max(rep["submitted"], 1)
+    out = dict(rep, workload=tcfg.workload(), n_pages=n_pages,
+               shed_rate=round(shed_rate, 4),
+               shed=s["shed"], shed_retried=s["shed_retried"],
+               expired=s["expired"], truncated=s["truncated"],
+               preempted=s["preempted"], resumed=s["resumed"],
+               pressure_events=s["pressure_events"])
+    emit(f"serve/overload_shed_rate,,{shed_rate:.3f}")
+    emit(f"serve/overload_survivor_ttft_p99_ms,,"
+         f"{rep['survivor_ttft_ms']['p99']:.2f}")
+    emit(f"serve/overload_preempted,,{s['preempted']}")
+    if record:
+        _append_row(dict(
+            timestamp=int(time.time()), requests=requests,
+            new_tokens=new_tokens, n_slots=n_slots, max_len=max_len,
+            traffic_process="overload", traffic_rate=f"{rate:.1f}",
+            ttft_p50_ms=f"{rep['survivor_ttft_ms']['p50']:.2f}",
+            ttft_p95_ms=f"{rep['survivor_ttft_ms']['p95']:.2f}",
+            ttft_p99_ms=f"{rep['survivor_ttft_ms']['p99']:.2f}",
+            queue_delay_p95_ms=f"{rep['queue_delay_ms']['p95']:.2f}"))
+    return out
+
+
 def _sanity(report: dict):
     """The smoke contract: percentiles ordered and finite, every
     submitted request completed."""
@@ -206,7 +301,37 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="CI mode: seeded traffic, sanity-assert the "
                          "percentile report, write nothing")
+    ap.add_argument("--overload", action="store_true",
+                    help="overload scenario: arrivals at ~2x the measured "
+                         "service rate, page pool below peak demand, "
+                         "SLO-aware shedding; asserts the terminal-outcome "
+                         "accounting and records shed rate + survivor p99 "
+                         "TTFT")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="overload scenario per-request SLO (default: "
+                         "scaled to the measured service rate)")
     args = ap.parse_args()
+    if args.overload:
+        requests = 24 if args.smoke else args.requests
+        rep = bench_overload(print, requests=requests,
+                             n_slots=args.n_slots, max_len=args.max_len,
+                             new_tokens=args.new_tokens,
+                             deadline_s=args.deadline_s,
+                             record=not (args.smoke or args.no_record))
+        if not (args.smoke or args.no_record):
+            _write_json({"overload": dict(rep,
+                                          timestamp=int(time.time()))})
+        oc = rep["outcomes"]
+        print(f"overload@{rep['workload']['rate']:.1f}/s over "
+              f"{rep['n_pages']} pages: {rep['submitted']} submitted -> "
+              f"{oc.get('completed', 0)} completed, {rep['shed']} shed "
+              f"({rep['shed_retried']} retried), {rep['expired']} expired, "
+              f"{rep['truncated']} truncated | {rep['preempted']} "
+              f"preempted / {rep['resumed']} resumed | survivor ttft p99 "
+              f"{rep['survivor_ttft_ms']['p99']:.1f} ms")
+        print("overload accounting OK"
+              + (" (smoke)" if args.smoke else ""))
+        return
     if args.smoke:
         traffic = bench_traffic(print, requests=args.requests,
                                 rate=args.rate, n_slots=args.n_slots,

@@ -7,10 +7,11 @@ from .rpr004_accum_dtype import KernelAccumDtype
 from .rpr005_serve_loop import SingleServeLoop
 from .rpr006_clock_seam import ClockSeamBypass
 from .rpr007_tile_assert import BareTileAssert
+from .rpr008_pool_raise import PoolRaiseInServe
 
 RULE_CLASSES = [RawJitInServe, HostSyncInJitted, ScalarArgsWithoutStatic,
                 KernelAccumDtype, SingleServeLoop, ClockSeamBypass,
-                BareTileAssert]
+                BareTileAssert, PoolRaiseInServe]
 
 
 def all_rules():

@@ -1,0 +1,70 @@
+"""RPR008: terminal pool/capacity errors raised on the serve path.
+
+PR 9's backpressure protocol (DESIGN.md §16) removed the crash mode
+where a full :class:`~repro.serve.pages.PagePool` killed the serve loop
+mid-decode: serve-path allocators call ``try_alloc()`` and convert a
+``None`` into :class:`~repro.serve.pages.PagePressure`, which the
+engine resolves by preempting a slot.  A bare ``raise PoolExhausted``
+(or a pool/capacity ``RuntimeError``) anywhere in ``serve/``
+reintroduces the crash — one overloaded request would take down every
+in-flight neighbor.
+
+The one legitimate raise is the protocol's own terminal path
+(:meth:`PagePool.alloc`, for direct offline callers), which carries the
+documented suppression.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import List
+
+from ..lint import Finding, Rule, SourceFile, last_seg
+
+_TERMINAL = {"PoolExhausted"}
+_GENERIC = {"RuntimeError", "MemoryError"}
+_CAPACITY_MSG = re.compile(r"pool|page|capacit|exhaust|out of memory",
+                           re.IGNORECASE)
+
+
+def _raised_name(node: ast.Raise):
+    exc = node.exc
+    if isinstance(exc, ast.Call):
+        exc = exc.func
+    return last_seg(exc) if exc is not None else None
+
+
+def _msg_text(node: ast.Raise) -> str:
+    """Every string constant under the raised expression (f-string parts
+    included) — enough to tell a capacity error from an unrelated one."""
+    if node.exc is None:
+        return ""
+    parts = [n.value for n in ast.walk(node.exc)
+             if isinstance(n, ast.Constant) and isinstance(n.value, str)]
+    return " ".join(parts)
+
+
+class PoolRaiseInServe(Rule):
+    code = "RPR008"
+    title = "terminal pool/capacity raise on the serve path"
+    scope = ("repro/serve/",)
+
+    def check(self, sf: SourceFile) -> List[Finding]:
+        out = []
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Raise):
+                continue
+            name = _raised_name(node)
+            if name in _TERMINAL:
+                out.append(self.finding(
+                    sf, node,
+                    f"raise {name} crashes the serve loop — allocate via "
+                    "try_alloc() and raise PagePressure so the engine can "
+                    "preempt instead"))
+            elif name in _GENERIC and _CAPACITY_MSG.search(_msg_text(node)):
+                out.append(self.finding(
+                    sf, node,
+                    f"capacity {name} on the serve path bypasses the "
+                    "backpressure protocol — raise PagePressure (or shed) "
+                    "so overload degrades instead of crashing"))
+        return out

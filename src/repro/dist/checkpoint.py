@@ -181,7 +181,8 @@ def _manifest_ok(path: str) -> bool:
         return False
 
 
-def _write_dir(ckpt_dir: str, step: int, host_tree, keep: Optional[int]):
+def _write_dir(ckpt_dir: str, step: int, host_tree, keep: Optional[int],
+               fault_hook=None):
     os.makedirs(ckpt_dir, exist_ok=True)
     final = os.path.join(ckpt_dir, _step_name(step))
     _reclaim_stale_tmps(ckpt_dir)
@@ -209,6 +210,11 @@ def _write_dir(ckpt_dir: str, step: int, host_tree, keep: Optional[int]):
                 offset += len(buf)
             f.flush()
             os.fsync(f.fileno())
+        if fault_hook is not None:
+            # fault-injection seam (serve/faults.py): raises between the
+            # data write and manifest promotion — the window a crash
+            # must leave only an unpromoted .tmp, never a half-step
+            fault_hook()
         # manifest lands via its own write-then-rename so a kill mid-write
         # leaves only manifest.json.part — a scratch dir counts as a
         # complete checkpoint iff manifest.json exists *and parses*
@@ -260,11 +266,14 @@ def _write_dir(ckpt_dir: str, step: int, host_tree, keep: Optional[int]):
     return final
 
 
-def save(ckpt_dir: str, step: int, tree, *, keep: Optional[int] = None) -> str:
+def save(ckpt_dir: str, step: int, tree, *, keep: Optional[int] = None,
+         fault_hook=None) -> str:
     """Atomically write ``tree`` as ``<ckpt_dir>/step_XXXXXXXX``.
 
     ``keep`` (optional) retains only the newest ``keep`` complete
     checkpoints after a successful write.  Returns the checkpoint path.
+    ``fault_hook`` (tests) runs between the data write and manifest
+    promotion; whatever it raises must leave no half-written step.
 
     Multi-process runs: every process must call this (the host snapshot
     allgathers process-sharded leaves, a collective), but only process 0
@@ -274,11 +283,13 @@ def save(ckpt_dir: str, step: int, tree, *, keep: Optional[int] = None) -> str:
     host_tree = _host_tree(tree)
     if jax.process_index() != 0:
         return os.path.join(ckpt_dir, _step_name(step))
-    return _write_dir(ckpt_dir, step, host_tree, keep)
+    return _write_dir(ckpt_dir, step, host_tree, keep,
+                      fault_hook=fault_hook)
 
 
 def save_async(ckpt_dir: str, step: int, tree,
-               *, keep: Optional[int] = None) -> threading.Thread:
+               *, keep: Optional[int] = None,
+               fault_hook=None) -> threading.Thread:
     """Like :func:`save` but the file I/O runs on a background thread.
 
     The device->host snapshot happens before returning, so callers may
@@ -294,7 +305,8 @@ def save_async(ckpt_dir: str, step: int, tree,
 
     def work():
         try:
-            _write_dir(ckpt_dir, step, host_tree, keep)
+            _write_dir(ckpt_dir, step, host_tree, keep,
+                       fault_hook=fault_hook)
         except BaseException as e:  # re-raised by wait_pending
             record["exc"] = e
 

@@ -27,6 +27,8 @@ from repro.launch.mesh import make_local_mesh
 from repro.models.registry import build_model
 from repro.serve.draft import registry_draft, self_int8_draft
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.faults import FaultConfig, FaultInjector
+from repro.serve.overload import SLOConfig
 from repro.serve.spec import SpecConfig
 
 
@@ -58,6 +60,17 @@ def parse_mesh(arg):
         raise argparse.ArgumentTypeError(
             f"--mesh sizes must be >= 1, got {arg!r}")
     return data, model
+
+
+def parse_at(arg):
+    """Comma-separated 0-based event indices -> tuple of ints."""
+    if not arg:
+        return ()
+    try:
+        return tuple(int(x) for x in arg.split(","))
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"expected comma-separated ints, got {arg!r}")
 
 
 def main():
@@ -109,6 +122,31 @@ def main():
                     help="serve tensor-parallel on a (data, model) device "
                          "mesh, e.g. --mesh 1,4 (requires data*model "
                          "devices; DESIGN.md §13)")
+    # -- overload response (DESIGN.md §16) --
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request SLO relative to submission; enables "
+                         "SLO-aware admission (doomed requests shed early)")
+    ap.add_argument("--slo-margin", type=float, default=1.0,
+                    help="shed when now + margin*queue_delay_est exceeds "
+                         "the deadline")
+    ap.add_argument("--quota-tokens", type=int, default=0,
+                    help="per-tenant in-flight token quota (0 = off)")
+    # -- deterministic fault injection (serve/faults.py) --
+    ap.add_argument("--fault-alloc-at", type=parse_at, default=(),
+                    metavar="I,J,...",
+                    help="veto the i-th page allocations (0-based) to "
+                         "exercise backpressure/preemption")
+    ap.add_argument("--fault-alloc-every", type=int, default=0,
+                    help="veto every Nth page allocation")
+    ap.add_argument("--fault-preempt-at", type=parse_at, default=(),
+                    metavar="I,J,...",
+                    help="force-preempt the latest-deadline slot at the "
+                         "i-th serve-loop iterations")
+    ap.add_argument("--fault-stall-at", type=parse_at, default=(),
+                    metavar="I,J,...",
+                    help="inject a slow step at the i-th loop iterations")
+    ap.add_argument("--fault-stall-s", type=float, default=0.0)
+    ap.add_argument("--fault-seed", type=int, default=0)
     args = ap.parse_args()
 
     mesh = None
@@ -146,12 +184,26 @@ def main():
         else:
             draft = registry_draft(args.draft, tiny=args.tiny)
         spec_cfg = SpecConfig(k=args.spec_k, draft=draft)
+    slo = None
+    if args.deadline_s is not None or args.quota_tokens > 0:
+        slo = SLOConfig(margin=args.slo_margin,
+                        quota_tokens=args.quota_tokens,
+                        seed=args.fault_seed)
+    faults = None
+    if (args.fault_alloc_at or args.fault_alloc_every
+            or args.fault_preempt_at or args.fault_stall_at):
+        faults = FaultInjector(FaultConfig(
+            seed=args.fault_seed,
+            alloc_fail_at=args.fault_alloc_at,
+            alloc_fail_every=args.fault_alloc_every,
+            preempt_at=args.fault_preempt_at,
+            stall_at=args.fault_stall_at, stall_s=args.fault_stall_s))
     eng = ServeEngine(model, qparams,
                       n_slots=min(args.n_slots, args.requests),
                       max_len=args.max_len, paged=args.paged,
                       page_size=args.page_size, n_pages=args.n_pages,
                       prefill_chunk=args.prefill_chunk,
-                      spec=spec_cfg, mesh=mesh)
+                      spec=spec_cfg, mesh=mesh, slo=slo, faults=faults)
     if args.paged and not eng.paged:
         print("note: model cache layout does not support paging; "
               "serving from the dense cache")
@@ -161,6 +213,11 @@ def main():
     reqs = [Request(rid=i, prompt=data.sequence(40_000_000 + i, 12),
                     max_new_tokens=args.new_tokens)
             for i in range(args.requests)]
+    if args.deadline_s is not None:
+        t_sub = eng.clock()
+        for r in reqs:
+            r.arrival = t_sub
+            r.deadline = t_sub + args.deadline_s
     t0 = time.time()
     results = eng.serve(reqs)
     dt = time.time() - t0
@@ -183,6 +240,14 @@ def main():
               f"prefix hits {m['prefix_hits']} "
               f"({m['prefix_hit_tokens']} tokens skipped), "
               f"cow copies {m['cow_copies']}")
+    if slo is not None or faults is not None or m["preempted"]:
+        print(f"overload: shed {m['shed']} "
+              f"(+{m['shed_retried']} retried), "
+              f"expired {m['expired']}, truncated {m['truncated']}, "
+              f"preempted {m['preempted']}, resumed {m['resumed']}, "
+              f"pressure events {m['pressure_events']}")
+    if m["faults"] is not None:
+        print(f"faults: {m['faults']}")
     if m["spec"]:
         print(f"spec: k={m['spec_k']} draft={m['draft_kind']}, "
               f"accept_rate {m['accept_rate']:.2f}, "

@@ -4,9 +4,11 @@ from .cache_ops import (copy_page, merge_slots, scatter_prefill_pages,
                         truncate_slot, write_slot)
 from .draft import ModelDraft, SelfDraft, registry_draft, self_int8_draft
 from .engine import Request, ServeEngine, TraceCounter
+from .faults import FaultConfig, FaultInjector, burstify
 from .loadgen import ArrivalFeed, TrafficConfig, make_trace, summarize
-from .pages import PagePool, block_hashes
-from .slots import SlotTable
+from .overload import SLOAdmission, SLOConfig, request_tokens
+from .pages import PagePool, PagePressure, PoolExhausted, block_hashes
+from .slots import SlotTable, effective_prompt
 from .sampler import (draw_from_probs, policy_probs, sample_tokens,
                       spec_accept)
 from .scheduler import RunResult, Scheduler

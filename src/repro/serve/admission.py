@@ -29,7 +29,8 @@ from __future__ import annotations
 import numpy as np
 
 from .buckets import bucket_for
-from .pages import block_hashes
+from .pages import PagePressure, block_hashes
+from .slots import effective_prompt
 
 
 class _Strategy:
@@ -48,15 +49,20 @@ class PrefixHitAdmission(_Strategy):
         eng = self.engine
         st, stp = run.st, eng._stepper
         head = run.queue[0]
+        if not eng._eligible(head):
+            return False
+        eff = effective_prompt(head)
         hashes = run.hashes_of(head)
         if not stp.pool.lookup_blocks(hashes):
             return False
         # prefix hit: map the shared pages, skip their prefill, stream
-        # the tail through decode
+        # the tail through decode.  A resumed preempted request lands
+        # here by design — its blocks were registered at preemption, so
+        # only the partial tail block recomputes.
         run.queue.pop(0)
         s = free[0]
         matched = stp.pool.match(hashes)
-        npr = len(head.prompt)
+        npr = len(eff)
         # always leave >= 1 token to process so the first sampled token
         # has logits; a fully-cached prompt re-feeds its last token (the
         # write into the shared final page is what triggers
@@ -64,10 +70,10 @@ class PrefixHitAdmission(_Strategy):
         cached = min(len(matched) * stp.page_size, npr - 1)
         for j, phys in enumerate(matched):
             stp.table[s, j] = phys
-        eng._admit_bind(run, head, s)
+        eng._admit_bind(run, head, s, eff)
         st.hashes[s] = hashes
         st.slot_len[s] = cached
-        st.fill[s] = np.asarray(head.prompt, np.int32)[cached:]
+        st.fill[s] = eff[cached:]
         eng._m["prefix_hits"] += 1
         eng._m["prefix_hit_tokens"] += cached
         return True
@@ -81,55 +87,95 @@ class BucketedAdmission(_Strategy):
         paged = stp.kind == "paged"
         chunk = eng.prefill_chunk
 
-        def admit_len(r) -> int:
-            n = len(r.prompt)
+        def admit_len(n: int) -> int:
             return min(n, chunk) if chunk else n
 
-        head = queue[0]
-        b = bucket_for(eng.buckets, admit_len(head))
+        # head = first *eligible* request (quota-blocked tenants are
+        # skipped, not shed — they stay queued until in-flight work
+        # releases their tokens); immediates (expired / shed / zero
+        # budget) drain as encountered
+        progress, head = False, None
+        i = 0
+        while i < len(queue):
+            r = queue[i]
+            if eng._handle_immediate(r, run.results):
+                queue.pop(i)
+                progress = True
+                continue
+            if eng._eligible(r):
+                head = r
+                break
+            i += 1
+        if head is None:
+            return progress
+        b = bucket_for(eng.buckets, admit_len(len(effective_prompt(head))))
         group, seen_block0 = [], set()
+        # paged capacity pre-check: never bind more prompt pages than
+        # the pool can produce right now (free + evictable), so the
+        # reservation below can only fail under an injected fault
+        pages_left = stp.pool.available() if paged else 0
         i = 0
         while i < len(queue) and len(group) < len(free):
             r = queue[i]
             if eng._handle_immediate(r, run.results):
                 queue.pop(i)
+                progress = True
                 continue
+            if not eng._eligible(r):
+                i += 1
+                continue
+            eff = effective_prompt(r)
+            al = admit_len(len(eff))
             hs = run.hashes_of(r) if paged else None
             if paged and r is not head and hs and (
                     stp.pool.lookup_blocks(hs) or hs[0] in seen_block0):
                 i += 1
                 continue
-            if bucket_for(eng.buckets, admit_len(r)) == b:
-                group.append((queue.pop(i), hs))
-                if paged and hs:
-                    seen_block0.add(hs[0])
+            if bucket_for(eng.buckets, al) != b or (
+                    paged and stp.pool.pages_for(al) > pages_left):
+                i += 1
                 continue
-            i += 1
+            if paged:
+                pages_left -= stp.pool.pages_for(al)
+                if hs:
+                    seen_block0.add(hs[0])
+            group.append((queue.pop(i), hs, eff))
         if not group:
-            return True      # drained immediates; pipeline re-checks
+            return progress
+        reserved = None
+        if paged:
+            try:
+                reserved = stp.reserve_admit(
+                    [stp.pool.pages_for(admit_len(len(eff)))
+                     for (_, _, eff) in group])
+            except PagePressure:
+                # injected allocation fault mid-reservation: nothing was
+                # bound — re-queue the group and let the engine relieve
+                for (r, _, _) in reversed(group):
+                    queue.insert(0, r)
+                raise
         tokens = np.zeros((st.n, b), np.int32)
         plen = np.ones(st.n, np.int32)
         admit_mask = np.zeros(st.n, bool)
         targets = free[:len(group)]
         placed = []
-        for (req, hs), s in zip(group, targets):
-            p = np.asarray(req.prompt, np.int32)
-            al = admit_len(req)
-            tokens[s, :al] = p[:al]
+        for (req, hs, eff), s in zip(group, targets):
+            al = admit_len(len(eff))
+            tokens[s, :al] = eff[:al]
             plen[s] = al
             admit_mask[s] = True
-            eng._admit_bind(run, req, s)
+            eng._admit_bind(run, req, s, eff)
             st.hashes[s] = hs
             st.slot_len[s] = al
-            if al < len(p):
+            if al < len(eff):
                 # chunked admission: the rest of the prompt
                 # teacher-forces through decode; no token emits until
                 # the fill drains (the sampled first token below is a
                 # mid-prompt continuation, discarded)
-                st.fill[s] = p[al:]
+                st.fill[s] = eff[al:]
                 eng._m["chunked_admissions"] += 1
             placed.append((req, s))
-        stp.admit_group(st, tokens, plen, admit_mask, placed)
+        stp.admit_group(st, tokens, plen, admit_mask, placed, reserved)
         eng._m["prefill_batches"] += 1
         toks = np.asarray(st.slot_last)
         for req, s in placed:
@@ -143,18 +189,25 @@ class SingleAdmission(_Strategy):
     def admit(self, run, free) -> bool:
         eng = self.engine
         st = run.st
-        req = None
-        while run.queue:
-            cand = run.queue.pop(0)
-            if not eng._handle_immediate(cand, run.results):
-                req = cand
+        progress, req = False, None
+        i = 0
+        while i < len(run.queue):
+            cand = run.queue[i]
+            if eng._handle_immediate(cand, run.results):
+                run.queue.pop(i)
+                progress = True
+                continue
+            if eng._eligible(cand):
+                req = run.queue.pop(i)
                 break
+            i += 1
         if req is None:
-            return True
+            return progress
         s = free[0]
-        eng._admit_bind(run, req, s)
-        st.slot_len[s] = len(req.prompt)
-        eng._stepper.admit_single(st, req, s)
+        eff = effective_prompt(req)
+        eng._admit_bind(run, req, s, eff)
+        st.slot_len[s] = len(eff)
+        eng._stepper.admit_single(st, req, s, eff)
         eng._m["prefill_batches"] += 1
         eng._post_admit(run, req, s, int(np.asarray(st.slot_last)[s]))
         return True
@@ -208,9 +261,15 @@ class ServeRun:
         self._hash_cache: dict = {}
 
     def hashes_of(self, req) -> list:
+        """Block hashes of the request's *effective* prompt.  The memo
+        key includes the effective length: a preempted request comes
+        back with its emitted tokens folded into the prompt, so its
+        chain grows between admissions and a stale entry would miss the
+        pages registered at preemption."""
+        eff = effective_prompt(req)
         ent = self._hash_cache.get(id(req))
-        if ent is None or ent[0] is not req:
-            ent = (req, block_hashes(req.prompt,
-                                     self._engine._stepper.page_size))
+        if ent is None or ent[0] is not req or ent[1] != len(eff):
+            ent = (req, len(eff),
+                   block_hashes(eff, self._engine._stepper.page_size))
             self._hash_cache[id(req)] = ent
-        return ent[1]
+        return ent[2]

@@ -59,6 +59,9 @@ from repro.dist.sharding import (SERVE_DECODE_RULES, SERVE_PREFILL_RULES,
 from .admission import AdmissionPipeline, ServeRun
 from .buckets import bucket_for, default_buckets
 from .cache_ops import truncate_slot
+from .overload import (SLOAdmission, never_admissible, pick_victim,
+                       preempt_slot, relieve_pressure, shed_request)
+from .pages import PagePressure
 from .sampler import policy_in_use, sample_tokens
 from .slots import Request, SlotTable, TraceCounter, empty_tokens
 from .stepper import DenseStepper, PagedStepper
@@ -75,10 +78,17 @@ class ServeEngine:
                  max_len: int = 512, buckets=None, rng_seed: int = 0,
                  paged: bool = False, page_size: int = 16,
                  n_pages: Optional[int] = None, spec=None, mesh=None,
-                 prefill_chunk="auto", clock=None):
+                 prefill_chunk="auto", clock=None, slo=None, faults=None):
         self.model = model
         self.mesh = mesh
         self.clock = clock if clock is not None else time.time  # repro: noqa[RPR006] the seam's own wall-clock default
+        # overload seams (DESIGN.md §16): slo is an SLOConfig or
+        # SLOAdmission (shed gate + tenant quotas), faults a
+        # FaultInjector consulted by the pool and the serve loop.  Both
+        # must bind before the stepper so the page pool sees them.
+        self.faults = faults
+        self.slo = (slo if slo is None or isinstance(slo, SLOAdmission)
+                    else SLOAdmission(slo))
         # serve-time sharding (DESIGN.md §13): with a mesh, weights are
         # laid out tensor-parallel once at admission-to-engine time —
         # QuantizedTensor codes *and* scales split on the same logical
@@ -144,7 +154,12 @@ class ServeEngine:
         self._m = dict(tokens_generated=0, decode_steps=0, prefill_batches=0,
                        admitted=0, completed=0, expired=0, truncated=0,
                        prefix_hits=0, prefix_hit_tokens=0, fill_steps=0,
-                       chunked_admissions=0, serve_time_s=0.0)
+                       chunked_admissions=0, serve_time_s=0.0,
+                       shed=0, shed_retried=0, preempted=0, resumed=0,
+                       pressure_events=0)
+        self._stall_spins = 0
+        self._hold_fill = False      # one-iteration admission hold after
+                                     # a pressure-relieving preemption
         self._req_stats: dict = {}   # rid -> dict(tokens=..., steps=...)
 
     # -- stepper state (back-compat attribute surface) -----------------------
@@ -298,21 +313,40 @@ class ServeEngine:
         return np.asarray(out, np.int32)
 
     # -- per-request accounting ----------------------------------------------
+    def _settle(self, req: Request, results: dict, out, counter: str):
+        """Record a request's terminal outcome without a slot."""
+        req.outcome = counter
+        results[req.rid] = out
+        self._m[counter] += 1
+        if req.on_finish:
+            req.on_finish(req.rid, out)
+
     def _handle_immediate(self, req: Request, results: dict) -> bool:
-        """True if the request completes without ever taking a slot."""
+        """True if the request completes without ever taking a slot.
+        A deadline exactly at the admission instant still admits (the
+        cutoff is strict ``>``).  A resumed preempted request that
+        expires while re-queued keeps the tokens it already produced
+        (truncated, not expired).  The SLO shed gate runs last: fresh
+        requests whose deadline the queue-delay estimate says cannot be
+        met are rejected before they waste a slot."""
         if req.deadline is not None and self.clock() > req.deadline:
-            results[req.rid] = _empty()
-            self._m["expired"] += 1
-            if req.on_finish:
-                req.on_finish(req.rid, results[req.rid])
+            out = (np.asarray(req.out_tokens, np.int32)
+                   if req.resume and req.out_tokens else _empty())
+            self._settle(req, results,
+                         out, "truncated" if len(out) else "expired")
             return True
         if req.max_new_tokens <= 0:
-            results[req.rid] = _empty()
-            self._m["completed"] += 1
-            if req.on_finish:
-                req.on_finish(req.rid, results[req.rid])
+            self._settle(req, results, _empty(), "completed")
+            return True
+        if self.slo is not None and not req.resume \
+                and self.slo.should_shed(req, self.clock()):
+            shed_request(self, req, results)
             return True
         return False
+
+    def _eligible(self, req: Request) -> bool:
+        """Admissible right now (tenant under its in-flight quota)."""
+        return self.slo is None or self.slo.quota_ok(req)
 
     def _emit(self, req: Request, tok: int):
         req.out_tokens.append(tok)
@@ -335,14 +369,25 @@ class ServeEngine:
         return {rid: s["tokens"] / max(s["steps"], 1)
                 for rid, s in self._req_stats.items()}
 
-    def _admit_bind(self, run: ServeRun, req: Request, s: int):
+    def _admit_bind(self, run: ServeRun, req: Request, s: int, eff=None):
         """Bind + engine-level admission accounting (shared by every
-        admission strategy)."""
+        admission strategy).  ``eff`` is the effective prompt — prompt
+        plus already-emitted tokens for a resumed preemptee.  Admission
+        is where the SLO layer observes queue delay (arrival to bind,
+        the same quantity the traffic percentiles report) and charges
+        the tenant's in-flight quota."""
+        if self.slo is not None:
+            self.slo.acquire(req)
+            if req.arrival is not None:
+                self.slo.observe(self.clock() - req.arrival)
+        if req.resume:
+            self._m["resumed"] += 1
         run.st.bind(req, s)
+        req.resume = False
         self._m["admitted"] += 1
-        self._req_stats[req.rid] = dict(tokens=0, steps=0)
+        self._req_stats.setdefault(req.rid, dict(tokens=0, steps=0))
         if self._spec is not None:
-            self._spec.admit_slot(s, req.prompt)
+            self._spec.admit_slot(s, req.prompt if eff is None else eff)
         if req.on_admit:
             req.on_admit(req.rid)
 
@@ -358,7 +403,10 @@ class ServeEngine:
         req = st.req[s]
         out = np.asarray(req.out_tokens, np.int32)
         run.results[req.rid] = out
+        req.outcome = counter
         self._m[counter] += 1
+        if self.slo is not None:
+            self.slo.release(req)
         st.clear(s)
         self._stepper.retire(st, s)
         if req.on_finish:
@@ -388,6 +436,12 @@ class ServeEngine:
         ``feed`` (open-loop traffic), arrivals whose time has passed are
         polled into the queue every iteration and the loop idles —
         without busy-spinning the decode step — until the feed drains.
+
+        Page exhaustion never escapes this loop: a step (or an
+        injected-fault admission reservation) raising
+        :class:`.pages.PagePressure` is relieved by preempting the
+        latest-deadline slot and retrying — throughput degrades, the
+        loop does not die (DESIGN.md §16).
         """
         self._req_stats = {}         # per-serve scope (no unbounded growth)
         t0 = self.clock()
@@ -398,27 +452,69 @@ class ServeEngine:
         self._stepper.begin()
 
         while True:
+            if self.faults is not None:
+                self._fault_tick(run)
             if feed is not None:
                 for r in feed.poll(self.clock()):
                     self._check_prompt(r)
                     run.queue.append(r)
-            if run.queue and st.free():
-                self._admission.fill_slots(run)
-            if not st.any_active():
-                if feed is not None and feed.pending():
-                    self._idle_wait(feed)
-                    continue
-                if run.queue:
-                    continue    # immediates drained; re-admit
-                break
-            k_eff = self._spec_k(st.slot_len, st.active, st.req,
-                                 filling=st.filling())
-            if k_eff >= 1:
-                self._spec_step(run, k_eff)
-            else:
-                self._plain_step(run)
+            try:
+                # a pressure-relieving preemption holds admission for one
+                # iteration: the retried step gets first claim on the
+                # freed pages (otherwise the loop would re-admit the
+                # victim right back into the same shortage — a livelock,
+                # not backpressure)
+                hold_fill, self._hold_fill = self._hold_fill, False
+                if run.queue and st.free() and not hold_fill:
+                    self._admission.fill_slots(run)
+                if not st.any_active():
+                    waiting = feed is not None and feed.pending()
+                    if run.queue and self._stall_shed(run, waiting):
+                        continue
+                    if waiting:
+                        self._idle_wait(feed)
+                        continue
+                    if run.queue:
+                        continue    # immediates drained; re-admit
+                    break
+                k_eff = self._spec_k(st.slot_len, st.active, st.req,
+                                     filling=st.filling())
+                if k_eff >= 1:
+                    self._spec_step(run, k_eff)
+                else:
+                    self._plain_step(run)
+            except PagePressure as pp:
+                self._hold_fill = relieve_pressure(self, run, pp)
         self._m["serve_time_s"] += self.clock() - t0
         return run.results
+
+    def _fault_tick(self, run: ServeRun):
+        """Consume this iteration's injected faults: scheduled stalls
+        burn through the injector's ``advance``; a scheduled forced
+        preemption evicts the normal victim (exercising preempt/resume
+        even without page pressure, dense included)."""
+        self.faults.on_loop()
+        if self.faults.take_preempt():
+            victim = pick_victim(run.st)
+            if victim is not None:
+                self.faults.count_preempt()
+                preempt_slot(self, run, victim)
+
+    def _stall_shed(self, run: ServeRun, waiting: bool) -> bool:
+        """No slot active but the queue is non-empty: with every quota
+        free and the pool at its emptiest, a head that still cannot
+        bind never will — shed it terminally.  A bounded spin backstop
+        catches anything else (pathological fault schedules) unless
+        arrivals are still pending (``waiting`` — idling is then the
+        correct behavior, not a stall)."""
+        head = run.queue[0]
+        stuck = never_admissible(self, head)
+        self._stall_spins = 0 if stuck or waiting else self._stall_spins + 1
+        if stuck is None and self._stall_spins < 4096:
+            return False
+        self._stall_spins = 0
+        shed_request(self, run.queue.pop(0), run.results, terminal=True)
+        return True
 
     def _idle_wait(self, feed):
         """No active slots but arrivals still pending: sleep (real time,
@@ -562,6 +658,8 @@ class ServeEngine:
             m["prefix_block_hits"] = self.pool.prefix_block_hits
         m["retrace_count"] = sum(max(0, c.traces - 1) for c in counters)
         m["buckets"] = list(self.buckets)
+        m["faults"] = (self.faults.metrics()
+                       if self.faults is not None else None)
         m["spec"] = self._spec is not None
         if self._spec is not None:
             m.update(self._spec.metrics())

@@ -25,6 +25,7 @@ traffic against a fake clock without monkeypatching.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import math
 from typing import Callable, List, Optional, Tuple
@@ -49,6 +50,7 @@ class TrafficConfig:
     prefix_len: int = 16
     max_new_tokens: int = 8
     vocab_size: int = 256
+    deadline_s: Optional[float] = None   # per-request SLO, relative to arrival
     seed: int = 0
 
     def workload(self) -> dict:
@@ -98,7 +100,8 @@ def make_trace(cfg: TrafficConfig,
             prompt = rng.integers(1, cfg.vocab_size, n).astype(np.int32)
         trace.append((float(times[i]),
                       Request(rid=rid_base + i, prompt=prompt,
-                              max_new_tokens=cfg.max_new_tokens)))
+                              max_new_tokens=cfg.max_new_tokens,
+                              rel_deadline=cfg.deadline_s)))
     return trace
 
 
@@ -127,13 +130,31 @@ class ArrivalFeed:
                and self.t0 + self._items[self._i][0] <= now):
             offset, req = self._items[self._i]
             self._i += 1
+            t_arr = self.t0 + offset
+            if req.arrival is None:
+                # first release stamps arrival and resolves a relative
+                # SLO into an absolute deadline; a shed-retried
+                # re-release keeps both (the client has been waiting
+                # since the original arrival)
+                req.arrival = t_arr
+                if req.rel_deadline is not None and req.deadline is None:
+                    req.deadline = t_arr + req.rel_deadline
             if self.record is not None:
-                self.record(req.rid, self.t0 + offset)
+                self.record(req.rid, t_arr)
             out.append(req)
         # same-poll arrivals honor EDF ordering before hitting the FIFO
         out.sort(key=lambda r: (r.deadline if r.deadline is not None
                                 else float("inf")))
         return out
+
+    def push(self, t_abs: float, req: Request):
+        """Re-schedule a request (shed retry-after): it re-enters the
+        open loop at absolute time ``t_abs`` through the same valve —
+        inserted past the cursor so the remaining tail stays sorted."""
+        off = t_abs - self.t0 if self.t0 is not None else t_abs
+        keys = [it[0] for it in self._items[self._i:]]
+        j = self._i + bisect.bisect_right(keys, off)
+        self._items.insert(j, (off, req))
 
     def pending(self) -> bool:
         return self._i < len(self._items)
@@ -145,13 +166,21 @@ class ArrivalFeed:
 
 
 def _pct(xs, q) -> float:
-    return float(np.percentile(np.asarray(xs, np.float64), q))
+    """Percentile hardened for overload reports: an empty sample (a
+    run that shed or expired everything) reports 0.0, not a crash or a
+    NaN that poisons JSON dashboards downstream."""
+    arr = np.asarray(xs, np.float64)
+    if arr.size == 0:
+        return 0.0
+    arr = arr[np.isfinite(arr)]
+    if arr.size == 0:
+        return 0.0
+    return float(np.percentile(arr, q))
 
 
 def _dist_ms(xs) -> dict:
     if not xs:
-        return dict(p50=float("nan"), p95=float("nan"), p99=float("nan"),
-                    mean=float("nan"), n=0)
+        return dict(p50=0.0, p95=0.0, p99=0.0, mean=0.0, n=0)
     ms = [1e3 * x for x in xs]
     return dict(p50=_pct(ms, 50), p95=_pct(ms, 95), p99=_pct(ms, 99),
                 mean=float(np.mean(ms)), n=len(ms))
@@ -167,6 +196,12 @@ def summarize(records: dict) -> dict:
       queueing cost: prefill time is excluded),
     * ``per_token_ms`` — steady decode latency, (end - first) over the
       tokens after the first.
+
+    Every percentile is zero (never NaN) on empty samples, so a fully
+    shed overload run still produces a valid report.  ``outcomes``
+    tallies per-request terminal states (completed / expired /
+    truncated / shed) plus shed-retry and preemption totals when the
+    records carry them.
     """
     recs = list(records.values())
     done = [r for r in recs if r.get("end") is not None]
@@ -181,6 +216,17 @@ def summarize(records: dict) -> dict:
     ends = [r["end"] for r in done]
     starts = [r["arrival"] for r in recs if r.get("arrival") is not None]
     duration = (max(ends) - min(starts)) if ends and starts else 0.0
+    outcomes: dict = {}
+    for r in recs:
+        o = r.get("outcome")
+        if o is not None:
+            outcomes[o] = outcomes.get(o, 0) + 1
+    # survivors = requests that produced their full output despite the
+    # overload; their tail TTFT is the headline SLO number
+    surv_ttft = [r["first"] - r["arrival"] for r in recs
+                 if r.get("outcome") == "completed"
+                 and r.get("first") is not None
+                 and r.get("arrival") is not None]
     return {
         "submitted": len(recs),
         "completed": len(done),
@@ -190,4 +236,8 @@ def summarize(records: dict) -> dict:
         "ttft_ms": _dist_ms(ttft),
         "queue_delay_ms": _dist_ms(queue_delay),
         "per_token_ms": _dist_ms(per_token),
+        "outcomes": outcomes,
+        "survivor_ttft_ms": _dist_ms(surv_ttft),
+        "retries": sum(r.get("retries", 0) for r in recs),
+        "preempts": sum(r.get("preempts", 0) for r in recs),
     }

@@ -37,9 +37,30 @@ Invariants (DESIGN.md §10):
 from __future__ import annotations
 
 import hashlib
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
+
+
+class PoolExhausted(RuntimeError):
+    """Terminal pool-exhaustion error for *direct* :meth:`PagePool.alloc`
+    callers (tests, offline tools).  The serve path never raises this:
+    steppers allocate through :meth:`PagePool.try_alloc` and convert a
+    ``None`` into :class:`PagePressure`, which the engine resolves by
+    preempting a slot (DESIGN.md §16)."""
+
+
+class PagePressure(Exception):
+    """Backpressure signal: a serve-path page allocation could not be
+    satisfied right now.  Not an error — the engine catches it, preempts
+    the lowest-priority slot (or sheds, as a last resort), and retries
+    the step.  ``slot`` is the slot that needed the page (None during
+    admission reservation)."""
+
+    def __init__(self, slot: Optional[int] = None, needed: int = 1):
+        super().__init__(f"page pressure (slot={slot}, needed={needed})")
+        self.slot = slot
+        self.needed = needed
 
 
 def block_hashes(tokens: Sequence[int], page_size: int) -> List[bytes]:
@@ -65,12 +86,16 @@ class PagePool:
 
     TRASH = 0
 
-    def __init__(self, n_pages: int, page_size: int):
+    def __init__(self, n_pages: int, page_size: int, faults=None):
         if n_pages < 2:
             raise ValueError("need at least the trash page plus one "
                              f"allocatable page, got n_pages={n_pages}")
         self.n_pages = n_pages
         self.page_size = page_size
+        # fault-injection seam (serve/faults.py): when set, alloc_ok()
+        # may deterministically veto an allocation so chaos tests can
+        # exercise the backpressure/preemption protocol on a full bench
+        self.faults = faults
         # pop() hands out ascending ids (cosmetic, but makes tests and
         # logs readable)
         self.free = list(range(n_pages - 1, 0, -1))
@@ -90,17 +115,47 @@ class PagePool:
     def pages_in_use(self) -> int:
         return self.n_pages - 1 - len(self.free)
 
-    def alloc(self) -> int:
-        """Take a fresh page (refcount 1).  Falls back to evicting an
-        index-only page; raises if the pool is truly exhausted."""
+    def evictable(self) -> int:
+        """Prefix-index pages with no other owner — reclaimable on
+        demand by :meth:`try_alloc`'s eviction fallback."""
+        return sum(1 for p in self.index.values() if self.ref[p] == 1)
+
+    def available(self) -> int:
+        """Pages an allocator could obtain right now (free list plus
+        index-only evictables).  Admission checks this *before* binding
+        slots so a group reservation can only fail under injected
+        faults, never from a miscounted capacity."""
+        return len(self.free) + self.evictable()
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages needed to hold ``n_tokens`` cache positions."""
+        return -(-int(n_tokens) // self.page_size)
+
+    def try_alloc(self) -> Optional[int]:
+        """Take a fresh page (refcount 1), or ``None`` when the pool is
+        exhausted (after the index-eviction fallback) or an injected
+        fault vetoes the allocation.  This is the *only* allocator on
+        the serve path — exhaustion routes through the engine's
+        backpressure protocol instead of an exception (DESIGN.md §16)."""
+        if self.faults is not None and not self.faults.alloc_ok():
+            return None
         if not self.free and not self._evict_one():
-            raise RuntimeError(
-                f"page pool exhausted ({self.n_pages - 1} pages, "
-                f"page_size={self.page_size}); raise n_pages")
+            return None
         p = self.free.pop()
         self.ref[p] = 1
         self.alloc_count += 1
         self.in_use_peak = max(self.in_use_peak, self.pages_in_use())
+        return p
+
+    def alloc(self) -> int:
+        """Terminal-path variant of :meth:`try_alloc` for direct callers
+        outside the serve loop; raises :class:`PoolExhausted` instead of
+        returning ``None``."""
+        p = self.try_alloc()
+        if p is None:
+            raise PoolExhausted(  # repro: noqa[RPR008] the protocol's own terminal path — serve steppers call try_alloc and never reach this
+                f"page pool exhausted ({self.n_pages - 1} pages, "
+                f"page_size={self.page_size}); raise n_pages")
         return p
 
     def _evict_one(self) -> bool:

@@ -48,6 +48,7 @@ class Scheduler:
         self.engine = engine
         self._heap: list = []
         self._seq = itertools.count()
+        self._queued_rids: set = set()
         self.last_summary: dict = {}
 
     @property
@@ -66,7 +67,19 @@ class Scheduler:
         ``deadline`` is an absolute ``time.time()`` cutoff.  ``on_token``
         is called as ``on_token(rid, token)`` for every generated token
         (streaming); ``on_finish(rid, tokens)`` once on completion,
-        expiry, or truncation."""
+        expiry, truncation, or shed.
+
+        Duplicate rids are rejected: results are keyed by rid, so a
+        double-queued id would silently drop one request's output.
+
+        With an SLO-enabled engine the EDF key gains a secondary
+        weighted-fairness component (per-tenant virtual time): at equal
+        deadlines a heavy tenant's backlog sorts behind a light
+        tenant's submissions."""
+        if request.rid in self._queued_rids:
+            raise ValueError(
+                f"rid {request.rid} is already queued — results are "
+                "keyed by rid, so reuse would drop one request's output")
         if deadline is not None:
             request.deadline = deadline
         if on_token is not None:
@@ -74,7 +87,10 @@ class Scheduler:
         if on_finish is not None:
             request.on_finish = on_finish
         key = request.deadline if request.deadline is not None else float("inf")
-        heapq.heappush(self._heap, (key, next(self._seq), request))
+        fair = (self.engine.slo.fair_key(request)
+                if self.engine.slo is not None else 0.0)
+        heapq.heappush(self._heap, (key, fair, next(self._seq), request))
+        self._queued_rids.add(request.rid)
         return request.rid
 
     def pending(self) -> int:
@@ -88,7 +104,8 @@ class Scheduler:
         and per-request ``tokens_per_step`` and, for speculative
         engines, ``accept_rate``/``draft_share`` — instead of leaving
         those buried in engine-level counters."""
-        reqs = [heapq.heappop(self._heap)[2] for _ in range(len(self._heap))]
+        reqs = [heapq.heappop(self._heap)[-1] for _ in range(len(self._heap))]
+        self._queued_rids.clear()
         m0 = self.engine.metrics()
         out = RunResult()
         if reqs:
@@ -109,6 +126,9 @@ class Scheduler:
             "completed": d("completed"),
             "expired": d("expired"),
             "truncated": d("truncated"),
+            "shed": d("shed"),
+            "preempted": d("preempted"),
+            "resumed": d("resumed"),
             "tokens_generated": tokens,
             "tokens_per_s": (tokens / dt) if dt > 0 else 0.0,
             "tokens_per_step": tokens / max(steps, 1),
@@ -144,13 +164,17 @@ class Scheduler:
         for offset, req in items:
             rec = records[req.rid] = dict(
                 scheduled=float(offset), arrival=None, admit=None,
-                first=None, end=None, tokens=0)
+                first=None, end=None, tokens=0, outcome=None,
+                retries=0, preempts=0)
             prev_admit = req.on_admit
             prev_token = req.on_token
             prev_finish = req.on_finish
 
             def on_admit(rid, _rec=rec, _p=prev_admit):
-                _rec["admit"] = clock()
+                # first admit only: a preempted-and-resumed request's
+                # queue delay is measured to its original slot grant
+                if _rec["admit"] is None:
+                    _rec["admit"] = clock()
                 if _p:
                     _p(rid)
 
@@ -161,17 +185,32 @@ class Scheduler:
                 if _p:
                     _p(rid, tok)
 
-            def on_finish(rid, out, _rec=rec, _p=prev_finish):
+            def on_finish(rid, out, _rec=rec, _req=req, _p=prev_finish):
                 _rec["end"] = clock()
+                _rec["outcome"] = _req.outcome
+                _rec["retries"] = _req.retries
+                _rec["preempts"] = _req.preempts
+                _rec["tokens"] = len(out)
                 if _p:
                     _p(rid, out)
 
             req.on_admit = on_admit
             req.on_token = on_token
             req.on_finish = on_finish
+        # the arrival timestamp is the FIRST release — a shed-retried
+        # request re-enters the feed but its latency still counts from
+        # the original arrival (the client has been waiting since then)
         feed = ArrivalFeed(
             items,
-            record=lambda rid, t: records[rid].__setitem__("arrival", t))
+            record=lambda rid, t: (
+                records[rid].__setitem__("arrival", t)
+                if records[rid]["arrival"] is None else None))
+        # closed-loop retry seam: a shed request re-arrives after the
+        # engine's jittered retry-after, through the same feed
+        for _, req in items:
+            if req.on_shed is None:
+                req.on_shed = (lambda r, after, _f=feed, _c=clock:
+                               _f.push(_c() + after, r))
         m0 = self.engine.metrics()
         out = RunResult()
         out.update(self.engine.serve((), feed=feed))
@@ -184,6 +223,11 @@ class Scheduler:
             "completed": d("completed"),
             "expired": d("expired"),
             "truncated": d("truncated"),
+            "shed": d("shed"),
+            "shed_retried": d("shed_retried"),
+            "preempted": d("preempted"),
+            "resumed": d("resumed"),
+            "pressure_events": d("pressure_events"),
             "tokens_generated": tokens,
             "tokens_per_s": (tokens / dt) if dt > 0 else 0.0,
             "tokens_per_step": tokens / max(steps, 1),

@@ -34,6 +34,28 @@ class Request:
     on_finish: Optional[Callable[[int, np.ndarray], None]] = None
     on_admit: Optional[Callable[[int], None]] = None
     out_tokens: Optional[list] = None
+    # overload machinery (DESIGN.md §16)
+    tenant: str = "default"      # quota/fairness bucket
+    rel_deadline: Optional[float] = None  # deadline relative to arrival
+    arrival: Optional[float] = None       # stamped by the arrival feed
+    on_shed: Optional[Callable] = None    # (req, retry_after_s) on shed
+    retries: int = 0             # shed-retry re-arrivals so far
+    preempts: int = 0            # times evicted from a slot
+    resume: bool = False         # re-queued mid-flight; keep out_tokens
+    outcome: Optional[str] = None    # completed|expired|truncated|shed
+
+
+def effective_prompt(req: Request) -> np.ndarray:
+    """The token sequence admission must (re)build KV for: the prompt,
+    plus — for a resumed preempted request — everything it already
+    emitted.  Treating prompt+out as the prompt makes resume ordinary
+    admission: prefill (or a prefix-index hit) recomputes exactly the
+    KV that was released, and the first sampled token continues the
+    output stream bit-identically under greedy decoding."""
+    p = np.asarray(req.prompt, np.int32)
+    if req.resume and req.out_tokens:
+        return np.concatenate([p, np.asarray(req.out_tokens, np.int32)])
+    return p
 
 
 class TraceCounter:
@@ -95,8 +117,11 @@ class SlotTable:
 
     def bind(self, req: Request, s: int):
         """Bind a request to slot ``s`` (policy rows + request pointer;
-        engine-level accounting stays in the engine)."""
-        req.out_tokens = []
+        engine-level accounting stays in the engine).  A resumed
+        preempted request keeps its emitted tokens — the finish checks
+        and token budget continue from where the eviction cut it."""
+        if not req.resume:
+            req.out_tokens = []
         self.req[s] = req
         self.active[s] = True
         self.temps[s] = req.temperature

@@ -32,7 +32,7 @@ import numpy as np
 
 from repro.dist.sharding import SERVE_DECODE_RULES, SERVE_PREFILL_RULES, tree_hint
 from .cache_ops import copy_page, merge_slots, scatter_prefill_pages, write_slot
-from .pages import PagePool
+from .pages import PagePool, PagePressure, block_hashes
 from .sampler import sample_tokens
 from .slots import SlotTable, TraceCounter
 
@@ -63,8 +63,35 @@ class DenseStepper:
     def retire(self, st: SlotTable, s: int):
         pass
 
+    def preempt(self, st: SlotTable, s: int):
+        """Release the slot for eviction-and-resume.  Dense KV is a
+        fixed block per slot — nothing to hand back; the resume's
+        teacher-forced prefill recomputes it exactly."""
+        self.retire(st, s)
+
     def fill_done(self, st: SlotTable, s: int):
         pass
+
+    # -- capacity (backpressure protocol; trivially satisfied dense) ---------
+    def reserve_admit(self, counts):
+        """Pre-own pages for a whole admission group before any slot
+        binds (paged only) — a mid-group allocation failure must not
+        leave half-bound slots behind."""
+        return None
+
+    def pages_needed(self, n_tokens: int):
+        """Pages a sequence of ``n_tokens`` needs, or None when the
+        cache kind has no page concept."""
+        return None
+
+    def fits_pool(self, n_pages: int) -> bool:
+        return True
+
+    def slot_overflows(self, st: SlotTable, s: int) -> bool:
+        """True when the slot's own next token can never be allocated
+        (its sequence exceeds the whole pool) — preempting it would
+        livelock; the engine truncates instead."""
+        return False
 
     # -- jitted bodies -------------------------------------------------------
     def _prefill_admit_fn(self, params, tokens, prompt_len, cache,
@@ -121,7 +148,8 @@ class DenseStepper:
         return nxt, cache
 
     # -- admission entry points ----------------------------------------------
-    def admit_group(self, st: SlotTable, tokens, plen, admit_mask, group):
+    def admit_group(self, st: SlotTable, tokens, plen, admit_mask, group,
+                    reserved=None):
         eng = self.engine
         st.slot_last, self.cache = self._prefill_admit(
             eng.params, jnp.asarray(tokens), jnp.asarray(plen),
@@ -129,11 +157,11 @@ class DenseStepper:
             *eng._policy_args(st.temps, st.top_k, st.top_p),
             eng._next_key(), st.slot_last)
 
-    def admit_single(self, st: SlotTable, req, s: int):
+    def admit_single(self, st: SlotTable, req, s: int, eff=None):
         eng = self.engine
+        p = np.asarray(req.prompt if eff is None else eff, np.int32)
         st.slot_last, self.cache = self._admit_one(
-            eng.params,
-            jnp.asarray(np.asarray(req.prompt, np.int32))[None],
+            eng.params, jnp.asarray(p)[None],
             self.cache, jnp.asarray(s, jnp.int32),
             *eng._policy_args([req.temperature], [req.top_k], [req.top_p]),
             eng._next_key(), st.slot_last)
@@ -197,7 +225,8 @@ class PagedStepper(DenseStepper):
         # every slot can hold a full max_len sequence (+1 trash page)
         self.n_pages = (int(n_pages) if n_pages
                         else 1 + eng.n_slots * self.pages_per_slot)
-        self.pool = PagePool(self.n_pages, page_size)
+        self.pool = PagePool(self.n_pages, page_size,
+                             faults=getattr(eng, "faults", None))
         # persistent across serve() calls so the prefix index keeps
         # paying off between bursts; with a mesh the page stores are
         # sharded on the head axis (page tables stay replicated)
@@ -229,8 +258,69 @@ class PagedStepper(DenseStepper):
                 self.pool.decref(int(self.table[s, j]))
                 self.table[s, j] = PagePool.TRASH
 
+    def preempt(self, st: SlotTable, s: int):
+        """Backpressure eviction: publish every *full* KV block —
+        prompt and generated tokens alike — to the prefix index under
+        the effective-sequence hash chain, then release the slot's
+        refs.  The index refs keep those pages alive, so the resume's
+        prefix-hit admission maps them straight back and only the
+        partial tail block recomputes.  (Under continued pressure the
+        registered pages are index-only and evictable — publishing
+        them can never wedge the pool.)"""
+        req = st.req[s]
+        ps = self.page_size
+        nfull = int(st.slot_len[s]) // ps
+        if nfull:
+            eff = np.concatenate([
+                np.asarray(req.prompt, np.int32),
+                np.asarray(req.out_tokens or [], np.int32)])
+            hs = block_hashes(eff[:nfull * ps], ps)
+            for j in range(nfull):
+                if self.table[s, j] != PagePool.TRASH:
+                    self.pool.register(hs[j], int(self.table[s, j]))
+        self.retire(st, s)
+
     def fill_done(self, st: SlotTable, s: int):
         self.register_prompt_pages(st, s)
+
+    # -- capacity (backpressure protocol) ------------------------------------
+    def _take_page(self, slot=None) -> int:
+        p = self.pool.try_alloc()
+        if p is None:
+            raise PagePressure(slot)
+        return p
+
+    def reserve_admit(self, counts):
+        """Allocate every page an admission group needs up front; on
+        failure release the partial reservation and raise
+        :class:`.pages.PagePressure` with nothing bound.  Admission
+        pre-checks ``pool.available()``, so this only fails under an
+        injected allocation fault."""
+        got = []
+        for c in counts:
+            pages = []
+            for _ in range(c):
+                p = self.pool.try_alloc()
+                if p is None:
+                    for q in pages:
+                        self.pool.decref(q)
+                    for lst in got:
+                        for q in lst:
+                            self.pool.decref(q)
+                    raise PagePressure(None, c)
+                pages.append(p)
+            got.append(pages)
+        return got
+
+    def pages_needed(self, n_tokens: int):
+        return self.pool.pages_for(n_tokens)
+
+    def fits_pool(self, n_pages: int) -> bool:
+        return n_pages <= self.n_pages - 1
+
+    def slot_overflows(self, st: SlotTable, s: int) -> bool:
+        return not self.fits_pool(
+            self.pool.pages_for(int(st.slot_len[s]) + 1))
 
     # -- jitted bodies -------------------------------------------------------
     def _hint_store(self, store):
@@ -276,34 +366,40 @@ class PagedStepper(DenseStepper):
     def ensure_writable(self, s: int, pos: int):
         """Make the page holding position ``pos`` safe for slot ``s`` to
         write: allocate if unmapped, copy-on-write if shared with
-        another slot or the prefix index."""
+        another slot or the prefix index.  Exhaustion raises
+        :class:`.pages.PagePressure` for the engine to relieve by
+        preemption — never a terminal error on the serve path."""
         ps = self.page_size
         lp = pos // ps
         phys = int(self.table[s, lp])
         if phys == PagePool.TRASH:
-            self.table[s, lp] = self.pool.alloc()
+            self.table[s, lp] = self._take_page(s)
         elif self.pool.is_shared(phys):
-            fresh = self.pool.alloc()
+            fresh = self._take_page(s)
             self.store = self._copy_page(self.store, phys, fresh)
             self.pool.decref(phys)
             self.table[s, lp] = fresh
             self.pool.cow_copies += 1
 
     def register_prompt_pages(self, st: SlotTable, s: int):
-        """Publish the slot's full prompt blocks for future reuse
-        (the index takes its own ref; partial tail blocks and
-        generated-token pages are never shared)."""
-        for j in range(len(st.req[s].prompt) // self.page_size):
+        """Publish the slot's hashed full blocks for future reuse (the
+        index takes its own ref; partial tail blocks are never shared).
+        ``st.hashes[s]`` covers the *effective* prompt — for a resumed
+        request that includes previously emitted tokens, so its blocks
+        re-register under the same chain they were published to at
+        preemption."""
+        for j in range(len(st.hashes[s])):
             self.pool.register(st.hashes[s][j], int(self.table[s, j]))
 
     # -- admission entry points ----------------------------------------------
-    def admit_group(self, st: SlotTable, tokens, plen, admit_mask, group):
-        """Bucketed batched prefill into scratch, scattered into freshly
-        allocated pages.  ``st.slot_len`` already holds each slot's
-        admitted length (== prompt length, or the first chunk of a
-        chunked admission) — pages are allocated for exactly that many
-        tokens; chunked slots defer prefix-index registration to
-        ``fill_done``."""
+    def admit_group(self, st: SlotTable, tokens, plen, admit_mask, group,
+                    reserved=None):
+        """Bucketed batched prefill into scratch, scattered into pages
+        pre-owned by :meth:`reserve_admit` (``reserved``, one page list
+        per group member in order).  ``st.slot_len`` already holds each
+        slot's admitted length (== prompt length, or the first chunk of
+        a chunked admission); chunked slots defer prefix-index
+        registration to ``fill_done``."""
         eng = self.engine
         st.slot_last, scratch = self._prefill_paged(
             eng.params, jnp.asarray(tokens), jnp.asarray(plen),
@@ -318,7 +414,9 @@ class PagedStepper(DenseStepper):
                           PagePool.TRASH, np.int32)
         for gi, (req, s) in enumerate(group):
             npages = -(-int(st.slot_len[s]) // ps)
-            phys = [self.pool.alloc() for _ in range(npages)]
+            phys = (reserved[gi] if reserved is not None
+                    else [self._take_page(s) for _ in range(npages)])
+            assert len(phys) == npages
             all_ids[gi, :npages] = phys
             self.table[s, :npages] = phys
         self.store = self._scatter_pages(
@@ -329,7 +427,7 @@ class PagedStepper(DenseStepper):
             if st.fill[s] is None:
                 self.register_prompt_pages(st, s)
 
-    def admit_single(self, st: SlotTable, req, s: int):
+    def admit_single(self, st: SlotTable, req, s: int, eff=None):
         raise NotImplementedError(
             "paged serving requires prompt_len prefill")
 

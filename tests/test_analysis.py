@@ -155,6 +155,39 @@ def test_rpr007_bare_tile_assert(tmp_path):
     assert [(f.rule, f.line) for f in findings] == [("RPR007", 2)]
 
 
+def test_rpr008_pool_raise_in_serve(tmp_path):
+    findings = lint_snippet(tmp_path, "repro/serve/stepper.py", (
+        "from .pages import PoolExhausted\n"
+        "\n"
+        "def take_page(pool):\n"
+        "    p = pool.try_alloc()\n"
+        "    if p is None:\n"
+        "        raise PoolExhausted('no pages')\n"
+        "    if p < 0:\n"
+        "        raise RuntimeError('page pool exhausted')\n"), "RPR008")
+    assert [(f.rule, f.line) for f in findings] == [("RPR008", 6),
+                                                    ("RPR008", 8)]
+    # unrelated RuntimeErrors and code outside serve/ are fine
+    assert not lint_snippet(tmp_path, "repro/serve/ok.py", (
+        "def f(x):\n"
+        "    raise RuntimeError('bad dtype')\n"), "RPR008")
+    assert not lint_snippet(tmp_path, "repro/core/pool.py", (
+        "def f():\n"
+        "    raise RuntimeError('pool exhausted')\n"), "RPR008")
+
+
+def test_rpr008_alloc_terminal_path_is_unreachable_from_serve():
+    """The one serve-tree PoolExhausted raise is PagePool.alloc's
+    documented terminal path (noqa'd); the serve steppers allocate via
+    try_alloc, so the whole serve/ package lints clean under RPR008."""
+    serve_dir = REPO / "src" / "repro" / "serve"
+    findings = run_lint([str(serve_dir)], rules_by_code("RPR008"),
+                        base=REPO)
+    assert findings == []
+    text = (serve_dir / "pages.py").read_text()
+    assert "noqa[RPR008]" in text
+
+
 # ---------------------------------------------------------------------------
 # Suppression + baseline mechanics
 # ---------------------------------------------------------------------------

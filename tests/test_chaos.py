@@ -1,0 +1,232 @@
+"""Chaos tests: the serve loop survives deterministic injected faults
+(DESIGN.md §16).  Under seeded allocation failures, stalls, forced
+preemptions, and checkpoint write errors, serve() never raises,
+survivors stay bit-identical to the uninterrupted run, and every
+injected fault is counted in ``metrics()["faults"]``."""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.dist import checkpoint as ckpt
+from repro.models.registry import build_model
+from repro.serve import (FaultConfig, FaultInjector, Request, Scheduler,
+                         ServeEngine, SLOConfig, TrafficConfig, make_trace)
+from repro.serve.faults import burstify
+
+
+@pytest.fixture(scope="module")
+def fp_setup():
+    cfg = ARCHS["llama3-8b"].tiny()
+    m = build_model(cfg)
+    return cfg, m, m.init(jax.random.PRNGKey(0))
+
+
+def _ticker(dt=0.001):
+    tick = {"t": 0.0}
+
+    def clock():
+        tick["t"] += dt
+        return tick["t"]
+    return tick, clock
+
+
+def _reqs(cfg, n=4, new_tokens=8):
+    rng = np.random.default_rng(7)
+    return [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size,
+                                        6 + 3 * i).astype(np.int32),
+                    max_new_tokens=new_tokens) for i in range(n)]
+
+
+def _audit_pool(pool):
+    """Every held page is exactly the set of index-registered pages and
+    each carries refcount 1; everything else is on the free list."""
+    held = int((np.asarray(pool.ref[1:]) > 0).sum())
+    assert held == len(set(pool.index.values()))
+    assert all(pool.ref[p] == 1 for p in pool.index.values())
+    assert len(pool.free) == pool.n_pages - 1 - held
+
+
+# -- page-allocation faults ---------------------------------------------------
+
+def test_alloc_fault_storm_survivors_bit_identical(fp_setup):
+    """Vetoed allocations look like pool exhaustion and route through
+    backpressure (preempt -> retry); greedy outputs match the fault-free
+    run bit-for-bit and every veto is counted."""
+    cfg, m, params = fp_setup
+    mk = lambda: dict(n_slots=2, max_len=64, paged=True, page_size=8,
+                      n_pages=24)
+    ref = ServeEngine(m, params, **mk()).serve(_reqs(cfg))
+    inj = FaultInjector(FaultConfig(alloc_fail_at=(0, 2, 5),
+                                    alloc_fail_every=4, alloc_fail_max=8))
+    eng = ServeEngine(m, params, **mk(), faults=inj)
+    out = eng.serve(_reqs(cfg))
+    met = eng.metrics()
+    assert met["faults"]["alloc_failures"] >= 4
+    assert met["pressure_events"] >= 1
+    assert met["completed"] == len(ref)
+    for rid in ref:
+        np.testing.assert_array_equal(out[rid], ref[rid])
+    _audit_pool(eng._stepper.pool)
+
+
+def test_alloc_fail_every_liveness_cap(fp_setup):
+    """alloc_fail_every=1 vetoes *every* allocation; the alloc_fail_max
+    cap guarantees the storm ends and all requests still finish."""
+    cfg, m, params = fp_setup
+    inj = FaultInjector(FaultConfig(alloc_fail_every=1, alloc_fail_max=6))
+    eng = ServeEngine(m, params, n_slots=2, max_len=64, paged=True,
+                      page_size=8, n_pages=24, faults=inj)
+    out = eng.serve(_reqs(cfg, n=3))
+    met = eng.metrics()
+    assert met["faults"]["alloc_failures"] == 6
+    assert met["completed"] == 3
+    assert all(len(out[r]) == 8 for r in out)
+
+
+def test_pool_exhausted_unreachable_under_chaos(fp_setup):
+    """Tiny pool + allocation storm + forced preemptions: serve() never
+    raises; every request reaches exactly one terminal outcome and the
+    pool's refcounts reconcile afterwards."""
+    cfg, m, params = fp_setup
+    inj = FaultInjector(FaultConfig(alloc_fail_at=(1, 3, 4),
+                                    alloc_fail_every=3, alloc_fail_max=12,
+                                    preempt_at=tuple(range(2, 30, 5))))
+    eng = ServeEngine(m, params, n_slots=3, max_len=64, paged=True,
+                      page_size=8, n_pages=8, faults=inj)
+    n = 5
+    out = eng.serve(_reqs(cfg, n=n))
+    met = eng.metrics()
+    terminal = (met["completed"] + met["shed"] + met["expired"]
+                + met["truncated"])
+    assert terminal == n == len(out)
+    assert met["faults"]["alloc_failures"] >= 3
+    _audit_pool(eng._stepper.pool)
+
+
+# -- stalls -------------------------------------------------------------------
+
+def test_stall_burns_fake_clock_and_is_counted(fp_setup):
+    """Scheduled stalls burn injected time through ``advance`` (the
+    fake clock's, not a real sleep) and surface in the fault counts and
+    serve_time_s."""
+    cfg, m, params = fp_setup
+    tick, clock = _ticker(dt=0.001)
+
+    def advance(dt):
+        tick["t"] += dt
+
+    inj = FaultInjector(FaultConfig(stall_at=(1, 3), stall_s=0.5),
+                        advance=advance)
+    eng = ServeEngine(m, params, n_slots=2, max_len=64, clock=clock,
+                      faults=inj)
+    eng.serve(_reqs(cfg, n=2, new_tokens=4))
+    met = eng.metrics()
+    assert met["faults"]["stalls"] == 2
+    assert met["serve_time_s"] >= 1.0       # two 0.5 s stalls landed
+
+
+def test_stalled_run_expires_requests_against_deadline(fp_setup):
+    """A hung step pushes the clock past per-request deadlines: the
+    affected requests expire (or truncate mid-decode), the loop keeps
+    going, and accounting stays exact."""
+    cfg, m, params = fp_setup
+    tick, clock = _ticker(dt=0.001)
+    inj = FaultInjector(FaultConfig(stall_at=(2,), stall_s=60.0),
+                        advance=lambda dt: tick.__setitem__(
+                            "t", tick["t"] + dt))
+    eng = ServeEngine(m, params, n_slots=1, max_len=64, clock=clock,
+                      faults=inj)
+    reqs = _reqs(cfg, n=3, new_tokens=4)
+    for r in reqs:
+        r.deadline = 30.0                   # < the 60 s injected hang
+    out = eng.serve(reqs)
+    met = eng.metrics()
+    assert met["faults"]["stalls"] == 1
+    assert met["expired"] + met["truncated"] >= 1
+    assert (met["completed"] + met["expired"] + met["truncated"]
+            + met["shed"]) == 3 == len(out)
+
+
+# -- forced preemption + bursts ----------------------------------------------
+
+def test_bursty_chaos_traffic_accounting(fp_setup):
+    """burstify() collapses seeded arrival spans to simultaneous
+    bursts; under bursts + forced preemptions the open-loop run still
+    accounts for every request."""
+    cfg, m, params = fp_setup
+    _, clock = _ticker(dt=0.002)
+    fcfg = FaultConfig(seed=3, burst_every=3, burst_span=4,
+                       preempt_at=tuple(range(4, 40, 7)))
+    inj = FaultInjector(fcfg)
+    eng = ServeEngine(m, params, n_slots=2, max_len=64, paged=True,
+                      page_size=8, n_pages=24, clock=clock,
+                      slo=SLOConfig(seed=1), faults=inj)
+    tcfg = TrafficConfig(n_requests=10, rate=200.0, max_new_tokens=4,
+                         prompt_len_median=8, prompt_len_max=24,
+                         vocab_size=cfg.vocab_size, seed=5)
+    trace = burstify(make_trace(tcfg), fcfg)
+    res = Scheduler(eng).run_traffic(trace)
+    s = res.summary
+    assert (s["completed"] + s["shed"] + s["expired"] + s["truncated"]
+            == res.traffic["submitted"] == 10)
+    assert s["preempted"] == s["resumed"]
+    _audit_pool(eng._stepper.pool)
+
+
+def test_burstify_deterministic_and_order_preserving():
+    fcfg = FaultConfig(seed=9, burst_every=3, burst_span=4)
+    tcfg = TrafficConfig(n_requests=16, rate=50.0, seed=2)
+    a = burstify(make_trace(tcfg), fcfg)
+    b = burstify(make_trace(tcfg), fcfg)
+    assert [t for t, _ in a] == [t for t, _ in b]        # seeded: same spans
+    assert [r.rid for _, r in a] == [r.rid for _, r in b]
+    base = make_trace(tcfg)
+    assert len(a) == len(base)
+    assert sorted(r.rid for _, r in a) == sorted(r.rid for _, r in base)
+    times = [t for t, _ in a]
+    assert times == sorted(times)                        # still a valid trace
+    assert any(t1 == t2 for t1, t2 in zip(times, times[1:]))  # bursts landed
+
+
+# -- checkpoint write faults --------------------------------------------------
+
+def test_ckpt_fault_leaves_no_partial_step(tmp_path):
+    """An injected write error in the atomicity window (payload synced,
+    manifest not yet promoted) must leave no half-written step dir and
+    latest_step untouched; the next attempt succeeds."""
+    d = str(tmp_path / "ckpts")
+    tree = {"w": np.arange(8, dtype=np.float32), "step": np.int32(1)}
+    inj = FaultInjector(FaultConfig(ckpt_fail_at=(1,)))
+    ckpt.save(d, 1, tree, fault_hook=inj.ckpt_hook)      # write #0: clean
+    assert ckpt.latest_step(d) == 1
+    with pytest.raises(OSError, match="injected checkpoint"):
+        ckpt.save(d, 2, tree, fault_hook=inj.ckpt_hook)  # write #1: faulted
+    assert inj.counts["ckpt_failures"] == 1
+    assert ckpt.latest_step(d) == 1                      # promotion never ran
+    entries = sorted(os.listdir(d))
+    assert entries == ["step_00000001"]                  # no tmp, no partial
+    ckpt.save(d, 2, tree, fault_hook=inj.ckpt_hook)      # write #2: clean
+    assert ckpt.latest_step(d) == 2
+    restored = ckpt.restore(d, 2, tree)
+    np.testing.assert_array_equal(restored["w"], tree["w"])
+
+
+# -- metrics surface ----------------------------------------------------------
+
+def test_fault_metrics_surface_in_engine_metrics(fp_setup):
+    cfg, m, params = fp_setup
+    inj = FaultInjector(FaultConfig(alloc_fail_at=(0,), preempt_at=(2,)))
+    eng = ServeEngine(m, params, n_slots=2, max_len=64, paged=True,
+                      page_size=8, n_pages=24, faults=inj)
+    eng.serve(_reqs(cfg, n=2, new_tokens=4))
+    f = eng.metrics()["faults"]
+    for key in ("alloc_failures", "stalls", "forced_preempts",
+                "ckpt_failures", "alloc_calls", "loop_iters",
+                "ckpt_writes"):
+        assert key in f
+    assert f["alloc_calls"] > 0 and f["loop_iters"] > 0
+    assert f["alloc_failures"] == 1
