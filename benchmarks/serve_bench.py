@@ -399,6 +399,48 @@ def bench_spec(emit=print, *, requests=16, new_tokens=32, n_slots=4,
     return tps_n, tps_s, accept, tpstep
 
 
+def bench_obs_overhead(emit=print, *, requests=16, new_tokens=16,
+                       n_slots=4, max_len=128):
+    """Tracing-overhead guard (DESIGN.md §17): identical warmed
+    workloads on a plain engine and on one with a live span tracer +
+    registry histograms.  The observability layer is host-side
+    bookkeeping only — no extra device transfers — so the contract is
+    <= 5% tok/s cost; CI asserts it via the recorded ``overhead_frac``.
+
+    Returns (plain tok/s, traced tok/s, overhead fraction)."""
+    from repro.obs import Tracer
+    from repro.serve import ServeEngine
+
+    cfg, model, qp = _quantized_setup()
+    warm = _requests(cfg, 2 * n_slots, new_tokens, seed=1)
+
+    def timed(tracer):
+        eng = ServeEngine(model, qp, n_slots=n_slots, max_len=max_len,
+                          tracer=tracer)
+        eng.serve([_fresh_request(r) for r in warm])
+        # Best-of-3: the workload is short enough that a single pass is
+        # dominated by scheduler-noise jitter, which would make the <=5%
+        # contract flaky; the minimum time is the honest cost estimate.
+        best, res = 0.0, None
+        for _ in range(3):
+            t0 = time.time()
+            res = eng.serve(_requests(cfg, requests, new_tokens))
+            dt = time.time() - t0
+            best = max(best, sum(len(v) for v in res.values()) / dt)
+        return best, res
+
+    tps_plain, res_plain = timed(None)
+    tps_traced, res_traced = timed(Tracer(capacity=65536))
+    for rid in res_plain:  # tracing must not perturb outputs
+        assert np.array_equal(res_plain[rid], res_traced[rid]), \
+            f"rid {rid} diverged under tracing"
+    overhead = max(0.0, 1.0 - tps_traced / tps_plain)
+    emit(f"serve/obs_plain_tok_s,,{tps_plain:.2f}")
+    emit(f"serve/obs_traced_tok_s,,{tps_traced:.2f}")
+    emit(f"serve/obs_overhead_frac,,{overhead:.4f}")
+    return tps_plain, tps_traced, overhead
+
+
 # Runs in a subprocess because the virtual device count must be set
 # before jax initializes; workload knobs arrive via BENCH_* env vars.
 _SHARDED_CODE = """
@@ -553,6 +595,9 @@ def _bench_all(emit, *, requests=16, new_tokens=16, n_slots=4, max_len=128,
                                            n_slots=n_slots, max_len=max_len,
                                            k=spec_k, record=record)
     sharded = bench_sharded(emit, record=record)
+    tps_o_plain, tps_o_traced, overhead = bench_obs_overhead(
+        emit, requests=requests, new_tokens=new_tokens, n_slots=n_slots,
+        max_len=max_len)
     base = {"requests": requests, "new_tokens": new_tokens,
             "n_slots": n_slots, "max_len": max_len}
     summary = {
@@ -579,6 +624,11 @@ def _bench_all(emit, *, requests=16, new_tokens=16, n_slots=4, max_len=128,
                         workload={"requests": 8, "new_tokens": 8,
                                   "n_slots": 4, "max_len": 64,
                                   "prompt_lens": "uniform[4,32)"}),
+        "obs": {"tok_s_plain": round(tps_o_plain, 2),
+                "tok_s_traced": round(tps_o_traced, 2),
+                "overhead_frac": round(overhead, 4),
+                "budget_frac": 0.05,
+                "workload": dict(base, prompt_lens="uniform[4,48)")},
     }
     if write_json:
         _write_json(summary)
@@ -627,6 +677,11 @@ def main():
             continue
         print(f"sharded {mesh}: {r['tok_s']:.1f} tok/s, "
               f"{r['per_device_cache_bytes']/1e6:.2f} MB cache/device")
+    ob = s["obs"]
+    print(f"obs: {ob['tok_s_plain']:.1f} tok/s plain vs "
+          f"{ob['tok_s_traced']:.1f} traced "
+          f"({100 * ob['overhead_frac']:.1f}% overhead, "
+          f"budget {100 * ob['budget_frac']:.0f}%)")
 
 
 if __name__ == "__main__":

@@ -49,7 +49,8 @@ def _warm(eng, cfg, new_tokens):
 
 
 def bench_traffic(emit=print, *, requests=100, rate=16.0, n_slots=4,
-                  max_len=128, new_tokens=8, seed=0, record=True):
+                  max_len=128, new_tokens=8, seed=0, record=True,
+                  tracer=None):
     """Percentile report under Poisson and bursty arrivals on a fresh
     warmed engine per process.  Returns ``{process: report}`` where each
     report carries its generating workload next to the percentiles."""
@@ -58,7 +59,8 @@ def bench_traffic(emit=print, *, requests=100, rate=16.0, n_slots=4,
     cfg, model, qp = _quantized_setup()
     out = {}
     for process in ("poisson", "bursty"):
-        eng = ServeEngine(model, qp, n_slots=n_slots, max_len=max_len)
+        eng = ServeEngine(model, qp, n_slots=n_slots, max_len=max_len,
+                          tracer=tracer)
         _warm(eng, cfg, new_tokens)
         tcfg = TrafficConfig(n_requests=requests, process=process,
                              rate=rate, max_new_tokens=new_tokens,
@@ -156,7 +158,7 @@ def bench_chunked_ttft(emit=print, *, waves=10, shorts_per_wave=2,
 
 def bench_overload(emit=print, *, requests=60, rate=None, n_slots=4,
                    max_len=128, new_tokens=8, deadline_s=None,
-                   n_pages=None, seed=0, record=True):
+                   n_pages=None, seed=0, record=True, tracer=None):
     """Seeded overload run: arrivals well above the measured service
     rate into a page pool sized below peak demand, with SLO-aware
     admission shedding doomed requests.  The contract (asserted here
@@ -209,7 +211,7 @@ def bench_overload(emit=print, *, requests=60, rate=None, n_slots=4,
             deadline_s = max(0.1, 6.0 * requests / service_rate)
     eng = ServeEngine(model, qp, n_slots=n_slots, max_len=max_len,
                       paged=True, page_size=page_size, n_pages=n_pages,
-                      slo=SLOConfig(seed=seed))
+                      slo=SLOConfig(seed=seed), tracer=tracer)
     _warm(eng, cfg, new_tokens)
     tcfg = TrafficConfig(n_requests=requests, process="poisson", rate=rate,
                          max_new_tokens=new_tokens,
@@ -261,10 +263,12 @@ def _sanity(report: dict):
 
 
 def _bench_all(emit, *, requests=100, rate=16.0, n_slots=4, max_len=128,
-               new_tokens=8, waves=10, record=True, write_json=True):
+               new_tokens=8, waves=10, record=True, write_json=True,
+               tracer=None):
     traffic = bench_traffic(emit, requests=requests, rate=rate,
                             n_slots=n_slots, max_len=max_len,
-                            new_tokens=new_tokens, record=record)
+                            new_tokens=new_tokens, record=record,
+                            tracer=tracer)
     for rep in traffic.values():
         _sanity(rep)
     hol = bench_chunked_ttft(emit, waves=waves, n_slots=n_slots,
@@ -310,14 +314,33 @@ def main():
     ap.add_argument("--deadline-s", type=float, default=None,
                     help="overload scenario per-request SLO (default: "
                          "scaled to the measured service rate)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="export the run's request/step trace as Chrome/"
+                         "Perfetto trace_event JSON (DESIGN.md §17)")
+    ap.add_argument("--trace-capacity", type=int, default=16384,
+                    help="trace ring-buffer size")
     args = ap.parse_args()
+    tracer = None
+    if args.trace_out:
+        from repro.obs import Tracer
+        tracer = Tracer(capacity=args.trace_capacity)
+
+    def export_trace():
+        if tracer is None:
+            return
+        tracer.export(args.trace_out)
+        print(f"trace: {len(tracer.events())} events "
+              f"({tracer.dropped} dropped) -> {args.trace_out} "
+              f"(open in ui.perfetto.dev)")
+
     if args.overload:
         requests = 24 if args.smoke else args.requests
         rep = bench_overload(print, requests=requests,
                              n_slots=args.n_slots, max_len=args.max_len,
                              new_tokens=args.new_tokens,
                              deadline_s=args.deadline_s,
-                             record=not (args.smoke or args.no_record))
+                             record=not (args.smoke or args.no_record),
+                             tracer=tracer)
         if not (args.smoke or args.no_record):
             _write_json({"overload": dict(rep,
                                           timestamp=int(time.time()))})
@@ -331,12 +354,14 @@ def main():
               f"{rep['survivor_ttft_ms']['p99']:.1f} ms")
         print("overload accounting OK"
               + (" (smoke)" if args.smoke else ""))
+        export_trace()
         return
     if args.smoke:
         traffic = bench_traffic(print, requests=args.requests,
                                 rate=args.rate, n_slots=args.n_slots,
                                 max_len=args.max_len,
-                                new_tokens=args.new_tokens, record=False)
+                                new_tokens=args.new_tokens, record=False,
+                                tracer=tracer)
         for process, rep in traffic.items():
             _sanity(rep)
             print(f"{process}: {rep['submitted']} submitted, "
@@ -344,12 +369,14 @@ def main():
                   f"{rep['ttft_ms']['p50']:.1f}/{rep['ttft_ms']['p95']:.1f}/"
                   f"{rep['ttft_ms']['p99']:.1f} ms")
         print("traffic smoke OK")
+        export_trace()
         return
     s = _bench_all(print, requests=args.requests, rate=args.rate,
                    n_slots=args.n_slots, max_len=args.max_len,
                    new_tokens=args.new_tokens, waves=args.waves,
                    record=not args.no_record,
-                   write_json=not args.no_record)["traffic"]
+                   write_json=not args.no_record,
+                   tracer=tracer)["traffic"]
     for process in ("poisson", "bursty"):
         rep = s[process]
         print(f"{process}@{rep['workload']['rate']}/s: "
@@ -363,6 +390,7 @@ def main():
           f"{hol['monolithic']['short_ttft_ms']['p95']:.1f} ms -> chunked "
           f"{hol['chunked']['short_ttft_ms']['p95']:.1f} ms "
           f"({hol['p95_improvement_ms']:+.1f} ms)")
+    export_trace()
 
 
 if __name__ == "__main__":

@@ -8,10 +8,11 @@ from .rpr005_serve_loop import SingleServeLoop
 from .rpr006_clock_seam import ClockSeamBypass
 from .rpr007_tile_assert import BareTileAssert
 from .rpr008_pool_raise import PoolRaiseInServe
+from .rpr009_obs_bypass import ObsBypassInServe
 
 RULE_CLASSES = [RawJitInServe, HostSyncInJitted, ScalarArgsWithoutStatic,
                 KernelAccumDtype, SingleServeLoop, ClockSeamBypass,
-                BareTileAssert, PoolRaiseInServe]
+                BareTileAssert, PoolRaiseInServe, ObsBypassInServe]
 
 
 def all_rules():

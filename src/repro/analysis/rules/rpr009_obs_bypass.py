@@ -1,0 +1,60 @@
+"""RPR009: ad-hoc output or timestamping in ``serve/`` bypassing the
+observability layer.
+
+The serving stack has one sanctioned way to observe itself
+(DESIGN.md §17): counters and histograms go through the engine's
+:class:`repro.obs.MetricsRegistry`, events through the span tracer via
+:mod:`repro.serve.instrument`, and every timestamp through the
+injectable ``clock=`` seam.  A stray ``print()``, a ``logging`` call,
+or a ``datetime.now()`` in ``serve/`` is telemetry the registry cannot
+snapshot, the trace cannot order, and the fake-clock tests cannot see —
+so it rots into an unmaintained side channel.  Launch scripts,
+benchmarks, and tests are out of scope (printing is their job); a
+deliberate exception inside ``serve/`` carries a reasoned
+``# repro: noqa[RPR009]``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..lint import Finding, Rule, SourceFile, dotted
+
+_TS_READS = {"datetime.now", "datetime.utcnow", "datetime.today",
+             "datetime.datetime.now", "datetime.datetime.utcnow",
+             "datetime.date.today"}
+
+
+class ObsBypassInServe(Rule):
+    code = "RPR009"
+    title = "print/logging/raw timestamp in serve/ bypassing repro.obs"
+    scope = ("repro/serve/",)
+
+    def check(self, sf: SourceFile) -> List[Finding]:
+        out = []
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Name) \
+                    and node.func.id == "print":
+                out.append(self.finding(
+                    sf, node,
+                    "print() in serve/ is telemetry the registry cannot "
+                    "snapshot — use the engine's MetricsRegistry or a "
+                    "serve.instrument tracer hook"))
+            elif isinstance(node, (ast.Import, ast.ImportFrom)):
+                mod = getattr(node, "module", None) or ""
+                names = [a.name for a in node.names]
+                if mod == "logging" or "logging" in names:
+                    out.append(self.finding(
+                        sf, node,
+                        "logging in serve/ bypasses the observability "
+                        "layer — emit a registry counter or a tracer "
+                        "instant via serve.instrument instead"))
+            elif isinstance(node, ast.Attribute) \
+                    and dotted(node) in _TS_READS:
+                out.append(self.finding(
+                    sf, node,
+                    f"{dotted(node)} is a raw timestamp outside the "
+                    "clock seam — read the injected clock= callable so "
+                    "fake-clock runs stay deterministic"))
+        return out

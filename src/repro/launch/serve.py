@@ -25,6 +25,7 @@ from repro.data.synthetic import DataConfig, SyntheticLM, calibration_batches
 from repro.dist import checkpoint as ckpt
 from repro.launch.mesh import make_local_mesh
 from repro.models.registry import build_model
+from repro.obs import Tracer, profile_session
 from repro.serve.draft import registry_draft, self_int8_draft
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.faults import FaultConfig, FaultInjector
@@ -147,6 +148,18 @@ def main():
                     help="inject a slow step at the i-th loop iterations")
     ap.add_argument("--fault-stall-s", type=float, default=0.0)
     ap.add_argument("--fault-seed", type=int, default=0)
+    # -- observability (DESIGN.md §17) --
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="export the request/step trace as Chrome/"
+                         "Perfetto trace_event JSON (open in "
+                         "ui.perfetto.dev)")
+    ap.add_argument("--trace-capacity", type=int, default=8192,
+                    help="trace ring-buffer size (oldest events drop "
+                         "beyond it)")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="wrap the run in a jax.profiler trace "
+                         "(TensorBoard-compatible) and annotate jitted "
+                         "dispatches")
     args = ap.parse_args()
 
     mesh = None
@@ -198,12 +211,15 @@ def main():
             alloc_fail_every=args.fault_alloc_every,
             preempt_at=args.fault_preempt_at,
             stall_at=args.fault_stall_at, stall_s=args.fault_stall_s))
+    tracer = (Tracer(capacity=args.trace_capacity)
+              if args.trace_out else None)
     eng = ServeEngine(model, qparams,
                       n_slots=min(args.n_slots, args.requests),
                       max_len=args.max_len, paged=args.paged,
                       page_size=args.page_size, n_pages=args.n_pages,
                       prefill_chunk=args.prefill_chunk,
-                      spec=spec_cfg, mesh=mesh, slo=slo, faults=faults)
+                      spec=spec_cfg, mesh=mesh, slo=slo, faults=faults,
+                      tracer=tracer, profile=bool(args.profile_dir))
     if args.paged and not eng.paged:
         print("note: model cache layout does not support paging; "
               "serving from the dense cache")
@@ -219,7 +235,8 @@ def main():
             r.arrival = t_sub
             r.deadline = t_sub + args.deadline_s
     t0 = time.time()
-    results = eng.serve(reqs)
+    with profile_session(args.profile_dir):
+        results = eng.serve(reqs)
     dt = time.time() - t0
     tok = sum(len(v) for v in results.values())
     for rid in sorted(results):
@@ -233,6 +250,9 @@ def main():
           f"{m['chunked_admissions']} chunked), "
           f"decode: {m['decode_steps']} steps, "
           f"retraces: {m['retrace_count']}")
+    retraced = {k: v for k, v in m["retrace_by_entry"].items() if v}
+    if retraced:
+        print(f"retraces by entry: {retraced}")
     if m["paged"]:
         print(f"paged: page_size={m['page_size']}, "
               f"peak {m['pages_peak']}/{m['pages_total']} pages "
@@ -255,6 +275,14 @@ def main():
               f"draft share {m['draft_share']:.2f} "
               f"({m['spec_cycles']} cycles, "
               f"{m['draft_steps']} draft steps)")
+    if args.trace_out:
+        eng.export_trace(args.trace_out)
+        print(f"trace: {m['trace']['events']} events "
+              f"({m['trace']['dropped']} dropped) -> {args.trace_out} "
+              f"(open in ui.perfetto.dev)")
+    if args.profile_dir:
+        print(f"profile: jax.profiler trace in {args.profile_dir} "
+              f"(tensorboard --logdir)")
 
 
 if __name__ == "__main__":

@@ -5,6 +5,7 @@ from .cache_ops import (copy_page, merge_slots, scatter_prefill_pages,
 from .draft import ModelDraft, SelfDraft, registry_draft, self_int8_draft
 from .engine import Request, ServeEngine, TraceCounter
 from .faults import FaultConfig, FaultInjector, burstify
+from . import instrument
 from .loadgen import ArrivalFeed, TrafficConfig, make_trace, summarize
 from .overload import SLOAdmission, SLOConfig, request_tokens
 from .pages import PagePool, PagePressure, PoolExhausted, block_hashes

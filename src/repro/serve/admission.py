@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from . import instrument
 from .buckets import bucket_for
 from .pages import PagePressure, block_hashes
 from .slots import effective_prompt
@@ -76,6 +77,7 @@ class PrefixHitAdmission(_Strategy):
         st.fill[s] = eff[cached:]
         eng._m["prefix_hits"] += 1
         eng._m["prefix_hit_tokens"] += cached
+        instrument.page_event(eng, "prefix_hit", slot=s, cached=cached)
         return True
 
 
@@ -174,6 +176,10 @@ class BucketedAdmission(_Strategy):
                 # mid-prompt continuation, discarded)
                 st.fill[s] = eff[al:]
                 eng._m["chunked_admissions"] += 1
+                if eng.tracer is not None:
+                    eng.tracer.instant("chunked_admit", cat="step",
+                                       args=dict(slot=s, chunk=al,
+                                                 total=len(eff)))
             placed.append((req, s))
         stp.admit_group(st, tokens, plen, admit_mask, placed, reserved)
         eng._m["prefill_batches"] += 1

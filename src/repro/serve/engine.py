@@ -56,6 +56,8 @@ import numpy as np
 from repro.dist.sharding import (SERVE_DECODE_RULES, SERVE_PREFILL_RULES,
                                  axis_rules, shard_hint, tree_hint,
                                  tree_shardings)
+from repro.obs import MetricsRegistry
+from . import instrument
 from .admission import AdmissionPipeline, ServeRun
 from .buckets import bucket_for, default_buckets
 from .cache_ops import truncate_slot
@@ -78,10 +80,21 @@ class ServeEngine:
                  max_len: int = 512, buckets=None, rng_seed: int = 0,
                  paged: bool = False, page_size: int = 16,
                  n_pages: Optional[int] = None, spec=None, mesh=None,
-                 prefill_chunk="auto", clock=None, slo=None, faults=None):
+                 prefill_chunk="auto", clock=None, slo=None, faults=None,
+                 tracer=None, registry=None, profile: bool = False):
         self.model = model
         self.mesh = mesh
         self.clock = clock if clock is not None else time.time  # repro: noqa[RPR006] the seam's own wall-clock default
+        # observability (DESIGN.md §17): one registry for every
+        # component's counters; an optional span tracer whose clock is
+        # re-pointed at the engine's seam (fake-clock determinism).
+        # Must exist before the stepper/spec/overload components so
+        # their groups land in it.
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.tracer = tracer
+        if tracer is not None:
+            tracer.clock = self.clock
+        self._profile = bool(profile)
         # overload seams (DESIGN.md §16): slo is an SLOConfig or
         # SLOAdmission (shed gate + tenant quotas), faults a
         # FaultInjector consulted by the pool and the serve loop.  Both
@@ -89,6 +102,10 @@ class ServeEngine:
         self.faults = faults
         self.slo = (slo if slo is None or isinstance(slo, SLOAdmission)
                     else SLOAdmission(slo))
+        if self.faults is not None:
+            self.faults.counts.rebind(self.registry)
+        if self.slo is not None:
+            self.slo.bind_registry(self.registry)
         # serve-time sharding (DESIGN.md §13): with a mesh, weights are
         # laid out tensor-parallel once at admission-to-engine time —
         # QuantizedTensor codes *and* scales split on the same logical
@@ -151,12 +168,13 @@ class ServeEngine:
             self._truncate = self._jit(truncate_slot, SERVE_DECODE_RULES)
 
         self._admission = AdmissionPipeline(self)
-        self._m = dict(tokens_generated=0, decode_steps=0, prefill_batches=0,
-                       admitted=0, completed=0, expired=0, truncated=0,
-                       prefix_hits=0, prefix_hit_tokens=0, fill_steps=0,
-                       chunked_admissions=0, serve_time_s=0.0,
-                       shed=0, shed_retried=0, preempted=0, resumed=0,
-                       pressure_events=0)
+        self._m = self.registry.group("serve").init(
+            tokens_generated=0, decode_steps=0, prefill_batches=0,
+            admitted=0, completed=0, expired=0, truncated=0,
+            prefix_hits=0, prefix_hit_tokens=0, fill_steps=0,
+            chunked_admissions=0, serve_time_s=0.0,
+            shed=0, shed_retried=0, preempted=0, resumed=0,
+            pressure_events=0)
         self._stall_spins = 0
         self._hold_fill = False      # one-iteration admission hold after
                                      # a pressure-relieving preemption
@@ -318,6 +336,7 @@ class ServeEngine:
         req.outcome = counter
         results[req.rid] = out
         self._m[counter] += 1
+        instrument.settled(self, req, counter)
         if req.on_finish:
             req.on_finish(req.rid, out)
 
@@ -349,6 +368,8 @@ class ServeEngine:
         return self.slo is None or self.slo.quota_ok(req)
 
     def _emit(self, req: Request, tok: int):
+        if req.t_first is None:
+            instrument.first_token(self, req)
         req.out_tokens.append(tok)
         self._m["tokens_generated"] += 1
         self._req_stats.setdefault(
@@ -383,6 +404,7 @@ class ServeEngine:
         if req.resume:
             self._m["resumed"] += 1
         run.st.bind(req, s)
+        instrument.bound(self, req, s)
         req.resume = False
         self._m["admitted"] += 1
         self._req_stats.setdefault(req.rid, dict(tokens=0, steps=0))
@@ -405,6 +427,7 @@ class ServeEngine:
         run.results[req.rid] = out
         req.outcome = counter
         self._m[counter] += 1
+        instrument.retired(self, req, counter)
         if self.slo is not None:
             self.slo.release(req)
         st.clear(s)
@@ -447,6 +470,7 @@ class ServeEngine:
         t0 = self.clock()
         for r in requests:
             self._check_prompt(r)
+            instrument.enqueued(self, r)
         run = ServeRun(self, requests)
         st = run.st
         self._stepper.begin()
@@ -457,6 +481,7 @@ class ServeEngine:
             if feed is not None:
                 for r in feed.poll(self.clock()):
                     self._check_prompt(r)
+                    instrument.enqueued(self, r)
                     run.queue.append(r)
             try:
                 # a pressure-relieving preemption holds admission for one
@@ -466,7 +491,8 @@ class ServeEngine:
                 # not backpressure)
                 hold_fill, self._hold_fill = self._hold_fill, False
                 if run.queue and st.free() and not hold_fill:
-                    self._admission.fill_slots(run)
+                    with instrument.step_span(self, "admit"):
+                        self._admission.fill_slots(run)
                 if not st.any_active():
                     waiting = feed is not None and feed.pending()
                     if run.queue and self._stall_shed(run, waiting):
@@ -484,6 +510,7 @@ class ServeEngine:
                 else:
                     self._plain_step(run)
             except PagePressure as pp:
+                instrument.page_event(self, "page_pressure", slot=pp.slot)
                 self._hold_fill = relieve_pressure(self, run, pp)
         self._m["serve_time_s"] += self.clock() - t0
         return run.results
@@ -530,9 +557,11 @@ class ServeEngine:
         """One masked decode step + shared post-step bookkeeping
         (teacher-forced fill consumption, emission, finish checks)."""
         st = run.st
-        self._stepper.plain_step(st)
+        with instrument.step_span(self, "decode_step"):
+            self._stepper.plain_step(st)
+            with instrument.step_span(self, "sampler_sync"):
+                toks = np.asarray(st.slot_last)  # repro: noqa[RPR002] the designed per-step budget: one int32 per slot for emission
         self._m["decode_steps"] += 1
-        toks = np.asarray(st.slot_last)  # repro: noqa[RPR002] the designed per-step budget: one int32 per slot for emission
         now = self.clock()
         for s in range(self.n_slots):
             req = st.req[s]
@@ -553,6 +582,7 @@ class ServeEngine:
                 # so the sampled token is the first output
                 st.fill[s] = None
                 self._stepper.fill_done(st, s)
+                instrument.fill_done(self, req)
             self._emit(req, int(toks[s]))
             self._finish_checks(run, req, s, now)
 
@@ -560,9 +590,12 @@ class ServeEngine:
         """One speculative draft+verify burst + shared emission loop;
         rejected suffixes roll back through the stepper hooks."""
         st = run.st
-        out, n_acc = self._stepper.spec_cycle(st, k_eff)
+        with instrument.step_span(self, "spec_cycle", k=k_eff) as sa:
+            out, n_acc = self._stepper.spec_cycle(st, k_eff)
+            sa["accepted"] = int(n_acc.sum())
+            with instrument.step_span(self, "sampler_sync"):
+                last_np = np.asarray(st.slot_last).copy()  # repro: noqa[RPR002] burst emission rewrites slot_last on host; k+1 int32 per slot
         self._m["decode_steps"] += 1
-        last_np = np.asarray(st.slot_last).copy()  # repro: noqa[RPR002] burst emission rewrites slot_last on host; k+1 int32 per slot
         now = self.clock()
         for s in range(self.n_slots):
             req = st.req[s]
@@ -617,65 +650,18 @@ class ServeEngine:
     # -- observability -------------------------------------------------------
     def metrics(self) -> dict:
         """Counter snapshot: throughput, prefill/decode call and trace
-        counts, and the retrace count (compiles beyond the first per
-        jitted entry point — bounded by len(buckets)-1 for the bucketed
-        prefill)."""
-        m = dict(self._m)
-        counters = [self._prefill_admit, self._admit_one, self._prefill1,
-                    self._decode]
-        m["prefill_calls"] = (self._prefill_admit.calls
-                              + self._admit_one.calls + self._prefill1.calls)
-        m["prefill_traces"] = self._prefill_admit.traces
-        m["prefill_traces_single"] = (self._admit_one.traces
-                                      + self._prefill1.traces)
-        m["decode_traces"] = self._decode.traces
-        m["paged"] = self.paged
-        m["mesh"] = dict(self.mesh.shape) if self.mesh is not None else None
-        m["prefill_chunk"] = self.prefill_chunk or 0
-        if self.paged:
-            counters += [self._prefill_paged, self._decode_paged]
-            m["prefill_calls"] += self._prefill_paged.calls
-            m["prefill_traces"] += self._prefill_paged.traces
-            m["decode_traces"] += self._decode_paged.traces
-            m["page_size"] = self.page_size
-            m["pages_total"] = self.n_pages - 1      # minus the trash page
-            m["pages_in_use"] = self.pool.pages_in_use()
-            m["pages_peak"] = self.pool.in_use_peak
-            m["page_bytes"] = self.page_bytes()
-            # peak_cache_bytes counts *pinned* pages — the provisioning
-            # signal a deployment would size n_pages from.  The engine's
-            # actual device allocation is alloc_cache_bytes (the full
-            # pool; with the deadlock-free default sizing that exceeds
-            # the dense cache — pass n_pages to provision to peak+slack)
-            m["peak_cache_bytes"] = self.pool.in_use_peak * self.page_bytes()
-            m["alloc_cache_bytes"] = sum(leaf.nbytes
-                                         for leaf in self._store.values())
-            m["page_allocs"] = self.pool.alloc_count
-            m["cow_copies"] = self.pool.cow_copies
-            m["page_evictions"] = self.pool.evictions
-            m["prefix_index_blocks"] = len(self.pool.index)
-            m["prefix_lookups"] = self.pool.prefix_lookups
-            m["prefix_block_hits"] = self.pool.prefix_block_hits
-        m["retrace_count"] = sum(max(0, c.traces - 1) for c in counters)
-        m["buckets"] = list(self.buckets)
-        m["faults"] = (self.faults.metrics()
-                       if self.faults is not None else None)
-        m["spec"] = self._spec is not None
-        if self._spec is not None:
-            m.update(self._spec.metrics())
-            m["accept_rate"] = (m["accepted_tokens"]
-                                / max(m["proposed_tokens"], 1))
-            # share of emitted tokens that the draft proposed (the rest
-            # are prefill first-tokens and verify corrections/bonuses);
-            # uses the emitted count, not acceptances — a burst cut by a
-            # budget or deadline accepts more than it emits
-            m["draft_share"] = (m["emitted_draft_tokens"]
-                                / max(m["tokens_generated"], 1))
-        m["tokens_per_step"] = (m["tokens_generated"]
-                                / max(m["decode_steps"], 1))
-        dt = m["serve_time_s"]
-        m["tokens_per_s"] = (m["tokens_generated"] / dt) if dt > 0 else 0.0
-        return m
+        counts, the retrace count (compiles beyond the first per jitted
+        entry point — bounded by len(buckets)-1 for the bucketed
+        prefill) plus its per-entry breakdown (``retrace_by_entry``).
+        Assembled by :func:`.instrument.collect_metrics` from the
+        registry-backed groups; the key surface is frozen
+        (tests/test_obs.py)."""
+        return instrument.collect_metrics(self)
+
+    def export_trace(self, path) -> str:
+        """Write this engine's span trace as Chrome/Perfetto
+        trace_event JSON (requires ``tracer=`` at construction)."""
+        return instrument.export_trace(self, path)
 
     def page_bytes(self) -> int:
         """Device bytes of one physical KV page (every leaf, all

@@ -38,6 +38,8 @@ from typing import Callable, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import MetricsRegistry
+
 
 @dataclasses.dataclass
 class FaultConfig:
@@ -72,8 +74,11 @@ class FaultInjector:
         self._alloc_calls = 0
         self._loop_iters = 0
         self._ckpt_writes = 0
-        self.counts = dict(alloc_failures=0, stalls=0, forced_preempts=0,
-                           ckpt_failures=0)
+        # registry-backed counter group (mapping-compatible with the
+        # plain dict it replaces); an injector built standalone gets a
+        # private registry and the engine rebinds it at attach time
+        self.counts = MetricsRegistry().group("faults").init(
+            alloc_failures=0, stalls=0, forced_preempts=0, ckpt_failures=0)
 
     # -- page allocations ----------------------------------------------------
     def alloc_ok(self) -> bool:

@@ -32,6 +32,7 @@ from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import Histogram, dist_ms
 from .slots import Request
 
 
@@ -165,27 +166,6 @@ class ArrivalFeed:
         return self.t0 + self._items[self._i][0]
 
 
-def _pct(xs, q) -> float:
-    """Percentile hardened for overload reports: an empty sample (a
-    run that shed or expired everything) reports 0.0, not a crash or a
-    NaN that poisons JSON dashboards downstream."""
-    arr = np.asarray(xs, np.float64)
-    if arr.size == 0:
-        return 0.0
-    arr = arr[np.isfinite(arr)]
-    if arr.size == 0:
-        return 0.0
-    return float(np.percentile(arr, q))
-
-
-def _dist_ms(xs) -> dict:
-    if not xs:
-        return dict(p50=0.0, p95=0.0, p99=0.0, mean=0.0, n=0)
-    ms = [1e3 * x for x in xs]
-    return dict(p50=_pct(ms, 50), p95=_pct(ms, 95), p99=_pct(ms, 99),
-                mean=float(np.mean(ms)), n=len(ms))
-
-
 def summarize(records: dict) -> dict:
     """Latency percentiles from per-request timestamp records
     (``{rid: {arrival, admit, first, end, tokens}}`` — absolute engine
@@ -197,11 +177,15 @@ def summarize(records: dict) -> dict:
     * ``per_token_ms`` — steady decode latency, (end - first) over the
       tokens after the first.
 
-    Every percentile is zero (never NaN) on empty samples, so a fully
-    shed overload run still produces a valid report.  ``outcomes``
-    tallies per-request terminal states (completed / expired /
-    truncated / shed) plus shed-retry and preemption totals when the
-    records carry them.
+    Every percentile is zero (never NaN) on empty samples — the
+    hardening lives in :func:`repro.obs.never_nan_percentile`, shared
+    with the benchmark reporters — so a fully shed overload run still
+    produces a valid report.  ``outcomes`` tallies per-request terminal
+    states (completed / expired / truncated / shed) plus shed-retry and
+    preemption totals when the records carry them.  ``hists`` carries
+    the same three distributions as fixed-bucket
+    :class:`repro.obs.Histogram` snapshots (mergeable across runs,
+    unlike percentiles).
     """
     recs = list(records.values())
     done = [r for r in recs if r.get("end") is not None]
@@ -233,11 +217,16 @@ def summarize(records: dict) -> dict:
         "tokens": tokens,
         "duration_s": duration,
         "tokens_per_s": (tokens / duration) if duration > 0 else 0.0,
-        "ttft_ms": _dist_ms(ttft),
-        "queue_delay_ms": _dist_ms(queue_delay),
-        "per_token_ms": _dist_ms(per_token),
+        "ttft_ms": dist_ms(ttft),
+        "queue_delay_ms": dist_ms(queue_delay),
+        "per_token_ms": dist_ms(per_token),
         "outcomes": outcomes,
-        "survivor_ttft_ms": _dist_ms(surv_ttft),
+        "survivor_ttft_ms": dist_ms(surv_ttft),
         "retries": sum(r.get("retries", 0) for r in recs),
         "preempts": sum(r.get("preempts", 0) for r in recs),
+        "hists": {
+            name: Histogram.from_samples(1e3 * x for x in xs).snapshot()
+            for name, xs in (("ttft_ms", ttft),
+                             ("queue_delay_ms", queue_delay),
+                             ("per_token_ms", per_token))},
     }

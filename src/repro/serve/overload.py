@@ -43,6 +43,7 @@ from typing import Optional
 
 import numpy as np
 
+from . import instrument
 from .slots import effective_prompt, empty_tokens
 
 
@@ -77,10 +78,24 @@ class SLOAdmission:
         self._inflight: dict = {}      # tenant -> bound tokens
         self._vtime: dict = {}         # tenant -> virtual time
         self._rng = np.random.default_rng(self.cfg.seed)
+        self._reg = None               # set by bind_registry at engine attach
+        self._hist = None
+        self._est = None
+
+    def bind_registry(self, registry):
+        """Attach the engine's metrics registry: queue delays land in a
+        ``slo.queue_delay_ms`` histogram and the current estimate in a
+        gauge, alongside the engine's own groups."""
+        self._reg = registry
+        self._hist = registry.histogram("slo.queue_delay_ms")
+        self._est = registry.gauge("slo.queue_delay_est_s")
 
     # -- queue-delay estimate -------------------------------------------------
     def observe(self, delay_s: float):
         self._delays.append(max(float(delay_s), 0.0))
+        if self._hist is not None:
+            self._hist.observe(max(float(delay_s), 0.0) * 1e3)
+            self._est.set(self.estimate())
 
     def estimate(self) -> float:
         if not self._delays:
@@ -112,10 +127,17 @@ class SLOAdmission:
     def acquire(self, req):
         self._inflight[req.tenant] = (self._inflight.get(req.tenant, 0)
                                       + request_tokens(req))
+        self._track_inflight(req.tenant)
 
     def release(self, req):
         left = self._inflight.get(req.tenant, 0) - request_tokens(req)
         self._inflight[req.tenant] = max(left, 0)
+        self._track_inflight(req.tenant)
+
+    def _track_inflight(self, tenant: str):
+        if self._reg is not None:
+            self._reg.gauge("slo.inflight_tokens",
+                            tenant=tenant).set(self._inflight[tenant])
 
     # -- weighted fairness ----------------------------------------------------
     def fair_key(self, req) -> float:
@@ -169,6 +191,7 @@ def preempt_slot(eng, run, s: int):
     req = st.req[s]
     eng._m["preempted"] += 1
     req.preempts += 1
+    instrument.preempted(eng, req, s)
     if eng.slo is not None:
         eng.slo.release(req)
     eng._stepper.preempt(st, s)
@@ -219,6 +242,7 @@ def shed_request(eng, req, results, terminal: bool = False) -> None:
             and req.retries < slo.cfg.retry_max):
         req.retries += 1
         eng._m["shed_retried"] += 1
+        instrument.shed(eng, req, retried=True)
         req.on_shed(req, slo.retry_after(req))
         return
     out = (np.asarray(req.out_tokens, np.int32) if req.out_tokens
@@ -226,6 +250,7 @@ def shed_request(eng, req, results, terminal: bool = False) -> None:
     req.outcome = "shed"
     results[req.rid] = out
     eng._m["shed"] += 1
+    instrument.shed(eng, req, retried=False)
     if req.on_finish:
         req.on_finish(req.rid, out)
 

@@ -41,6 +41,16 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro.obs import MetricsRegistry
+
+
+def _pool_counter(name: str):
+    """Property pair keeping the old attribute surface
+    (``pool.cow_copies += 1``) while every mutation lands in the
+    registry-backed group."""
+    return property(lambda self: self.m[name],
+                    lambda self, v: self.m.__setitem__(name, v))
+
 
 class PoolExhausted(RuntimeError):
     """Terminal pool-exhaustion error for *direct* :meth:`PagePool.alloc`
@@ -86,7 +96,8 @@ class PagePool:
 
     TRASH = 0
 
-    def __init__(self, n_pages: int, page_size: int, faults=None):
+    def __init__(self, n_pages: int, page_size: int, faults=None,
+                 registry=None):
         if n_pages < 2:
             raise ValueError("need at least the trash page plus one "
                              f"allocatable page, got n_pages={n_pages}")
@@ -103,13 +114,20 @@ class PagePool:
         self.ref[self.TRASH] = 1          # pinned forever
         self.index: dict = {}             # block hash -> phys page
         self._page_hash: dict = {}        # phys page -> block hash
-        # counters surfaced via ServeEngine.metrics()
-        self.alloc_count = 0
-        self.cow_copies = 0
-        self.evictions = 0
-        self.prefix_lookups = 0
-        self.prefix_block_hits = 0
-        self.in_use_peak = 0
+        # counters surfaced via ServeEngine.metrics(): a cache-kind
+        # labeled group in the engine's registry (a standalone pool
+        # gets a private registry so the surface is identical)
+        reg = registry if registry is not None else MetricsRegistry()
+        self.m = reg.group("pool", cache_kind="paged").init(
+            alloc_count=0, cow_copies=0, evictions=0, prefix_lookups=0,
+            prefix_block_hits=0, in_use_peak=0)
+
+    alloc_count = _pool_counter("alloc_count")
+    cow_copies = _pool_counter("cow_copies")
+    evictions = _pool_counter("evictions")
+    prefix_lookups = _pool_counter("prefix_lookups")
+    prefix_block_hits = _pool_counter("prefix_block_hits")
+    in_use_peak = _pool_counter("in_use_peak")
 
     # -- capacity ------------------------------------------------------------
     def pages_in_use(self) -> int:

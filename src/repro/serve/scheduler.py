@@ -31,14 +31,17 @@ class RunResult(dict):
     truncation counts, throughput, and (when the engine runs
     speculatively) ``accept_rate``/``tokens_per_step``/``draft_share``
     plus per-request ``tokens_per_step`` — so callers don't have to
-    reach into engine-level counters.  Traffic runs
-    (:meth:`Scheduler.run_traffic`) additionally attach ``records`` —
-    per-request arrival/admit/first-token/finish timestamps — and a
-    ``traffic`` percentile report.
+    reach into engine-level counters.  The summary is computed as a
+    delta over the engine's metrics registry (DESIGN.md §17); the raw
+    qualified-name delta rides along as ``registry_delta``.  Traffic
+    runs (:meth:`Scheduler.run_traffic`) additionally attach
+    ``records`` — per-request arrival/admit/first-token/finish
+    timestamps — and a ``traffic`` percentile report.
     """
     summary: dict = {}
     records: dict = {}
     traffic: dict = {}
+    registry_delta: dict = {}
 
 
 class Scheduler:
@@ -106,21 +109,24 @@ class Scheduler:
         those buried in engine-level counters."""
         reqs = [heapq.heappop(self._heap)[-1] for _ in range(len(self._heap))]
         self._queued_rids.clear()
-        m0 = self.engine.metrics()
+        snap0 = self.engine.registry.snapshot()
         out = RunResult()
         if reqs:
             out.update(self.engine.serve(reqs))
         m = self.engine.metrics()
         # engine counters are engine-lifetime cumulative; the summary
-        # digests *this* run, so report deltas against the pre-run
-        # snapshot (a reused Scheduler must not re-report earlier runs)
-        d = lambda key: m[key] - m0[key]
+        # digests *this* run, so report one registry delta against the
+        # pre-run snapshot (a reused Scheduler must not re-report
+        # earlier runs)
+        delta = self.engine.registry.delta(snap0)
+        out.registry_delta = delta
+        d = lambda key: delta.get("serve." + key, 0)
         rids = {r.rid for r in reqs}
         per_req = {rid: tps
                    for rid, tps in self.engine.request_summary().items()
                    if rid in rids}
         tokens, steps = d("tokens_generated"), d("decode_steps")
-        dt = m["serve_time_s"] - m0["serve_time_s"]
+        dt = d("serve_time_s")
         out.summary = {
             "requests": len(reqs),
             "completed": d("completed"),
@@ -136,11 +142,12 @@ class Scheduler:
             "spec": m["spec"],
         }
         if m["spec"]:
+            ds = lambda key: delta.get("spec." + key, 0)
             out.summary.update(
-                accept_rate=(d("accepted_tokens")
-                             / max(d("proposed_tokens"), 1)),
-                draft_share=(d("emitted_draft_tokens") / max(tokens, 1)),
-                spec_cycles=d("spec_cycles"),
+                accept_rate=(ds("accepted_tokens")
+                             / max(ds("proposed_tokens"), 1)),
+                draft_share=(ds("emitted_draft_tokens") / max(tokens, 1)),
+                spec_cycles=ds("spec_cycles"),
                 spec_k=m["spec_k"],
                 draft_kind=m["draft_kind"])
         self.last_summary = out.summary
@@ -211,13 +218,15 @@ class Scheduler:
             if req.on_shed is None:
                 req.on_shed = (lambda r, after, _f=feed, _c=clock:
                                _f.push(_c() + after, r))
-        m0 = self.engine.metrics()
+        snap0 = self.engine.registry.snapshot()
         out = RunResult()
         out.update(self.engine.serve((), feed=feed))
         m = self.engine.metrics()
-        d = lambda key: m[key] - m0[key]
+        delta = self.engine.registry.delta(snap0)
+        out.registry_delta = delta
+        d = lambda key: delta.get("serve." + key, 0)
         tokens, steps = d("tokens_generated"), d("decode_steps")
-        dt = m["serve_time_s"] - m0["serve_time_s"]
+        dt = d("serve_time_s")
         out.summary = {
             "requests": len(items),
             "completed": d("completed"),

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import annotation as obs_annotation
+
 
 @dataclasses.dataclass
 class Request:
@@ -43,6 +45,12 @@ class Request:
     preempts: int = 0            # times evicted from a slot
     resume: bool = False         # re-queued mid-flight; keep out_tokens
     outcome: Optional[str] = None    # completed|expired|truncated|shed
+    # lifecycle stamps (serve/instrument.py): engine-clock times of the
+    # current queue/prefill/decode phase boundaries; a preemption
+    # resets them so the resume traces as a fresh triple
+    t_enqueue: Optional[float] = None
+    t_bind: Optional[float] = None
+    t_first: Optional[float] = None
 
 
 def effective_prompt(req: Request) -> np.ndarray:
@@ -61,12 +69,34 @@ def effective_prompt(req: Request) -> np.ndarray:
 class TraceCounter:
     """Wraps a jitted callable; counts calls and distinct input
     shape/dtype signatures (== XLA traces for a jit with no static
-    args).  The serving tests assert prefill traces <= bucket count."""
+    args).  The serving tests assert prefill traces <= bucket count.
 
-    def __init__(self, fn):
+    With a ``name`` and an ``engine``, every *new* signature also lands
+    in the observability layer: a ``compile`` (first trace) or
+    ``retrace`` instant on the engine's tracer and an entry-labeled
+    ``serve.jit_traces`` registry counter — so a recompile mid-traffic
+    shows up as a named event instead of a mystery latency spike.  When
+    the engine was built with ``profile=True`` each dispatch runs under
+    a named ``jax.profiler`` annotation."""
+
+    def __init__(self, fn, name: Optional[str] = None, engine=None):
         self.fn = fn
+        self.name = name or getattr(fn, "__name__", "jit")
+        self.engine = engine
         self.calls = 0
         self._sigs = set()
+
+    def _on_new_sig(self):
+        eng = self.engine
+        if eng is None:
+            return
+        eng.registry.counter("serve.jit_traces", entry=self.name).inc()
+        if eng.tracer is not None:
+            eng.tracer.instant(
+                "compile" if len(self._sigs) == 1 else "retrace",
+                cat="jit", args=dict(entry=self.name,
+                                     trace=len(self._sigs),
+                                     call=self.calls))
 
     def __call__(self, *args):
         self.calls += 1
@@ -74,7 +104,12 @@ class TraceCounter:
             (leaf.shape, str(leaf.dtype))
             for leaf in jax.tree_util.tree_leaves(args)
             if hasattr(leaf, "shape"))
-        self._sigs.add(sig)
+        if sig not in self._sigs:
+            self._sigs.add(sig)
+            self._on_new_sig()
+        if self.engine is not None and self.engine._profile:
+            with obs_annotation(self.name):
+                return self.fn(*args)
         return self.fn(*args)
 
     @property

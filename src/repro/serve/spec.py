@@ -97,7 +97,8 @@ class SpecRunner:
                 self.dmodel.cache_axes()
                 if hasattr(self.dmodel, "cache_axes") else None)
             self._dprefill = TraceCounter(
-                engine._jit(self.dmodel.prefill, SERVE_PREFILL_RULES))
+                engine._jit(self.dmodel.prefill, SERVE_PREFILL_RULES),
+                "draft_prefill", engine)
             # distinct function object: jit caches key on the underlying
             # callable, and this wrapper's draft-cache signatures must
             # not mingle with other write_slot users' cache entries
@@ -108,8 +109,9 @@ class SpecRunner:
                                        SERVE_DECODE_RULES)
             self._dplen = ("prompt_len" in inspect.signature(
                 self.dmodel.prefill).parameters)
-        self.m = dict(spec_cycles=0, draft_steps=0, proposed_tokens=0,
-                      accepted_tokens=0, emitted_draft_tokens=0)
+        self.m = engine.registry.group("spec").init(
+            spec_cycles=0, draft_steps=0, proposed_tokens=0,
+            accepted_tokens=0, emitted_draft_tokens=0)
 
     # -- admission -----------------------------------------------------------
     def admit_slot(self, slot: int, prompt):
@@ -262,7 +264,8 @@ class SpecRunner:
                 self._build_paged
             self._cycles[key] = self._trace_counter(
                 self.engine._jit(build(k, use_topk, use_topp),
-                                 SERVE_DECODE_RULES))
+                                 SERVE_DECODE_RULES),
+                f"spec_cycle[{kind},k={k}]", self.engine)
         return self._cycles[key]
 
     # -- host entry points ----------------------------------------------------
@@ -326,3 +329,13 @@ class SpecRunner:
         m["draft_kind"] = ("self-int%d" % getattr(self.draft, "bits", 8)
                           if self.shares else "model")
         return m
+
+    def trace_entries(self):
+        """Named TraceCounters for the per-entry retrace breakdown
+        (``metrics()["retrace_by_entry"]``): one per compiled cycle
+        variant, plus the independent draft's prefill."""
+        out = [(c.name, c) for _, c in sorted(self._cycles.items(),
+                                              key=lambda kv: str(kv[0]))]
+        if not self.shares:
+            out.append(("draft_prefill", self._dprefill))
+        return out

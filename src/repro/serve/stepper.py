@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.dist.sharding import SERVE_DECODE_RULES, SERVE_PREFILL_RULES, tree_hint
+from . import instrument
 from .cache_ops import copy_page, merge_slots, scatter_prefill_pages, write_slot
 from .pages import PagePool, PagePressure, block_hashes
 from .sampler import sample_tokens
@@ -45,13 +46,17 @@ class DenseStepper:
     def __init__(self, engine):
         self.engine = engine
         self._prefill1 = TraceCounter(
-            engine._jit(engine.model.prefill, SERVE_PREFILL_RULES))
+            engine._jit(engine.model.prefill, SERVE_PREFILL_RULES),
+            "prefill1", engine)
         self._prefill_admit = TraceCounter(
-            engine._jit(self._prefill_admit_fn, SERVE_PREFILL_RULES))
+            engine._jit(self._prefill_admit_fn, SERVE_PREFILL_RULES),
+            "prefill_admit", engine)
         self._admit_one = TraceCounter(
-            engine._jit(self._admit_one_fn, SERVE_PREFILL_RULES))
+            engine._jit(self._admit_one_fn, SERVE_PREFILL_RULES),
+            "admit_one", engine)
         self._decode = TraceCounter(
-            engine._jit(self._decode_fn, SERVE_DECODE_RULES))
+            engine._jit(self._decode_fn, SERVE_DECODE_RULES),
+            "decode", engine)
         self.cache = None
 
     # -- lifecycle -----------------------------------------------------------
@@ -226,7 +231,8 @@ class PagedStepper(DenseStepper):
         self.n_pages = (int(n_pages) if n_pages
                         else 1 + eng.n_slots * self.pages_per_slot)
         self.pool = PagePool(self.n_pages, page_size,
-                             faults=getattr(eng, "faults", None))
+                             faults=getattr(eng, "faults", None),
+                             registry=eng.registry)
         # persistent across serve() calls so the prefix index keeps
         # paying off between bursts; with a mesh the page stores are
         # sharded on the head axis (page tables stay replicated)
@@ -239,9 +245,11 @@ class PagedStepper(DenseStepper):
         self.table = np.full((eng.n_slots, self.pages_per_slot),
                              PagePool.TRASH, np.int32)
         self._prefill_paged = TraceCounter(
-            eng._jit(self._prefill_paged_fn, SERVE_PREFILL_RULES))
+            eng._jit(self._prefill_paged_fn, SERVE_PREFILL_RULES),
+            "prefill_paged", eng)
         self._decode_paged = TraceCounter(
-            eng._jit(self._decode_paged_fn, SERVE_DECODE_RULES))
+            eng._jit(self._decode_paged_fn, SERVE_DECODE_RULES),
+            "decode_paged", eng)
         self._scatter_pages = eng._jit(scatter_prefill_pages,
                                        SERVE_DECODE_RULES)
         self._copy_page = eng._jit(copy_page, SERVE_DECODE_RULES)
@@ -374,12 +382,15 @@ class PagedStepper(DenseStepper):
         phys = int(self.table[s, lp])
         if phys == PagePool.TRASH:
             self.table[s, lp] = self._take_page(s)
+            instrument.page_event(self.engine, "page_alloc", slot=s,
+                                  block=lp)
         elif self.pool.is_shared(phys):
             fresh = self._take_page(s)
             self.store = self._copy_page(self.store, phys, fresh)
             self.pool.decref(phys)
             self.table[s, lp] = fresh
             self.pool.cow_copies += 1
+            instrument.page_event(self.engine, "cow", slot=s, block=lp)
 
     def register_prompt_pages(self, st: SlotTable, s: int):
         """Publish the slot's hashed full blocks for future reuse (the
@@ -477,12 +488,17 @@ class PagedStepper(DenseStepper):
         exclusively owned — shared prefix pages all sit below
         ``slot_len``."""
         ps = self.page_size
+        trimmed = 0
         for j in range(self.pages_per_slot):
             phys = int(self.table[s, j])
             if phys != PagePool.TRASH and j * ps >= st.slot_len[s]:
                 assert not self.pool.is_shared(phys)
                 self.pool.decref(phys)
                 self.table[s, j] = PagePool.TRASH
+                trimmed += 1
+        if trimmed:
+            instrument.page_event(self.engine, "page_trim", slot=s,
+                                  pages=trimmed)
 
     def spec_rollback(self, st: SlotTable):
         pass    # per-slot page trim happens in post_spec_slot

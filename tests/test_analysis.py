@@ -188,6 +188,35 @@ def test_rpr008_alloc_terminal_path_is_unreachable_from_serve():
     assert "noqa[RPR008]" in text
 
 
+def test_rpr009_obs_bypass_in_serve(tmp_path):
+    findings = lint_snippet(tmp_path, "repro/serve/x.py", (
+        "import logging\n"
+        "from datetime import datetime\n"
+        "\n"
+        "def step(eng):\n"
+        "    print('decoded')\n"
+        "    t = datetime.now()\n"), "RPR009")
+    assert [(f.rule, f.line) for f in findings] == [("RPR009", 1),
+                                                    ("RPR009", 5),
+                                                    ("RPR009", 6)]
+    # printing is the launch scripts' and benches' job — out of scope
+    assert not lint_snippet(tmp_path, "repro/launch/x.py", (
+        "print('tok/s')\n"), "RPR009")
+    # a reasoned noqa keeps a deliberate exception
+    assert not lint_snippet(tmp_path, "repro/serve/ok.py", (
+        "def dump(eng):\n"
+        "    print(eng)  # repro: noqa[RPR009] debug REPL helper\n"),
+        "RPR009")
+
+
+def test_rpr009_serve_tree_is_clean():
+    """The serving stack routes all telemetry through repro.obs /
+    serve.instrument — no prints, logging, or raw timestamps."""
+    serve_dir = REPO / "src" / "repro" / "serve"
+    assert run_lint([str(serve_dir)], rules_by_code("RPR009"),
+                    base=REPO) == []
+
+
 # ---------------------------------------------------------------------------
 # Suppression + baseline mechanics
 # ---------------------------------------------------------------------------
